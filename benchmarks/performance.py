@@ -1,0 +1,91 @@
+"""Performance benchmark — paper Table 5.3 analogue.
+
+Wall-clock of ScalLoPS (signature generation + signature processing) vs the
+BLAST-like seed-and-extend baseline vs a brute-force Smith-Waterman scan, at
+growing query-set sizes (the paper's claim C6: ScalLoPS loses on small sets,
+wins as the query set grows — metagenomic regime).
+
+Also reports the two siggen execution paths (paper-structure matmul vs the
+beyond-paper contribution table) and the three join paths.
+
+CSV: bench,n_queries,n_refs,method,seconds,pairs
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.align import SeedExtendBaseline
+from repro.align.smith_waterman import sw_align_batch
+from repro.core import LSHConfig, ScalLoPS
+from repro.core.simhash import signatures_matmul, signatures_table
+from repro.data import SyntheticProteinConfig, make_protein_sets
+
+
+def _block_until(x):
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, x)
+
+
+def run(csv=print):
+    csv("bench,n_queries,n_refs,method,seconds,pairs")
+    n_refs = 192
+    for n_q in (64, 256, 1024):
+        data = make_protein_sets(SyntheticProteinConfig(
+            n_refs=n_refs, n_homolog_queries=n_q // 4,
+            n_decoy_queries=n_q - n_q // 4, ref_len_mean=120,
+            ref_len_std=20, sub_rates=(0.05,), seed=21))
+
+        # --- ScalLoPS (k=3 T=13 d=0, paper's §5.3 point; table siggen)
+        sl = ScalLoPS(LSHConfig(k=3, T=13, f=32, d=0, max_pairs=1 << 15))
+        t0 = time.time()
+        rs = sl.signatures(data["ref_ids"], data["ref_lens"])
+        _block_until(rs)
+        t_ref = time.time() - t0                    # db prep (once per ref set)
+        t0 = time.time()
+        qs = sl.signatures(data["query_ids"], data["query_lens"])
+        pairs, count = sl.search(qs, rs)
+        _block_until(pairs)
+        t_sl = time.time() - t0
+        csv(f"table5.3,{n_q},{n_refs},scallops_query+join,{t_sl:.3f},"
+            f"{int(count)}")
+        csv(f"table5.3,{n_q},{n_refs},scallops_refprep,{t_ref:.3f},-")
+
+        # --- seed-extend baseline (BLAST-like)
+        base = SeedExtendBaseline(k=3, T=11, s_min=35)
+        t0 = time.time()
+        base.build_index(data["ref_ids"], data["ref_lens"])
+        t_idx = time.time() - t0
+        t0 = time.time()
+        hits = base.search(data["query_ids"], data["query_lens"])
+        t_se = time.time() - t0
+        csv(f"table5.3,{n_q},{n_refs},seed_extend,{t_se:.3f},{len(hits)}")
+        csv(f"table5.3,{n_q},{n_refs},seed_extend_index,{t_idx:.3f},-")
+
+        # --- brute-force SW scan (the no-heuristic floor), subsampled cost
+        n_probe = min(n_q, 32)
+        qs_ids = np.repeat(np.arange(n_probe), 8)
+        rs_ids = np.tile(np.arange(8), n_probe)
+        Lq = data["query_ids"].shape[1]
+        Lr = data["ref_ids"].shape[1]
+        t0 = time.time()
+        sw_align_batch(data["query_ids"][qs_ids], data["ref_ids"][rs_ids])
+        dt = time.time() - t0
+        full = dt / (n_probe * 8) * (n_q * n_refs)
+        csv(f"table5.3,{n_q},{n_refs},brute_sw_extrapolated,{full:.3f},-")
+
+    # --- siggen path comparison (paper structure vs contribution table)
+    data = make_protein_sets(SyntheticProteinConfig(
+        n_refs=512, n_homolog_queries=0, n_decoy_queries=0,
+        ref_len_mean=300, ref_len_std=50, seed=22))
+    ids, lens = data["ref_ids"], data["ref_lens"]
+    for name, fn in (("siggen_matmul", signatures_matmul),
+                     ("siggen_table", signatures_table)):
+        f = jax.jit(lambda i, l, fn=fn: fn(i, l, k=3, T=13, f=32))
+        _block_until(f(ids, lens))              # compile + table build
+        t0 = time.time()
+        for _ in range(3):
+            _block_until(f(ids, lens))
+        csv(f"siggen,512,-,{name},{(time.time()-t0)/3:.3f},-")

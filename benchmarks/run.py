@@ -1,0 +1,32 @@
+"""Benchmark driver — one section per paper table/figure.
+
+  python -m benchmarks.run [--only quality|performance|scalability]
+
+Prints CSV blocks; EXPERIMENTS.md cites these outputs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["quality", "performance", "scalability"])
+    args = ap.parse_args(argv)
+
+    from . import performance, quality, scalability
+    sections = {"quality": quality.run, "performance": performance.run,
+                "scalability": scalability.run}
+    if args.only:
+        sections = {args.only: sections[args.only]}
+    for name, fn in sections.items():
+        print(f"\n==== {name} ====")
+        t0 = time.time()
+        fn()
+        print(f"==== {name} done in {time.time()-t0:.1f}s ====")
+
+
+if __name__ == "__main__":
+    main()

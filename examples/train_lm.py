@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on CPU
+with the full production stack — LSH dedup stage, AdamW + warmup-cosine,
+grad accumulation, periodic atomic checkpoints, and crash-resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: 12L x d=512 x ff=2048, vocab 8192 — a scaled member of the
+yi-9b family; the full configs are exercised by the dry-run.)
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.lm_data import LMDataConfig, dedup_corpus, lm_batches, synth_corpus
+from repro.models import ModelConfig
+from repro.train import (AdamWConfig, TrainConfig, init_train_state,
+                         make_train_step)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+cfg = ModelConfig(
+    name="yi-100m", family="dense", n_layers=12, d_model=512, n_heads=8,
+    n_kv_heads=4, d_ff=2048, vocab_size=8192, attn_chunk=128, ce_chunk=128)
+dc = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=256, global_batch=8,
+                  seed=0)
+
+# --- the paper's technique in the data plane: LSH near-dup filtering
+docs, lens = synth_corpus(dc, n_docs=128, dup_fraction=0.15)
+keep, n_dups = dedup_corpus(docs, lens)
+print(f"[dedup] ScalLoPS SimHash stage dropped {n_dups}/{len(keep)} "
+      f"near-duplicate docs from the probe corpus")
+
+tc = TrainConfig(n_microbatches=2,
+                 opt=AdamWConfig(lr=3e-4, warmup_steps=30,
+                                 total_steps=args.steps))
+step_fn = jax.jit(make_train_step(cfg, tc, mesh=None))
+state = init_train_state(jax.random.PRNGKey(0), cfg)
+n_params = sum(x.size for x in jax.tree.leaves(state.params))
+print(f"[init] {n_params/1e6:.1f}M params")
+
+mgr = CheckpointManager(args.ckpt_dir, keep_last=2, async_writes=True)
+start = 0
+if mgr.latest_step() is not None:
+    state, start = mgr.restore(state)
+    print(f"[resume] from step {start}")
+
+t0 = time.time()
+for s in range(start, args.steps):
+    x, y = lm_batches(dc, s)
+    state, m = step_fn(state, {"inputs": x, "targets": y})
+    if s % 20 == 0 or s == args.steps - 1:
+        tok_s = (s - start + 1) * dc.global_batch * dc.seq_len \
+            / max(time.time() - t0, 1e-9)
+        print(f"step {s:4d} loss={float(m['loss']):.4f} "
+              f"lr={float(m['lr']):.2e} tok/s={tok_s:.0f}")
+    if (s + 1) % 100 == 0:
+        mgr.save(s + 1, state, block=False)   # async writer
+mgr.wait()
+mgr.save(args.steps, state)
+print(f"[done] final loss {float(m['loss']):.4f}; "
+      f"checkpoints in {args.ckpt_dir}")

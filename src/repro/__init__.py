@@ -1,0 +1,3 @@
+"""repro: ScalLoPS (LSH protein similarity search, UNSW-CSE-TR-201325) as a
+TPU-native JAX/Pallas framework. See DESIGN.md / README.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+"""Alignment substrate: Smith-Waterman (JAX wavefront DP) + percent identity,
+and the BLAST-like seed-and-extend baseline the paper compares against."""
+from .smith_waterman import sw_align_batch, sw_score, percent_identity
+from .seed_extend import SeedExtendBaseline
+
+__all__ = ["sw_align_batch", "sw_score", "percent_identity",
+           "SeedExtendBaseline"]

@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic sharded save/restore, async writer,
+elastic re-sharding on restore."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,12 @@
+"""ScalLoPS core: LSH protein-similarity search (the paper's contribution).
+
+Public API: LSHConfig, ScalLoPS (pipeline.py); signature generation
+(simhash.py); joins (join.py); distributed MapReduce engine (mapreduce.py).
+"""
+from .alphabet import AMINO_ACIDS, ALPHABET_SIZE, PAD, BLOSUM62, encode, decode, encode_batch
+from .pipeline import LSHConfig, ScalLoPS
+
+__all__ = [
+    "AMINO_ACIDS", "ALPHABET_SIZE", "PAD", "BLOSUM62",
+    "encode", "decode", "encode_batch", "LSHConfig", "ScalLoPS",
+]

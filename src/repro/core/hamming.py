@@ -1,0 +1,61 @@
+"""Hamming-distance operations on packed signatures.
+
+Signatures are (..., nwords) uint32 (f = nwords*32 bits). The Signature
+Processor's similarity measure is the Hamming distance between signatures
+(paper §3) — on TPU this is XOR + ``lax.population_count`` on the VPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_distance(a, b) -> jnp.ndarray:
+    """Elementwise Hamming distance of packed signatures (broadcasting)."""
+    x = jnp.bitwise_xor(a, b)
+    return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+def all_pairs_hamming(q, r, block: int = 1024) -> jnp.ndarray:
+    """(Q, nw) x (R, nw) -> (Q, R) int32 distance matrix, blocked over R.
+
+    Pure-jnp reference; the production path is kernels/hamming.py.
+    """
+    Q, nw = q.shape
+    R = r.shape[0]
+    nblk = -(-R // block)
+    pad = nblk * block - R
+    rp = jnp.pad(r, ((0, pad), (0, 0))).reshape(nblk, block, nw)
+
+    def body(_, rb):
+        d = hamming_distance(q[:, None, :], rb[None, :, :])  # (Q, block)
+        return None, d
+
+    _, out = jax.lax.scan(body, None, rp)           # (nblk, Q, block)
+    out = jnp.moveaxis(out, 0, 1).reshape(Q, nblk * block)
+    return out[:, :R]
+
+
+def threshold_pairs(q, r, d: int, max_pairs: int):
+    """Emit (qid, rid, dist) for all pairs with Hamming distance <= d.
+
+    Fixed-capacity output (SPMD-friendly): returns
+      pairs (max_pairs, 3) int32 — rows past ``count`` are (-1, -1, -1);
+      count () int32 — true number of matches (may exceed max_pairs; then
+      the emitted set is truncated and the caller should grow capacity).
+    """
+    dist = all_pairs_hamming(q, r)
+    hit = dist <= d
+    count = jnp.sum(hit.astype(jnp.int32))
+    flat = hit.ravel()
+    # Stable compaction: indices of hits, padded with -1.
+    order = jnp.argsort(~flat, stable=True)[:max_pairs]
+    ok = flat[order]
+    qid = (order // r.shape[0]).astype(jnp.int32)
+    rid = (order % r.shape[0]).astype(jnp.int32)
+    dd = dist.ravel()[order].astype(jnp.int32)
+    pairs = jnp.stack(
+        [jnp.where(ok, qid, -1), jnp.where(ok, rid, -1), jnp.where(ok, dd, -1)],
+        axis=-1,
+    )
+    return pairs, count

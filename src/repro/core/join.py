@@ -1,0 +1,159 @@
+"""Signature joins — finding (query, reference) pairs within Hamming d.
+
+Three implementations (DESIGN.md §2):
+
+* ``flip_join`` — paper-faithful (Algorithms 3+4): every reference signature
+  emits all C(f, <=d) bit-flips of itself as join keys; queries emit their own
+  signature; equal keys collide. The Hadoop shuffle becomes an on-device
+  sort + searchsorted key-collision join. Exact, no duplicates (a pair at
+  distance h <= d collides on exactly one mask, m = q xor r). f <= 32.
+
+* ``band_join`` — beyond-paper: pigeonhole banding. Split f bits into
+  b >= d+1 bands; any pair within distance d agrees exactly on >= 1 band.
+  Candidates from per-band equality joins are exact-filtered by popcount and
+  deduplicated. Key count is O(b*N) instead of O(C(f,<=d)*N) — at f=32,d=2
+  that is 3 keys/ref instead of 529.
+
+* ``all_pairs`` thresholding (kernels/hamming.py) — the dense sweep used when
+  the reference shard is small enough that the XOR+popcount matrix beats the
+  join on arithmetic intensity.
+
+All functions return fixed-capacity pair buffers (SPMD-friendly): rows past
+the true count are (-1,-1,-1), and the true count is returned so callers can
+detect overflow and grow capacity.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hamming import hamming_distance
+from .simhash import unpack_bits
+
+
+# ---------------------------------------------------------------- flip masks
+@functools.lru_cache(maxsize=8)
+def flip_masks(f: int, d: int) -> np.ndarray:
+    """All XOR masks with popcount <= d, packed: (M, f//32) uint32."""
+    nw = f // 32
+    masks = []
+    for dd in range(d + 1):
+        for comb in itertools.combinations(range(f), dd):
+            m = np.zeros(nw, dtype=np.uint64)
+            for b in comb:
+                m[b // 32] |= np.uint64(1) << np.uint64(b % 32)
+            masks.append(m.astype(np.uint32))
+    return np.stack(masks, axis=0)
+
+
+def _emit_from_ranges(left, counts, sorted_ids, max_pairs):
+    """Turn per-query ranges [left, left+counts) over sorted_ids into a fixed
+    (max_pairs, 2) (qid, rid) buffer. Returns (pairs, total_count)."""
+    total = jnp.sum(counts)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)])
+    slots = jnp.arange(max_pairs, dtype=jnp.int32)
+    qid = jnp.searchsorted(offsets, slots, side="right").astype(jnp.int32) - 1
+    qid = jnp.clip(qid, 0, counts.shape[0] - 1)
+    j = slots - offsets[qid].astype(jnp.int32)
+    valid = slots < total
+    rid = sorted_ids[jnp.clip(left[qid].astype(jnp.int32) + j, 0, sorted_ids.shape[0] - 1)]
+    pairs = jnp.stack(
+        [jnp.where(valid, qid, -1), jnp.where(valid, rid, -1)], axis=-1
+    ).astype(jnp.int32)
+    return pairs, total
+
+
+def flip_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int):
+    """Paper-faithful flip join (f <= 32: keys are single uint32 words).
+
+    Returns (pairs (max_pairs, 3) int32 [qid, rid, dist], count).
+    """
+    assert f <= 32, "flip_join keys are single uint32 words (paper used f=32)"
+    masks = jnp.asarray(flip_masks(f, d))[:, 0]          # (M,)
+    rk = (r_sigs[:, 0][:, None] ^ masks[None, :]).ravel()  # (R*M,)
+    rid = jnp.repeat(
+        jnp.arange(r_sigs.shape[0], dtype=jnp.int32), masks.shape[0]
+    )
+    order = jnp.argsort(rk)
+    rk_sorted, rid_sorted = rk[order], rid[order]
+    qk = q_sigs[:, 0]
+    left = jnp.searchsorted(rk_sorted, qk, side="left")
+    right = jnp.searchsorted(rk_sorted, qk, side="right")
+    pairs2, count = _emit_from_ranges(left, (right - left).astype(jnp.int32),
+                                      rid_sorted, max_pairs)
+    qv, rv = pairs2[:, 0], pairs2[:, 1]
+    dist = hamming_distance(q_sigs[jnp.maximum(qv, 0)], r_sigs[jnp.maximum(rv, 0)])
+    dist = jnp.where(qv >= 0, dist, -1).astype(jnp.int32)
+    return jnp.concatenate([pairs2, dist[:, None]], axis=-1), count
+
+
+# ---------------------------------------------------------------- band join
+def band_keys(sigs, f: int, bands: int) -> jnp.ndarray:
+    """Per-band integer keys: (N, bands) uint32 (band width <= 32 bits)."""
+    bits = unpack_bits(sigs, f)                      # (N, f) in {0,1}
+    edges = np.linspace(0, f, bands + 1).astype(int)
+    keys = []
+    for b in range(bands):
+        seg = bits[:, edges[b]:edges[b + 1]].astype(jnp.uint32)
+        w = seg.shape[-1]
+        keys.append(jnp.sum(seg << jnp.arange(w, dtype=jnp.uint32), axis=-1))
+    return jnp.stack(keys, axis=-1)
+
+
+def band_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int,
+              bands: int | None = None):
+    """Pigeonhole banding join: exact for bands >= d+1, no false negatives.
+
+    Candidates colliding in multiple bands are deduplicated; all candidates
+    are exact-filtered by packed Hamming distance.
+    """
+    b = bands if bands is not None else d + 1
+    assert b >= d + 1, "bands must be >= d+1 for an exact join"
+    qk = band_keys(q_sigs, f, b)                     # (Q, b)
+    rk = band_keys(r_sigs, f, b)                     # (R, b)
+    R = r_sigs.shape[0]
+    cap = max_pairs  # per-band candidate capacity
+
+    all_pairs = []
+    for band in range(b):
+        order = jnp.argsort(rk[:, band])
+        rks = rk[:, band][order]
+        rids = order.astype(jnp.int32)
+        left = jnp.searchsorted(rks, qk[:, band], side="left")
+        right = jnp.searchsorted(rks, qk[:, band], side="right")
+        p2, _ = _emit_from_ranges(left, (right - left).astype(jnp.int32), rids, cap)
+        all_pairs.append(p2)
+    cand = jnp.concatenate(all_pairs, axis=0)        # (b*cap, 2)
+
+    # Dedup: sort lexicographically by (qid, rid); mark first occurrence.
+    # (lexsort avoids the q*R+r code, which overflows int32 for big sets.)
+    order = jnp.lexsort((cand[:, 1], cand[:, 0]))
+    cand_s = cand[order]
+    same = (cand_s[1:, 0] == cand_s[:-1, 0]) & (cand_s[1:, 1] == cand_s[:-1, 1])
+    first = jnp.concatenate([jnp.ones(1, bool), ~same])
+    keep = first & (cand_s[:, 0] >= 0)
+
+    qv = jnp.where(keep, cand_s[:, 0], -1)
+    rv = jnp.where(keep, cand_s[:, 1], -1)
+    dist = hamming_distance(q_sigs[jnp.maximum(qv, 0)], r_sigs[jnp.maximum(rv, 0)])
+    hit = keep & (dist <= d)
+    count = jnp.sum(hit.astype(jnp.int32))
+    # Compact hits to the front, truncate to max_pairs.
+    order2 = jnp.argsort(~hit, stable=True)[:max_pairs]
+    ok = hit[order2]
+    out = jnp.stack(
+        [jnp.where(ok, qv[order2], -1),
+         jnp.where(ok, rv[order2], -1),
+         jnp.where(ok, dist[order2], -1)], axis=-1
+    ).astype(jnp.int32)
+    return out, count
+
+
+def pairs_to_set(pairs) -> set[tuple[int, int]]:
+    """Host-side helper: valid (q, r) rows of a pair buffer as a set."""
+    arr = np.asarray(pairs)
+    return {(int(a), int(b)) for a, b, *_ in arr if a >= 0}

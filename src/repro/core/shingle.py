@@ -1,0 +1,52 @@
+"""k-shingle extraction as strided gathers over int8 residue tensors.
+
+The paper tokenizes each sequence into overlapping k-letter words (BLAST's
+tokenization step). Here a batch of padded sequences (N, L) becomes a dense
+shingle tensor (N, S, k) with a validity mask — no string ops.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .alphabet import PAD
+
+
+def num_shingles(seq_len: int, k: int) -> int:
+    return max(seq_len - k + 1, 0)
+
+
+def extract_shingles(ids, lengths, k: int):
+    """Extract overlapping k-shingles from a padded batch.
+
+    Args:
+      ids: (N, L) int8 residue ids, padded with PAD.
+      lengths: (N,) int32 true sequence lengths.
+      k: shingle length.
+
+    Returns:
+      shingles: (N, S, k) int8 where S = L - k + 1; invalid positions are PAD.
+      mask: (N, S) bool — True where the shingle is fully inside the sequence.
+    """
+    ids = jnp.asarray(ids)
+    lengths = jnp.asarray(lengths)
+    N, L = ids.shape
+    S = num_shingles(L, k)
+    # (S, k) gather indices: row s takes positions s..s+k-1.
+    idx = jnp.arange(S)[:, None] + jnp.arange(k)[None, :]
+    sh = ids[:, idx]  # (N, S, k)
+    mask = (jnp.arange(S)[None, :] + k) <= lengths[:, None]
+    sh = jnp.where(mask[..., None], sh, jnp.int8(PAD))
+    return sh, mask
+
+
+def shingle_ids(shingles, alphabet_size: int = 20):
+    """Flatten (…, k) shingles to integer word ids in [0, alphabet_size**k).
+
+    Invalid shingles (containing PAD) map to -1.
+    """
+    k = shingles.shape[-1]
+    valid = jnp.all(shingles < alphabet_size, axis=-1)
+    powers = alphabet_size ** np.arange(k - 1, -1, -1)
+    wid = jnp.sum(shingles.astype(jnp.int32) * jnp.asarray(powers, jnp.int32), axis=-1)
+    return jnp.where(valid, wid, -1)

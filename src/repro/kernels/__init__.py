@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated with
+interpret=True on CPU):
+
+  hamming.py — the Signature Processor's blocked XOR+popcount sweep
+  siggen.py  — the Signature Generator's fused score->threshold->hyperplane
+               accumulation (two chained MXU matmuls per VMEM tile)
+
+ops.py: jit'd public wrappers (padding + platform dispatch).
+ref.py: pure-jnp oracles — the correctness contract for every kernel.
+"""

@@ -1,0 +1,83 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples and platform dispatch: on TPU the
+compiled kernels run natively; elsewhere (this CPU container) they execute
+under ``interpret=True`` — same kernel body, Python evaluation — or fall
+back to the jnp reference for speed when ``prefer_ref=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as kref
+from .hamming import hamming_count_kernel, hamming_dist_kernel
+from .siggen import siggen_accumulate_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x, mult, value=0):
+    n = x.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return x, n
+    return jnp.pad(x, ((0, p),) + ((0, 0),) * (x.ndim - 1),
+                   constant_values=value), n
+
+
+def all_pairs_hamming(q, r, *, bq: int = 256, br: int = 256,
+                      prefer_ref: bool = False) -> jnp.ndarray:
+    """All-pairs Hamming distances via the Pallas kernel (padded + cropped)."""
+    if prefer_ref:
+        return kref.hamming_dist_ref(q, r)
+    qp, Q = _pad_rows(q, bq)
+    rp, R = _pad_rows(r, br)
+    out = hamming_dist_kernel(qp, rp, bq=bq, br=br, interpret=not _on_tpu())
+    return out[:Q, :R]
+
+
+def hamming_counts(q, r, d: int, *, bq: int = 256, br: int = 256,
+                   prefer_ref: bool = False) -> jnp.ndarray:
+    """Per-query counts of references within Hamming distance d: (Q,) int32.
+
+    Padded reference rows are all-ones signatures; queries are real data, so
+    a padded ref can only collide if a real query is within d of the all-ones
+    word — excluded by padding refs with the complement of 0 (distance from
+    any real signature >= f - d in practice). To be exact we subtract the
+    padded-row hits computed against the padding pattern.
+    """
+    if prefer_ref:
+        return kref.hamming_count_ref(q, r, d)[:, 0]
+    qp, Q = _pad_rows(q, bq)
+    PADV = jnp.uint32(0xFFFFFFFF)
+    rp, R = _pad_rows(r, br, value=PADV)
+    out = hamming_count_kernel(qp, rp, d=d, bq=bq, br=br,
+                               interpret=not _on_tpu())[:, 0]
+    if rp.shape[0] != R:
+        # exact correction: count hits of each query against the pad pattern
+        pad_sig = jnp.full((1, r.shape[1]), PADV, jnp.uint32)
+        per_pad = kref.hamming_count_ref(qp, pad_sig, d)[:, 0]
+        out = out - per_pad * (rp.shape[0] - R)
+    return out[:Q]
+
+
+def signatures_fused(rows, cb, H, *, T: int, bs: int = 256, bw: int = 512,
+                     prefer_ref: bool = False) -> jnp.ndarray:
+    """Fused SimHash accumulation V (S, f); pad shingle rows with zeros
+    (score 0 < T contributes nothing) and codebook words with zeros (one-hot
+    all-zero scores 0 < T, also inert) — exactness preserved for T >= 1."""
+    assert T >= 1, "padding exactness requires T >= 1 (paper uses T >= 11)"
+    if prefer_ref:
+        return kref.siggen_accumulate_ref(rows, cb, H, T)
+    rp, S = _pad_rows(rows, bs)
+    cbp, W = _pad_rows(cb, bw)
+    Hp, _ = _pad_rows(H, bw)
+    out = siggen_accumulate_kernel(rp, cbp, Hp, T=T, bs=bs, bw=bw,
+                                   interpret=not _on_tpu())
+    return out[:S]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_dist_ref(q, r) -> jnp.ndarray:
+    """(Q, nw) x (R, nw) uint32 -> (Q, R) int32."""
+    x = q[:, None, :] ^ r[None, :, :]
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def hamming_count_ref(q, r, d: int) -> jnp.ndarray:
+    """(Q, nw) x (R, nw) -> (Q, 1) int32 counts of refs within distance d."""
+    dist = hamming_dist_ref(q, r)
+    return jnp.sum((dist <= d).astype(jnp.int32), axis=-1, keepdims=True)
+
+
+def siggen_accumulate_ref(rows, cb, H, T: int) -> jnp.ndarray:
+    """(S, D) x (W, D) x (W, f) -> (S, f) int32 SimHash accumulators."""
+    scores = rows.astype(jnp.int32) @ cb.astype(jnp.int32).T   # (S, W)
+    wts = jnp.where(scores >= T, scores, 0)
+    return wts @ H.astype(jnp.int32)                           # (S, f)

@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init). 512 host-platform placeholder devices back the production meshes:
+# single-pod (16, 16) and multi-pod (2, 16, 16). Dry-run ONLY — tests and
+# benches see the real 1-CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell (31 of the 40 — see configs.shape_applicable):
+  * train_4k    -> jit(train_step).lower(state, batch).compile()
+  * prefill_32k -> jit(prefill_forward).lower(batch).compile()
+  * decode_*    -> jit(serve_step).lower(cache, tokens, pos).compile()
+then records memory_analysis / cost_analysis / collective-bytes and the
+roofline terms to experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+All model state is jax.eval_shape'd — nothing is allocated; compile proves
+the sharding is coherent and the memory analysis proves it fits 16 GB/chip.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable
+from ..models import ModelConfig
+from ..models.sharding import (cache_spec_tree, make_rules, param_spec_tree,
+                               logical)
+from ..train import AdamWConfig, TrainConfig, make_train_step
+from .mesh import make_production_mesh, dp_size, input_specs
+from .roofline import analyze, model_flops_for, save_json
+
+# Per-arch microbatch counts for train_4k (sized so saved residuals fit
+# 16 GB/chip at batch 256/16-way DP — see DESIGN.md §5 napkin math).
+TRAIN_MICROBATCHES = {
+    "olmoe-1b-7b": 4, "qwen3-moe-30b-a3b": 8, "hubert-xlarge": 4,
+    "recurrentgemma-2b": 8, "qwen2-vl-7b": 16, "nemotron-4-15b": 8,
+    "granite-3-8b": 8, "granite-34b": 16, "yi-9b": 8, "xlstm-1.3b": 8,
+}
+
+
+def _state_specs(cfg: ModelConfig, mesh, rules, opt_rules=None):
+    """(ShapeDtypeStructs, NamedShardings) for TrainState via eval_shape.
+
+    opt_rules: sharding rules for the OPTIMIZER state — under ZeRO-1 the
+    compute params drop FSDP (rules) while master/mu/nu keep it (opt_rules).
+    """
+    from ..train.train_lib import TrainState, init_train_state
+
+    def init_fn():
+        return init_train_state(jax.random.PRNGKey(0), cfg, mesh=None)
+
+    state_sds = jax.eval_shape(init_fn)
+    pspecs = param_spec_tree(state_sds.params, cfg, rules)
+    ospecs = param_spec_tree(state_sds.params, cfg, opt_rules or rules)
+    opt_specs = {"master": ospecs, "mu": ospecs, "nu": ospecs, "step": P()}
+    specs = TrainState(params=pspecs, opt_state=opt_specs, step=P())
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    sds = jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        state_sds, shardings)
+    return sds, shardings
+
+
+def _cache_specs(cfg: ModelConfig, mesh, rules, batch: int, max_len: int):
+    from ..models import init_cache
+    cache_sds = jax.eval_shape(partial(init_cache, cfg, batch, max_len))
+    cspecs = cache_spec_tree(cache_sds, cfg, rules)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+    sds = jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        cache_sds, shardings)
+    return sds, shardings
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               *, zero1: bool = False, causal_skip: bool = False):
+    """Lower + compile one cell; returns (compiled, roofline).
+
+    zero1=True: hillclimb-A variant — compute params replicated over "data"
+    (no per-microbatch FSDP regather), optimizer state stays FSDP-sharded.
+    causal_skip=True: hillclimb-B variant — triangular attention schedule.
+    """
+    from ..models import decode_step, loss_fn
+    from ..models.config import active_param_count
+    from ..models.model import forward, _lm_head_matrix
+
+    cfg = get_config(arch)
+    if causal_skip:
+        cfg = cfg.scaled(causal_skip=True)
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    B, S = sh["global_batch"], sh["seq_len"]
+    rules = make_rules(cfg, mesh, fsdp=not zero1)
+    opt_rules = make_rules(cfg, mesh, fsdp=True)
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+
+    with mesh:
+        if kind == "train":
+            # each microbatch must divide the DP axes (else GSPMD pads a
+            # fractional per-device batch — measured +50% temp memory)
+            nm = TRAIN_MICROBATCHES[arch]
+            while B // nm % dp_size(mesh) != 0 and nm > 1:
+                nm //= 2
+            tc = TrainConfig(n_microbatches=nm, opt=AdamWConfig())
+            step = make_train_step(cfg, tc, mesh, rules=rules)
+            state_sds, state_sh = _state_specs(cfg, mesh, rules, opt_rules)
+            batch_sds = input_specs(cfg, shape_name, mesh)
+            lowered = jax.jit(step).lower(state_sds, batch_sds)
+        elif kind == "prefill":
+            def prefill_fn(params, batch):
+                hidden, _, _ = forward(params, batch["inputs"], cfg, rules)
+                W = _lm_head_matrix(params, cfg)
+                return hidden[:, -1].astype(jnp.float32) @ W.astype(
+                    jnp.float32)
+            from ..models import init_params
+            p_sds = jax.eval_shape(
+                partial(init_params, jax.random.PRNGKey(0), cfg))
+            pspecs = param_spec_tree(p_sds, cfg, rules)
+            p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+            p_sds = jax.tree.map(
+                lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                                  sharding=s), p_sds, p_sh)
+            batch_sds = input_specs(cfg, shape_name, mesh)
+            lowered = jax.jit(prefill_fn).lower(p_sds, batch_sds)
+        else:  # decode
+            def serve_step(params, cache, tokens, pos):
+                return decode_step(params, cache, tokens, pos, cfg, rules)
+            from ..models import init_params
+            p_sds = jax.eval_shape(
+                partial(init_params, jax.random.PRNGKey(0), cfg))
+            pspecs = param_spec_tree(p_sds, cfg, rules)
+            p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+            p_sds = jax.tree.map(
+                lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                                  sharding=s), p_sds, p_sh)
+            cache_sds, cache_sh = _cache_specs(cfg, mesh, rules, B, S)
+            io = input_specs(cfg, shape_name, mesh)
+            lowered = jax.jit(serve_step).lower(
+                p_sds, cache_sds, io["tokens"], io["pos"])
+        compiled = lowered.compile()
+
+    mf = model_flops_for(cfg, shape_name, active_param_count(cfg), S, B, kind)
+    roof = analyze(compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+                   chips=chips, model_flops=mf)
+    return compiled, roof
+
+
+def run_cell(arch, shape_name, mesh_name, outdir: Path, verbose=True,
+             zero1=False, causal_skip=False):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    t0 = time.time()
+    tag = ("+zero1" if zero1 else "") + ("+cskip" if causal_skip else "")
+    compiled, roof = lower_cell(arch, shape_name, mesh, mesh_name + tag,
+                                zero1=zero1, causal_skip=causal_skip)
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    suffix = tag.replace("+", "__")
+    out = outdir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    save_json(out, roof)
+    if verbose:
+        print(f"[OK] {arch} x {shape_name} x {mesh_name} "
+              f"({dt:.0f}s compile)")
+        print(f"     mem/device: arg={mem.argument_size_in_bytes/2**30:.2f}G "
+              f"out={mem.output_size_in_bytes/2**30:.2f}G "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}G")
+        print(f"     flops/dev={roof.hlo_flops:.3e} bytes/dev="
+              f"{roof.hlo_bytes:.3e} coll={roof.collective_bytes:.3e}")
+        print(f"     terms: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"-> {roof.bottleneck}-bound, useful={roof.useful_ratio:.2f}")
+    return roof
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--zero1", action="store_true",
+                    help="hillclimb-A variant: ZeRO-1 instead of FSDP")
+    ap.add_argument("--causal-skip", action="store_true",
+                    help="hillclimb-B variant: triangular attention")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            ok, why = shape_applicable(a, s)
+            if ok:
+                cells.append((a, s))
+            else:
+                print(f"[SKIP] {a} x {s}: {why}")
+
+    failures = []
+    for a, s in cells:
+        for m in meshes:
+            sfx = ("__zero1" if args.zero1 else "") + \
+                ("__cskip" if args.causal_skip else "")
+            marker = outdir / f"{a}__{s}__{m}{sfx}.json"
+            if marker.exists():
+                print(f"[CACHED] {a} x {s} x {m}")
+                continue
+            try:
+                run_cell(a, s, m, outdir, zero1=args.zero1,
+                         causal_skip=args.causal_skip)
+            except Exception as e:
+                failures.append((a, s, m, repr(e)))
+                print(f"[FAIL] {a} x {s} x {m}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        sys.exit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Production mesh + ShapeDtypeStruct input specs for every dry-run cell.
+
+make_production_mesh is a FUNCTION (importing this module never touches jax
+device state — the brief's requirement)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES
+from ..models.sharding import make_rules, logical
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def batch_specs(cfg, mesh, batch: int):
+    """Logical batch sharding: DP axes when they divide the batch."""
+    rules = make_rules(cfg, mesh)
+    b = rules["batch"] if batch % dp_size(mesh) == 0 else None
+    return rules, b
+
+
+def input_specs(cfg, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins (+ NamedShardings) for one cell's inputs.
+
+    train  -> batch dict(inputs, targets)
+    prefill-> tokens/embeds (B, S)
+    decode -> (tokens (B, 1), pos ()) — the cache is built separately.
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    rules, b = batch_specs(cfg, mesh, B)
+    kind = sh["kind"]
+    if kind in ("train", "prefill"):
+        if cfg.embedding_inputs:
+            inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16,
+                                          sharding=NamedSharding(
+                                              mesh, P(b, None, None)))
+        else:
+            inputs = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                          sharding=NamedSharding(
+                                              mesh, P(b, None)))
+        if kind == "prefill":
+            return {"inputs": inputs}
+        targets = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                       sharding=NamedSharding(
+                                           mesh, P(b, None)))
+        return {"inputs": inputs, "targets": targets}
+    # decode: one new token against a seq_len-deep cache
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                  sharding=NamedSharding(mesh, P(b, None)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"tokens": tokens, "pos": pos}

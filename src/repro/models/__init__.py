@@ -1,0 +1,8 @@
+"""LM model stack: the 10 assigned architectures as one composable decoder/
+encoder family (GQA/MoE/RG-LRU/xLSTM/encoder blocks, scan-over-layers)."""
+from .config import ModelConfig
+from .model import (init_params, forward, loss_fn, train_step_fn,
+                    decode_step, prefill, init_cache)
+
+__all__ = ["ModelConfig", "init_params", "forward", "loss_fn",
+           "train_step_fn", "decode_step", "prefill", "init_cache"]

@@ -1,0 +1,357 @@
+"""Model assembly: scan-over-layers decoder/encoder covering all 10 archs.
+
+Layers are grouped by whole repeats of `cfg.block_pattern`; the repeated
+group is a single `lax.scan` body (HLO size O(1) in depth — essential for
+the 62-cell dry-run compile budget and for fast compiles at scale), with the
+pattern remainder applied unrolled. Params for scanned groups have a leading
+(G, ...) axis, built by vmap'ing the per-group initializer.
+
+Cross-entropy is chunked over the sequence axis with vocab sharded on
+"model": the (B, S, V) logits tensor never exists (vocab 256000 x 4k tokens
+per device would be ~34 GB otherwise).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import attention_block, mlp_block, moe_block, norm
+from .recurrent import mlstm_block, rglru_block, slstm_block
+from .sharding import constrain
+
+MOE_AUX_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+# ------------------------------------------------------------ init
+def _dense(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _init_block(key, kind: str, cfg: ModelConfig):
+    d, H, Kh, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                        cfg.d_ff)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 24)
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers * max(ff, d))
+    p = {}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = {
+            "norm": jnp.ones((d,), dt),
+            "wq": _dense(ks[0], (d, H * hd), dtype=dt),
+            "wk": _dense(ks[1], (d, Kh * hd), dtype=dt),
+            "wv": _dense(ks[2], (d, Kh * hd), dtype=dt),
+            "wo_attn": _dense(ks[3], (H * hd, d), out_scale, dt),
+        }
+    elif kind == "rglru":
+        dr = cfg.rnn_width or d
+        p["rglru"] = {
+            "norm": jnp.ones((d,), dt),
+            "w_in": _dense(ks[0], (d, dr), dtype=dt),
+            "w_gate": _dense(ks[1], (d, dr), dtype=dt),
+            "conv_w": _dense(ks[2], (cfg.conv_width, dr), 0.1, dt),
+            "wa": _dense(ks[3], (dr, dr)), "ba": jnp.zeros((dr,)),
+            "wx": _dense(ks[4], (dr, dr)), "bx": jnp.zeros((dr,)),
+            "lam": jnp.full((dr,), 0.5, jnp.float32),
+            "w_out": _dense(ks[5], (dr, d), out_scale, dt),
+        }
+    elif kind == "mlstm":
+        p["mlstm"] = {
+            "norm": jnp.ones((d,), dt),
+            "wq": _dense(ks[0], (d, H * hd), dtype=dt),
+            "wk": _dense(ks[1], (d, H * hd), dtype=dt),
+            "wv": _dense(ks[2], (d, H * hd), dtype=dt),
+            "wi_gate": _dense(ks[3], (d, H), dtype=dt),
+            "wf_gate": _dense(ks[4], (d, H), dtype=dt),
+            "wo_gate": _dense(ks[5], (d, H * hd), dtype=dt),
+            "w_out": _dense(ks[6], (H * hd, d), out_scale, dt),
+        }
+    elif kind == "slstm":
+        p["slstm"] = {
+            "norm": jnp.ones((d,), dt),
+            "wz": _dense(ks[0], (d, H * hd), dtype=dt),
+            "wi": _dense(ks[1], (d, H * hd), dtype=dt),
+            "wf": _dense(ks[2], (d, H * hd), dtype=dt),
+            "wo_g": _dense(ks[3], (d, H * hd), dtype=dt),
+            "rz": _dense(ks[4], (H, hd, hd), 1.0 / math.sqrt(hd)),
+            "ri": _dense(ks[5], (H, hd, hd), 1.0 / math.sqrt(hd)),
+            "rf": _dense(ks[6], (H, hd, hd), 1.0 / math.sqrt(hd)),
+            "ro": _dense(ks[7], (H, hd, hd), 1.0 / math.sqrt(hd)),
+            "w_out": _dense(ks[8], (H * hd, d), out_scale, dt),
+        }
+    else:
+        raise ValueError(kind)
+
+    if ff > 0:
+        if cfg.is_moe and kind in ("attn", "local_attn"):
+            E = cfg.n_experts
+            p["moe"] = {
+                "norm": jnp.ones((d,), dt),
+                "router": _dense(ks[10], (d, E), dtype=jnp.float32),
+                "ewi": _dense(ks[11], (E, d, ff), 1.0 / math.sqrt(d), dt),
+                "ewo": _dense(ks[13], (E, ff, d), out_scale, dt),
+            }
+            if cfg.mlp_gated:
+                p["moe"]["ewg"] = _dense(ks[12], (E, d, ff),
+                                         1.0 / math.sqrt(d), dt)
+        else:
+            p["mlp"] = {
+                "norm": jnp.ones((d,), dt),
+                "wi": _dense(ks[10], (d, ff), dtype=dt),
+                "wo": _dense(ks[12], (ff, d), out_scale, dt),
+            }
+            if cfg.mlp_gated:
+                p["mlp"]["wg"] = _dense(ks[11], (d, ff), dtype=dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    kemb, khead, kblocks, krem = jax.random.split(key, 4)
+    params = {
+        "embedding": _dense(kemb, (cfg.vocab_size, cfg.d_model), 0.02,
+                            jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(khead, (cfg.d_model, cfg.vocab_size),
+                                   dtype=jnp.float32)
+
+    def init_group(k):
+        kk = jax.random.split(k, len(cfg.block_pattern))
+        return {f"b{i}": _init_block(kk[i], kind, cfg)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    G = cfg.n_groups
+    params["blocks"] = jax.vmap(init_group)(jax.random.split(kblocks, G))
+    if cfg.n_remainder:
+        kr = jax.random.split(krem, cfg.n_remainder)
+        params["rem"] = {
+            f"r{i}": _init_block(kr[i], cfg.block_pattern[i], cfg)
+            for i in range(cfg.n_remainder)}
+    return params
+
+
+# ------------------------------------------------------------ cache
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache pytree, mirroring the params structure."""
+    Kh, hd = cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+
+    def block_cache(kind: str):
+        if kind in ("attn", "local_attn"):
+            Smax = cfg.window if (kind == "local_attn" and cfg.window) \
+                else max_len
+            Smax = min(Smax, max_len)
+            return {
+                "k": jnp.zeros((batch, Smax, Kh, hd), dt),
+                "v": jnp.zeros((batch, Smax, Kh, hd), dt),
+                "pos": jnp.full((Smax,), -1, jnp.int32),
+            }
+        if kind == "rglru":
+            dr = cfg.rnn_width or cfg.d_model
+            return {"conv": jnp.zeros((batch, cfg.conv_width - 1, dr),
+                                      jnp.float32),
+                    "h": jnp.zeros((batch, dr), jnp.float32)}
+        if kind == "mlstm":
+            H = cfg.n_heads
+            return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+                    jnp.zeros((batch, H, hd), jnp.float32),
+                    jnp.full((batch, H), -1e30, jnp.float32))
+        if kind == "slstm":
+            H = cfg.n_heads
+            z = jnp.zeros((batch, H, hd), jnp.float32)
+            return (z, z, z, z - 1e30)
+        raise ValueError(kind)
+
+    def group_cache():
+        return {f"b{i}": block_cache(kind)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    cache = {"blocks": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape).copy()
+        if cfg.n_groups > 1 else x[None].copy(), group_cache())}
+    if cfg.n_remainder:
+        cache["rem"] = {f"r{i}": block_cache(cfg.block_pattern[i])
+                        for i in range(cfg.n_remainder)}
+    return cache
+
+
+# ------------------------------------------------------------ forward
+def _apply_block(x, p, kind, cfg, rules, *, positions, cache=None):
+    """One block: mixer sublayer + (optional) MLP/MoE sublayer."""
+    aux = jnp.float32(0.0)
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else None
+        mix, new_c = attention_block(
+            x, p["attn"], cfg, rules, positions=positions,
+            causal=not cfg.is_encoder, window=window, cache=cache)
+    elif kind == "rglru":
+        mix, new_c = rglru_block(x, p["rglru"], cfg, rules, state=cache)
+    elif kind == "mlstm":
+        mix, new_c = mlstm_block(x, p["mlstm"], cfg, rules, state=cache)
+    elif kind == "slstm":
+        mix, new_c = slstm_block(x, p["slstm"], cfg, rules, state=cache)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if "moe" in p:
+        y, aux = moe_block(x, p["moe"], cfg, rules)
+        x = x + y
+    elif "mlp" in p:
+        x = x + mlp_block(x, p["mlp"], cfg, rules)
+    return x, new_c, aux
+
+
+def forward(params, inputs, cfg: ModelConfig, rules=None, *,
+            positions=None, cache=None):
+    """Returns (hidden (B,S,d), new_cache, aux_loss).
+
+    inputs: int tokens (B, S) or float embeddings (B, S, d) (stub frontends).
+    cache: decode cache from init_cache (positions required), or None.
+    """
+    rules = rules or {}
+    dt = jnp.dtype(cfg.dtype)
+    if inputs.ndim == 2:
+        x = params["embedding"].astype(dt)[inputs]
+    else:
+        x = inputs.astype(dt)
+    x = constrain(x, rules, "batch", None, None)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    def group_fn(x, gp, gcache):
+        new_cache = {}
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(cfg.block_pattern):
+            c = None if gcache is None else gcache[f"b{i}"]
+            x, nc, a = _apply_block(x, gp[f"b{i}"], kind, cfg, rules,
+                                    positions=positions, cache=c)
+            new_cache[f"b{i}"] = nc
+            aux = aux + a
+        return x, new_cache, aux
+
+    if cache is None:
+        def scan_body(x, gp):
+            fn = jax.checkpoint(lambda x_, gp_: group_fn(x_, gp_, None)[::2]) \
+                if cfg.remat else (lambda x_, gp_: group_fn(x_, gp_, None)[::2])
+            x, aux = fn(x, gp)
+            return x, aux
+        x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+        new_cache = None
+        aux_total = jnp.sum(auxs)
+    else:
+        def scan_body(x, gp_gc):
+            gp, gc = gp_gc
+            x, nc, aux = group_fn(x, gp, gc)
+            return x, (nc, aux)
+        x, (ncs, auxs) = jax.lax.scan(scan_body, x,
+                                      (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": ncs}
+        aux_total = jnp.sum(auxs)
+
+    if cfg.n_remainder:
+        for i in range(cfg.n_remainder):
+            kind = cfg.block_pattern[i]
+            c = None if cache is None else cache["rem"][f"r{i}"]
+            x, nc, a = _apply_block(x, params["rem"][f"r{i}"], kind, cfg,
+                                    rules, positions=positions, cache=c)
+            aux_total = aux_total + a
+            if cache is not None:
+                new_cache["rem"] = new_cache.get("rem", {})
+                new_cache["rem"][f"r{i}"] = nc
+
+    x = norm(x, params["final_norm"], cfg.norm_type)
+    return x, new_cache, aux_total
+
+
+# ------------------------------------------------------------ loss
+def _lm_head_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embedding"].T
+    return params["lm_head"]
+
+
+def chunked_ce(hidden, W, targets, cfg, rules):
+    """Chunked cross-entropy: scan over sequence chunks; vocab on "model".
+
+    hidden (B,S,d) dtype cfg.dtype; W (d,V) fp32; targets (B,S) int32
+    (-1 = ignore). Returns (mean_loss fp32, token_count).
+    """
+    B, S, d = hidden.shape
+    ck = min(cfg.ce_chunk, S)
+    nc = -(-S // ck)
+    pad = nc * ck - S
+    h = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    t = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    h = jnp.moveaxis(h.reshape(B, nc, ck, d), 1, 0)
+    t = jnp.moveaxis(t.reshape(B, nc, ck), 1, 0)
+
+    def chunk_loss(carry, blk):
+        hc, tc = blk
+        logits = hc.astype(jnp.float32) @ W.astype(jnp.float32)  # (B,ck,V)
+        logits = constrain(logits, rules, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(
+            logits, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+        valid = tc >= 0
+        ce = jnp.where(valid, lse - lab, 0.0)
+        zl = jnp.where(valid, jnp.square(lse), 0.0)
+        loss, zloss, count = carry
+        return (loss + ce.sum(), zloss + zl.sum(),
+                count + valid.sum()), None
+
+    (loss, zloss, count), _ = jax.lax.scan(
+        chunk_loss, (jnp.float32(0), jnp.float32(0), jnp.int32(0)), (h, t))
+    n = jnp.maximum(count, 1)
+    return loss / n + Z_LOSS_WEIGHT * zloss / n, count
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rules=None):
+    """batch: dict(inputs (B,S) int or (B,S,d) float, targets (B,S) int).
+    Returns (loss, metrics dict)."""
+    rules = rules or {}
+    hidden, _, aux = forward(params, batch["inputs"], cfg, rules)
+    W = _lm_head_matrix(params, cfg)
+    ce, count = chunked_ce(hidden, W, batch["targets"], cfg, rules)
+    loss = ce + MOE_AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": count}
+
+
+# ------------------------------------------------------------ decode
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, rules=None):
+    """One decode step: tokens (B, 1) int32, pos () int32 absolute position.
+    Returns (logits (B, V) fp32, new_cache)."""
+    rules = rules or {}
+    positions = jnp.arange(1, dtype=jnp.int32) + pos
+    hidden, new_cache, _ = forward(params, tokens, cfg, rules,
+                                   positions=positions, cache=cache)
+    W = _lm_head_matrix(params, cfg)
+    logits = hidden[:, -1].astype(jnp.float32) @ W.astype(jnp.float32)
+    return constrain(logits, rules, "batch", "vocab"), new_cache
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, rules=None):
+    """Prefill the cache with a prompt (B, S); returns (last_logits, cache)."""
+    rules = rules or {}
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hidden, new_cache, _ = forward(params, tokens, cfg, rules,
+                                   positions=positions, cache=cache)
+    W = _lm_head_matrix(params, cfg)
+    logits = hidden[:, -1].astype(jnp.float32) @ W.astype(jnp.float32)
+    return logits, new_cache
+
+
+def train_step_fn(params, batch, cfg, rules=None):
+    """Plain grad step (no optimizer) — smoke tests; real training lives in
+    repro.train."""
+    (loss, metrics), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, batch, cfg, rules)
+    return loss, metrics, grads

@@ -1,0 +1,222 @@
+"""Recurrent blocks: Griffin RG-LRU (recurrentgemma) and xLSTM (mLSTM/sLSTM).
+
+These are the sub-quadratic archs that run the long_500k shape. Training/
+prefill uses parallel forms (associative scan for RG-LRU; chunkwise-parallel
+for mLSTM); decode uses O(1)-state recurrent steps — the whole point of
+running 500k-token decode on them.
+
+States are fp32 regardless of activation dtype (carried across long
+horizons; bf16 recurrences drift).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import norm, _act
+from .sharding import constrain
+
+RGLRU_C = 8.0
+
+
+# ------------------------------------------------------------ causal conv1d
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv: x (B,S,D), w (W,D). state: (B,W-1,D) | None.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return y, new_state
+
+
+# ------------------------------------------------------------ RG-LRU
+def rglru(x, p, state=None):
+    """Real-Gated Linear Recurrent Unit (Griffin eq. 1-4).
+
+    x: (B,S,D). p: dict(wa (D,D_in? -> here gates from x itself: (D,) params)
+    — gates are elementwise from projections: r = σ(x@Wa+ba), i = σ(x@Wx+bx),
+    a = exp(-c·softplus(Λ)·r); h_t = a·h_{t-1} + sqrt(1-a²)·(i·x).
+    state: (B,D) fp32 h_{-1}. Returns (h (B,S,D), h_last).
+    Parallel mode uses associative_scan over time.
+    """
+    B, S, D = x.shape
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wx"] + p["bx"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r            # (B,S,D) < 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * xf)
+
+    if state is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * state)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = bv                                                       # (B,S,D)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(x, p, cfg, rules, *, state=None):
+    """Griffin recurrent block: [linear -> conv1d -> RG-LRU] ⊙ gelu(linear).
+
+    state: None | dict(conv (B,W-1,D), h (B,D)). Returns (out, new_state).
+    """
+    h = norm(x, p["norm"], cfg.norm_type)
+    u = h @ p["w_in"]                                            # (B,S,Dr)
+    u = constrain(u, rules, "batch", None, "mlp")
+    g = jax.nn.gelu(h @ p["w_gate"])
+    g = constrain(g, rules, "batch", None, "mlp")
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = causal_conv1d(u, p["conv_w"], conv_state)
+    h_state = state["h"] if state is not None else None
+    y, h_last = rglru(u, p, state=h_state)
+    out = (y * g) @ p["w_out"]
+    out = constrain(out, rules, "batch", None, None)
+    new_state = ({"conv": new_conv, "h": h_last}
+                 if state is not None else None)
+    return out, new_state
+
+
+# ------------------------------------------------------------ mLSTM
+def mlstm_chunked(q, k, v, i_raw, f_raw, *, chunk: int, state=None):
+    """Chunkwise-parallel mLSTM (xLSTM §2.3), stabilized.
+
+    q,k,v: (B,S,H,Dh); i_raw,f_raw: (B,S,H) pre-activation gates.
+    state: None | (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)) fp32.
+    Returns (h (B,S,H,Dh), new_state).
+    """
+    B, S, H, Dh = q.shape
+    c = min(chunk, S)
+    nc = -(-S // c)
+    pad = nc * c - S
+
+    def pad_t(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    qf = pad_t(q).astype(jnp.float32).reshape(B, nc, c, H, Dh) / math.sqrt(Dh)
+    kf = pad_t(k).astype(jnp.float32).reshape(B, nc, c, H, Dh)
+    vf = pad_t(v).astype(jnp.float32).reshape(B, nc, c, H, Dh)
+    lf = jax.nn.log_sigmoid(pad_t(f_raw).astype(jnp.float32)
+                            ).reshape(B, nc, c, H)
+    li = pad_t(i_raw).astype(jnp.float32).reshape(B, nc, c, H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+        n0 = jnp.zeros((B, H, Dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, blk):
+        C, n, m = carry
+        qb, kb, vb, lfb, lib = blk                # (B,c,H,*) time-major slice
+        F = jnp.cumsum(lfb, axis=1)               # (B,c,H) Σ log f (1..t)
+        # stabilizer: running max of (F_t + m_prev) and intra (F_t - F_j + li_j)
+        a_intra = F[:, :, None, :] - F[:, None, :, :] + lib[:, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        a_intra = jnp.where(tri[None, :, :, None], a_intra, -1e30)
+        m_inter = F + m[:, None, :]               # (B,c,H)
+        m_new_t = jnp.maximum(jnp.max(a_intra, axis=2), m_inter)  # (B,c,H)
+        # intra-chunk quadratic term
+        w = jnp.exp(a_intra - m_new_t[:, :, None, :])             # (B,c,c,H)
+        s = jnp.einsum("bthd,bjhd->btjh", qb, kb)
+        h_intra = jnp.einsum("btjh,btjh,bjhd->bthd", s, w, vb)
+        qn_intra = jnp.einsum("btjh,btjh->bth", s, w)   # q·(Σ w_j k_j)
+        # inter-chunk term from carried state
+        scale_inter = jnp.exp(m_inter - m_new_t)                  # (B,c,H)
+        h_inter = jnp.einsum("bthd,bhde->bthe", qb, C) * scale_inter[..., None]
+        n_inter = jnp.einsum("bthd,bhd->bth", qb, n) * scale_inter
+        qn = qn_intra + n_inter
+        h = (h_intra + h_inter) / jnp.maximum(
+            jnp.abs(qn), jnp.exp(-m_new_t))[..., None]
+        # chunk-end state update
+        F_end = F[:, -1][:, None, :]                              # (B,1,H)
+        m_end = jnp.maximum(F_end[:, 0] + m,
+                            jnp.max(F_end - F + lib, axis=1))     # (B,H)
+        wk = jnp.exp(F_end - F + lib - m_end[:, None, :])         # (B,c,H)
+        C_new = C * jnp.exp(F_end[:, 0] + m - m_end)[..., None, None] \
+            + jnp.einsum("bthd,bth,bthe->bhde", kb, wk, vb)
+        n_new = n * jnp.exp(F_end[:, 0] + m - m_end)[..., None] \
+            + jnp.einsum("bthd,bth->bhd", kb, wk)
+        return (C_new, n_new, m_end), h
+
+    blks = tuple(jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, lf, li))
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0), blks)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, nc * c, H, Dh)[:, :S]
+    return h.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_block(x, p, cfg, rules, *, state=None):
+    """mLSTM block: qkv + exponential gating + matrix memory + gated output."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    h = norm(x, p["norm"], cfg.norm_type)
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["wk"]).reshape(B, S, H, hd)
+    v = (h @ p["wv"]).reshape(B, S, H, hd)
+    i_raw = (h @ p["wi_gate"]).reshape(B, S, H)
+    f_raw = (h @ p["wf_gate"]).reshape(B, S, H) + 1.0   # forget bias init
+    y, new_state = mlstm_chunked(q, k, v, i_raw, f_raw,
+                                 chunk=cfg.attn_chunk,
+                                 state=state)
+    o = jax.nn.sigmoid(h @ p["wo_gate"]).reshape(B, S, H, hd)
+    out = (y * o).reshape(B, S, H * hd) @ p["w_out"]
+    return constrain(out, rules, "batch", None, None), new_state
+
+
+# ------------------------------------------------------------ sLSTM
+def slstm_block(x, p, cfg, rules, *, state=None):
+    """sLSTM: scalar memory, exponential gating, recurrent head mixing.
+
+    Sequential by construction (h_{t-1} feeds the gates through R matrices);
+    lax.scan over time. state: (c, n, h, m) each (B, H, hd) fp32.
+    """
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xn = norm(x, p["norm"], cfg.norm_type).astype(jnp.float32)
+    zx = (xn @ p["wz"]).reshape(B, S, H, hd)
+    ix = (xn @ p["wi"]).reshape(B, S, H, hd)
+    fx = (xn @ p["wf"]).reshape(B, S, H, hd)
+    ox = (xn @ p["wo_g"]).reshape(B, S, H, hd)
+
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        state = (zeros, zeros, zeros, zeros - 1e30)  # c, n, h, m
+
+    Rz, Ri, Rf, Ro = p["rz"], p["ri"], p["rf"], p["ro"]  # (H, hd, hd)
+
+    def step(carry, inp):
+        c, n, hprev, m = carry
+        zt, it, ft, ot = inp                              # (B,H,hd)
+        zr = jnp.einsum("bhd,hde->bhe", hprev, Rz)
+        ir = jnp.einsum("bhd,hde->bhe", hprev, Ri)
+        fr = jnp.einsum("bhd,hde->bhe", hprev, Rf)
+        orr = jnp.einsum("bhd,hde->bhe", hprev, Ro)
+        z = jnp.tanh(zt + zr)
+        li = it + ir                                      # log-space input gate
+        lf = jax.nn.log_sigmoid(ft + fr)
+        m_new = jnp.maximum(lf + m, li)
+        i_g = jnp.exp(li - m_new)
+        f_g = jnp.exp(lf + m - m_new)
+        c_new = f_g * c + i_g * z
+        n_new = f_g * n + i_g
+        o_g = jax.nn.sigmoid(ot + orr)
+        h_new = o_g * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    inps = tuple(jnp.moveaxis(t, 1, 0) for t in (zx, ix, fx, ox))
+    new_state, hs = jax.lax.scan(step, state, inps)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, H * hd).astype(x.dtype)
+    out = y @ p["w_out"]
+    return constrain(out, rules, "batch", None, None), new_state

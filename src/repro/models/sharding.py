@@ -1,0 +1,207 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Physical mesh axes: ("pod", "data", "model") multi-pod, ("data", "model")
+single-pod. Logical axes used by the model code:
+
+  batch   -> ("pod", "data")   pure DP (pods are extra DP)
+  embed   -> "data"            FSDP / ZeRO-3: params sharded on d_model over
+                               the data axis; XLA all-gathers per layer inside
+                               the scan (gather size = one layer's params)
+  heads   -> "model"           Megatron TP for attention (iff divisible)
+  kv      -> "model" iff n_kv_heads % model == 0 else replicated
+  mlp     -> "model"           TP for the FFN hidden dim
+  experts -> "model"           expert parallelism
+  vocab   -> "model"           sharded logits/embedding rows
+  seq     -> None              (sequence kept whole; KV cache of long-decode
+                               shards seq on "model")
+
+Archs whose n_heads is not divisible by the model axis (qwen2-vl 28H,
+recurrentgemma 10H) replicate attention over "model" and carry TP in the MLP
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def make_rules(cfg, mesh: Mesh, *, fsdp: bool = True) -> dict[str, object]:
+    """Resolve logical axes -> physical axes for this (config, mesh).
+
+    fsdp=False selects ZeRO-1: compute params replicate over "data" (no
+    per-layer/per-microbatch regather); optimizer state keeps the full FSDP
+    sharding regardless (see launch/dryrun.py ZERO1_ARCHS + EXPERIMENTS.md
+    §Perf hillclimb A).
+    """
+    model = _axis_size(mesh, "model")
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    heads_ok = cfg.n_heads % model == 0
+    kv_ok = cfg.n_kv_heads % model == 0
+    # Array-level NamedShardings require even tiling (GSPMD pads only
+    # *internal* values): granite-3-8b's vocab 49155 therefore keeps its
+    # embedding replicated over "model" and FSDP-sharded on the embed dim.
+    vocab_ok = cfg.vocab_size % model == 0
+    rules = {
+        "batch": dp,
+        "embed": "data" if fsdp else None,
+        "heads": "model" if heads_ok else None,
+        "kv": "model" if (heads_ok and kv_ok) else None,
+        "mlp": "model",
+        "experts": "model",
+        "vocab": "model" if vocab_ok else None,
+        "seq": None,
+        "kv_seq": "model",   # long-context decode: shard the KV cache on seq
+        "_mesh": mesh,       # carried for shard_map sub-regions (seq-parallel
+                             # decode attention); not a logical axis
+    }
+    return rules
+
+
+def logical(spec: tuple[str | None, ...], rules) -> P:
+    """Translate a logical spec tuple to a PartitionSpec."""
+    return P(*[rules.get(a) if a is not None else None for a in spec])
+
+
+def constrain(x, rules, *spec):
+    """with_sharding_constraint under a mesh context (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, logical(spec, rules))
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (e.g. plain CPU tests)
+
+
+# ------------------------------------------------------------ param specs
+def param_spec_tree(params, cfg, rules):
+    """PartitionSpec pytree matching init_params' structure.
+
+    Conventions (see model.init_params):
+      embedding      (vocab, embed)            -> (vocab, embed)
+      lm_head        (embed, vocab)            -> (embed, vocab)
+      attn wq/wo     (embed, heads*hd)         -> (embed, heads)
+      attn wk/wv     (embed, kv*hd)            -> (embed, kv)
+      mlp wi/wg      (embed, mlp)              -> (embed, mlp)
+      mlp wo         (mlp, embed)              -> (mlp, embed)
+      moe w* (E, ...)                          -> (experts, embed/mlp)
+      rglru/lstm matrices (embed, X)           -> (embed, None)
+      scanned leaves have a leading layer-group axis -> None prefix
+    """
+    mesh = rules.get("_mesh")
+
+    def spec_for(path: str, leaf) -> P:
+        nd = leaf.ndim
+        # leading scan axis for stacked block params
+        prefix = ("blocks",) if path.startswith("blocks/") else ()
+        lead = (None,) * len(prefix)
+
+        def L(*axes):
+            return logical(lead + axes, rules)
+
+        name = path.split("/")[-1]
+        if name == "embedding":
+            return logical(("vocab", "embed"), rules)
+        if name == "lm_head":
+            return logical(("embed", "vocab"), rules)
+        if name in ("wq", "wo_attn"):
+            return L("embed", "heads") if name == "wq" else L("heads", "embed")
+        if name in ("wk", "wv"):
+            return L("embed", "kv")
+        if name in ("wi", "wg"):
+            return L("embed", "mlp")
+        if name == "wo":
+            return L("mlp", "embed")
+        if name == "router":
+            return L("embed", "experts")
+        # MoE experts: EP on "model" via the experts axis; the per-expert ff
+        # dim stays unsharded (it already lives on the same axis via E).
+        if name in ("ewi", "ewg"):      # (E, d, ff)
+            return L("experts", "embed", None)
+        if name == "ewo":               # (E, ff, d)
+            return L("experts", None, "embed")
+        if name in ("w_in", "w_gate"):  # rglru up-projections (d, dr)
+            return L("embed", "mlp")
+        if name == "conv_w":            # (conv_width, dr)
+            return L(None, "mlp")
+        # recurrent / misc matrices: FSDP on dim0 when it divides the axis
+        if nd - len(prefix) == 2:
+            data_n = mesh.shape["data"] if mesh is not None else 1
+            dim0 = leaf.shape[len(prefix)]
+            return L("embed" if dim0 % max(data_n, 1) == 0 else None, None)
+        return L(*((None,) * (nd - len(prefix))))
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = {}
+    for kp, leaf in flat:
+        path = "/".join(getattr(k, "key", str(k)) for k in kp)
+        specs[path] = spec_for(path, leaf)
+    # rebuild as tree
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = [specs["/".join(getattr(k, "key", str(k)) for k in kp)]
+              for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def shard_params(params, cfg, mesh: Mesh):
+    rules = make_rules(cfg, mesh)
+    specs = param_spec_tree(params, cfg, rules)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)
+
+
+def cache_spec_tree(cache, cfg, rules):
+    """PartitionSpec pytree for a decode cache (models.init_cache structure).
+
+    Global-attention KV caches shard their SEQUENCE axis on "model"
+    (sequence-parallel decode); ring (windowed) caches and recurrent states
+    are small and stay batch-sharded only. Batch stays on the DP axes when it
+    divides them, else replicated (long_500k has global_batch=1).
+    """
+    mesh = rules["_mesh"]
+    n_model = mesh.shape["model"]
+    batch_axes = rules["batch"] if isinstance(rules["batch"], tuple) \
+        else (rules["batch"],)
+    dp_total = 1
+    for a in batch_axes:
+        dp_total *= mesh.shape[a] if a else 1
+
+    def kind_of(path: str) -> str | None:
+        parts = path.split("/")
+        for p in parts:
+            if p.startswith("b") and p[1:].isdigit():
+                return cfg.block_pattern[int(p[1:])]
+            if p.startswith("r") and p[1:].isdigit():
+                return cfg.block_pattern[int(p[1:])]
+        return None
+
+    def spec_for(path: str, leaf) -> P:
+        lead = (None,) if path.startswith("blocks/") else ()
+        kind = kind_of(path)
+        name = path.split("/")[-1]
+        nd = leaf.ndim - len(lead)
+        if kind in ("attn", "local_attn"):
+            is_ring = (kind == "local_attn" and cfg.window)
+            if name in ("k", "v"):
+                B, Smax = leaf.shape[len(lead)], leaf.shape[len(lead) + 1]
+                b = rules["batch"] if B % dp_total == 0 else None
+                s = "model" if (not is_ring and Smax % n_model == 0) else None
+                return P(*lead, b, s, None, None)
+            if name == "pos":
+                Smax = leaf.shape[len(lead)]
+                s = "model" if (not is_ring and Smax % n_model == 0) else None
+                return P(*lead, s)
+        # recurrent states & ring misc: batch on dp when divisible
+        B = leaf.shape[len(lead)] if nd >= 1 else 1
+        b = rules["batch"] if (nd >= 1 and B % dp_total == 0) else None
+        return P(*lead, b, *([None] * (nd - 1)))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    leaves = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        leaves.append(spec_for(path, leaf))
+    treedef = jax.tree_util.tree_structure(cache)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,8 @@
+"""Training runtime: hand-rolled AdamW (+fp32 master weights), schedules,
+microbatched train step, gradient compression, sharded train state."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from .train_lib import TrainConfig, TrainState, make_train_step, init_train_state
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "warmup_cosine",
+           "TrainConfig", "TrainState", "make_train_step",
+           "init_train_state"]

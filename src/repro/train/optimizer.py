@@ -1,0 +1,90 @@
+"""Hand-rolled AdamW with fp32 master weights (no optax in this container —
+and the brief wants the substrate built, not imported).
+
+Params may live in bf16 (compute copies); the optimizer state carries fp32
+master weights + moments. Update math runs in fp32; the new compute params
+are the masters cast back to their original dtypes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def warmup_cosine(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to min_lr_ratio·lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params):
+    """State: (master fp32, mu fp32, nu fp32, step)."""
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    mu = jax.tree.map(jnp.zeros_like, master)
+    nu = jax.tree.map(jnp.zeros_like, master)
+    return {"master": master, "mu": mu, "nu": nu,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    lr = warmup_cosine(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        # decay only matrices (norm scales / biases exempt, standard practice)
+        wd = cfg.weight_decay if w.ndim >= 2 else 0.0
+        w_new = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + wd * w)
+        return m, v, w_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["mu"])
+    flat_v = treedef.flatten_up_to(opt_state["nu"])
+    flat_w = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in
+           zip(flat_g, flat_m, flat_v, flat_w)]
+    mu = treedef.unflatten([o[0] for o in out])
+    nu = treedef.unflatten([o[1] for o in out])
+    master = treedef.unflatten([o[2] for o in out])
+    # compute params = master cast back to the original compute dtypes
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    new_state = {"master": master, "mu": mu, "nu": nu, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

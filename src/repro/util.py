@@ -1,0 +1,20 @@
+"""Small compat utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions (check_rep -> check_vma rename)."""
+    try:
+        from jax import shard_map as sm
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)

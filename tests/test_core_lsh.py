@@ -1,0 +1,193 @@
+"""Core LSH correctness: signature generation + joins vs naive oracles."""
+import itertools
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alphabet import AMINO_ACIDS, ALPHABET_SIZE, BLOSUM62, encode_batch
+from repro.core import simhash
+from repro.core.hamming import all_pairs_hamming, hamming_distance, threshold_pairs
+from repro.core.join import band_join, flip_join, flip_masks, pairs_to_set
+from repro.core.shingle import extract_shingles, shingle_ids
+
+
+# ------------------------------------------------------------ python oracle
+def naive_signature(seq: str, k: int, T: int, f: int) -> int:
+    """Literal Algorithm 2: per-shingle neighbour enumeration, Java hashCode,
+    weighted ±1 accumulation, sign bits. (Set semantics of the pseudocode's
+    `neighwords` union is a known pseudocode artifact — Figure 3.1 semantics,
+    one contribution per (shingle, neighbour word) occurrence, is used, which
+    is what the matmul/table paths implement.)"""
+    V = [0] * f
+    for s in range(len(seq) - k + 1):
+        sh = seq[s : s + k]
+        for word in itertools.product(AMINO_ACIDS, repeat=k):
+            score = sum(
+                BLOSUM62[AMINO_ACIDS.index(sh[i]), AMINO_ACIDS.index(word[i])]
+                for i in range(k)
+            )
+            if score >= T:
+                h = 0
+                for c in word:
+                    h = (h * 31 + ord(c)) & 0xFFFFFFFF
+                for j in range(f):
+                    V[j] += score if (h >> j) & 1 else -score
+    bits = [1 if v >= 0 else 0 for v in V]
+    out = 0
+    for j, b in enumerate(bits):
+        out |= b << j
+    return out
+
+
+SEQ = st.text(alphabet=AMINO_ACIDS, min_size=4, max_size=24)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seq=SEQ, T=st.integers(min_value=5, max_value=14))
+def test_signature_matches_naive_oracle(seq, T):
+    k, f = 2, 32  # k=2 keeps the 400-word oracle loop tractable
+    ids, lens = encode_batch([seq])
+    got_m = int(np.asarray(simhash.signatures_matmul(ids, lens, k=k, T=T, f=f))[0, 0])
+    got_t = int(np.asarray(simhash.signatures_table(ids, lens, k=k, T=T, f=f))[0, 0])
+    want = naive_signature(seq, k, T, f)
+    assert got_m == want
+    assert got_t == want
+
+
+def test_matmul_equals_table_k3():
+    rng = np.random.default_rng(0)
+    seqs = ["".join(rng.choice(list(AMINO_ACIDS), rng.integers(5, 40)))
+            for _ in range(16)]
+    ids, lens = encode_batch(seqs)
+    for T in (11, 13, 22):
+        a = np.asarray(simhash.signatures_matmul(ids, lens, k=3, T=T, f=32))
+        b = np.asarray(simhash.signatures_table(ids, lens, k=3, T=T, f=32))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_splitmix_wide_signatures():
+    rng = np.random.default_rng(1)
+    seqs = ["".join(rng.choice(list(AMINO_ACIDS), 30)) for _ in range(4)]
+    ids, lens = encode_batch(seqs)
+    s = np.asarray(simhash.signatures_table(ids, lens, k=3, T=13, f=64,
+                                            scheme="splitmix"))
+    assert s.shape == (4, 2) and s.dtype == np.uint32
+
+
+# ------------------------------------------------------------ shingles
+def test_shingle_extraction_and_mask():
+    ids, lens = encode_batch(["ARNDC", "AR"])
+    sh, mask = extract_shingles(ids, lens, 3)
+    assert sh.shape == (2, 3, 3)
+    np.testing.assert_array_equal(np.asarray(mask), [[1, 1, 1], [0, 0, 0]])
+    wid = np.asarray(shingle_ids(sh))
+    # 'ARN' = 0*400 + 1*20 + 2 = 22
+    assert wid[0, 0] == 22
+    assert (wid[1] == -1).all()
+
+
+# ------------------------------------------------------------ hamming
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_hamming_distance_matches_popcount(a, b):
+    d = int(hamming_distance(jnp.uint32([a]), jnp.uint32([b])))
+    assert d == bin(a ^ b).count("1")
+
+
+def test_all_pairs_hamming_blocked_vs_direct():
+    rng = np.random.default_rng(2)
+    q = rng.integers(0, 2**32, (7, 2), dtype=np.uint32)
+    r = rng.integers(0, 2**32, (13, 2), dtype=np.uint32)
+    got = np.asarray(all_pairs_hamming(jnp.asarray(q), jnp.asarray(r), block=4))
+    want = np.zeros((7, 13), np.int32)
+    for i in range(7):
+        for j in range(13):
+            want[i, j] = sum(bin(int(q[i, w]) ^ int(r[j, w])).count("1")
+                             for w in range(2))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(3)
+    bits = rng.integers(0, 2, (5, 64))
+    packed = simhash.pack_bits(jnp.asarray(bits))
+    back = np.asarray(simhash.unpack_bits(packed, 64))
+    np.testing.assert_array_equal(back, bits)
+
+
+# ------------------------------------------------------------ joins
+def _brute_pairs(q, r, d):
+    out = set()
+    for i in range(q.shape[0]):
+        for j in range(r.shape[0]):
+            dist = sum(bin(int(q[i, w]) ^ int(r[j, w])).count("1")
+                       for w in range(q.shape[1]))
+            if dist <= d:
+                out.add((i, j))
+    return out
+
+
+@pytest.mark.parametrize("d", [0, 1, 2])
+def test_flip_join_exact(d):
+    rng = np.random.default_rng(4)
+    base = rng.integers(0, 2**32, (20, 1), dtype=np.uint32)
+    # plant near-duplicates at controlled distances
+    q = base.copy()
+    q[3, 0] ^= 1        # distance 1 from ref 3
+    q[7, 0] ^= 0b101    # distance 2 from ref 7
+    got, count = flip_join(jnp.asarray(q), jnp.asarray(base), f=32, d=d,
+                           max_pairs=512)
+    want = _brute_pairs(q, base, d)
+    assert pairs_to_set(got) == want
+    assert int(count) == len(want)
+
+
+@pytest.mark.parametrize("f,d,bands", [(32, 0, 1), (32, 1, 2), (32, 2, 3),
+                                       (64, 2, 3), (64, 3, 4)])
+def test_band_join_exact(f, d, bands):
+    rng = np.random.default_rng(5)
+    nw = f // 32
+    r = rng.integers(0, 2**32, (24, nw), dtype=np.uint32)
+    q = r.copy()
+    for i in range(q.shape[0]):  # mutate i%4 bits of query i
+        for b in range(i % 4):
+            q[i, b % nw] ^= np.uint32(1) << np.uint32((7 * i + b) % 32)
+    got, count = band_join(jnp.asarray(q), jnp.asarray(r), f=f, d=d,
+                           max_pairs=2048, bands=bands)
+    want = _brute_pairs(q, r, d)
+    assert pairs_to_set(got) == want
+    assert int(count) == len(want)
+
+
+def test_threshold_pairs_dense():
+    rng = np.random.default_rng(6)
+    r = rng.integers(0, 2**32, (10, 1), dtype=np.uint32)
+    q = r.copy(); q[2, 0] ^= 3
+    got, count = threshold_pairs(jnp.asarray(q), jnp.asarray(r), 2, 256)
+    want = _brute_pairs(q, r, 2)
+    assert pairs_to_set(got) == want and int(count) == len(want)
+
+
+def test_flip_masks_counts():
+    m = flip_masks(32, 2)
+    assert m.shape[0] == 1 + 32 + 32 * 31 // 2  # 529, as in the paper
+
+
+# ------------------------------------------------------------ LSH property
+def test_random_hyperplane_cosine_property():
+    """Pr[bit agree] ≈ 1 - θ/π (paper §3) for splitmix hyperplanes."""
+    rng = np.random.default_rng(7)
+    f = 512  # many hyperplanes to tighten the estimate
+    W = 4096
+    H = (rng.integers(0, 2, (W, f)) * 2 - 1).astype(np.int32)
+    for _ in range(3):
+        x = rng.normal(size=W); y = rng.normal(size=W)
+        # correlate y with x by random mixing
+        alpha = rng.uniform(0, 1)
+        y = alpha * x + (1 - alpha) * y
+        vx, vy = x @ H, y @ H
+        agree = np.mean((vx >= 0) == (vy >= 0))
+        theta = np.arccos(np.dot(x, y) / (np.linalg.norm(x) * np.linalg.norm(y)))
+        assert abs(agree - (1 - theta / np.pi)) < 0.06

@@ -1,0 +1,73 @@
+"""Launch-layer units that don't need the 512-device mesh: cell matrix
+rules, model-flops accounting, report rendering."""
+import json
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cells, shape_applicable, get_config
+from repro.launch.report import fmt_table, FIX_NOTES
+from repro.launch.roofline import (Roofline, model_flops_for, PEAK_FLOPS,
+                                   HBM_BW, ICI_BW)
+from repro.models.config import active_param_count
+
+
+def test_cell_matrix_counts():
+    all_cells = cells()
+    assert len(all_cells) == 40  # 10 archs x 4 shapes
+    runnable = [c for c in all_cells if c[2]]
+    skipped = [c for c in all_cells if not c[2]]
+    assert len(runnable) == 31
+    assert len(skipped) == 9
+    # hubert: 2 skips; 8 archs skip long_500k (incl. hubert counted once)
+    hub = [c for c in skipped if c[0] == "hubert-xlarge"]
+    assert len(hub) == 2
+    longs = [c for c in skipped if c[1] == "long_500k"]
+    assert len(longs) == 8
+    for _, _, ok, why in skipped:
+        assert why  # every skip carries a reason
+
+
+def test_subquadratic_archs_run_long_500k():
+    assert shape_applicable("recurrentgemma-2b", "long_500k")[0]
+    assert shape_applicable("xlstm-1.3b", "long_500k")[0]
+    assert not shape_applicable("yi-9b", "long_500k")[0]
+
+
+def test_model_flops_accounting():
+    cfg = get_config("yi-9b")
+    n = active_param_count(cfg)
+    t = model_flops_for(cfg, "train_4k", n, 4096, 256, "train")
+    p = model_flops_for(cfg, "prefill_32k", n, 32768, 32, "prefill")
+    d = model_flops_for(cfg, "decode_32k", n, 32768, 128, "decode")
+    assert t == 6.0 * n * 4096 * 256
+    assert p == 2.0 * n * 32768 * 32
+    assert d == 2.0 * n * 128          # one token per sequence
+
+
+def test_moe_active_flops_smaller_than_total():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    from repro.models.config import param_count
+    assert active_param_count(cfg) < 0.2 * param_count(cfg)
+
+
+def test_hardware_constants_match_brief():
+    assert PEAK_FLOPS == 197e12 and HBM_BW == 819e9 and ICI_BW == 50e9
+
+
+def test_report_renders_skips_and_cells(tmp_path):
+    r = Roofline(arch=ARCHS[0], shape="train_4k", mesh="single", chips=256,
+                 hlo_flops=1e12, hlo_bytes=1e12, collective_bytes=1e10,
+                 collectives={}, model_flops=1e15,
+                 peak_memory_bytes=2**30).finalize()
+    cells_map = {(ARCHS[0], "train_4k", "single"): json.loads(
+        json.dumps(r.__dict__))}
+    table = fmt_table(cells_map, "single")
+    assert "SKIP" in table               # skipped cells rendered with reason
+    assert ARCHS[0] in table
+    assert "(missing)" in table          # un-run cells flagged, not hidden
+    for note in FIX_NOTES.values():
+        assert isinstance(note, str) and note
+
+
+def test_roofline_bottleneck_note_exists_for_every_term():
+    assert set(FIX_NOTES) == {"compute", "memory", "collective"}
