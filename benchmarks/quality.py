@@ -34,7 +34,7 @@ def _eval(cfg: LSHConfig, data, baseline_pairs=None, max_pid_pairs=200):
                                       data["query_lens"])) > 0
     rv = np.asarray(sl.feature_counts(data["ref_ids"],
                                       data["ref_lens"])) > 0
-    pairs, count = sl.search(qs, rs, q_valid=qv, r_valid=rv)
+    pairs, count, _ov = sl.search(qs, rs, q_valid=qv, r_valid=rv)
     got = pairs_to_set(pairs)
     truth = _truth_pairs(data)
     recall = len(got & truth) / max(len(truth), 1)

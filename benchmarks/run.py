@@ -13,12 +13,13 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["quality", "performance", "scalability"])
+                    choices=["quality", "performance", "scalability",
+                             "serving"])
     args = ap.parse_args(argv)
 
-    from . import performance, quality, scalability
+    from . import performance, quality, scalability, serving
     sections = {"quality": quality.run, "performance": performance.run,
-                "scalability": scalability.run}
+                "scalability": scalability.run, "serving": serving.run}
     if args.only:
         sections = {args.only: sections[args.only]}
     for name, fn in sections.items():

@@ -1,0 +1,96 @@
+"""Serving benchmark — indexed repeat-query search vs from-scratch ScalLoPS.
+
+The paper's §5.3 economics, measured: the from-scratch pipeline pays
+reference signature generation + join on *every* call; the index pays it
+once. At >= 4k references the indexed path must win wall-clock on repeat
+queries (acceptance criterion of the `repro.index` subsystem), and
+save -> load -> query must reproduce the in-memory top-k exactly.
+
+CSV: bench,n_refs,n_queries,method,metric,value
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import LSHConfig, ScalLoPS
+from repro.data import SyntheticProteinConfig, make_protein_sets
+from repro.index import QueryEngine, ServingConfig, SignatureIndex
+from repro.index.service import topk_probe
+
+
+def run(csv=print, n_refs: int = 4096, n_q: int = 256, batch: int = 32,
+        k: int = 10, rounds: int = 4):
+    csv("bench,n_refs,n_queries,method,metric,value")
+    data = make_protein_sets(SyntheticProteinConfig(
+        n_refs=n_refs, n_homolog_queries=n_q // 4,
+        n_decoy_queries=n_q - n_q // 4, ref_len_mean=150, ref_len_std=30,
+        sub_rates=(0.05, 0.15), seed=31))
+    cfg = LSHConfig(k=3, T=13, f=32, d=1, max_pairs=1 << 16)
+    qids, qlens = data["query_ids"], data["query_lens"]
+
+    # ---- build + persist (paid once) ------------------------------------
+    t0 = time.time()
+    index = SignatureIndex.build(cfg, data["ref_ids"], data["ref_lens"])
+    index._ensure_built()
+    t_build = time.time() - t0
+    csv(f"serving,{n_refs},{n_q},indexed,build_s,{t_build:.3f}")
+
+    # ---- save -> load -> query must equal in-memory top-k exactly -------
+    fd, path = tempfile.mkstemp(suffix=".npz")
+    os.close(fd)
+    try:
+        index.save(path)
+        loaded = SignatureIndex.load(path, expected_cfg=cfg)
+        sl = ScalLoPS(cfg)
+        q_sigs = sl.signatures(qids, qlens)
+        mem_ids, mem_d, *_ = topk_probe(index, q_sigs, k=k, cap=256)
+        ld_ids, ld_d, *_ = topk_probe(loaded, q_sigs, k=k, cap=256)
+        exact = (np.array_equal(np.asarray(mem_ids), np.asarray(ld_ids))
+                 and np.array_equal(np.asarray(mem_d), np.asarray(ld_d)))
+        csv(f"serving,{n_refs},{n_q},indexed,roundtrip_exact,{int(exact)}")
+        assert exact, "save->load->query must reproduce in-memory top-k"
+    finally:
+        os.unlink(path)
+
+    # ---- indexed repeat-query serving -----------------------------------
+    engine = QueryEngine(loaded, ServingConfig(
+        k=k, max_batch=batch, mode="probe", probe_cap=64))
+    engine.query_batch(qids[:batch], qlens[:batch])       # warm-up/compile
+    engine._stats.batch_sizes.clear()
+    engine._stats.latencies.clear()
+    t0 = time.time()
+    for _ in range(rounds):
+        for i in range(0, n_q, batch):
+            engine.query_batch(qids[i:i + batch], qlens[i:i + batch])
+    t_indexed = (time.time() - t0) / rounds
+    s = engine.stats()
+    csv(f"serving,{n_refs},{n_q},indexed,round_s,{t_indexed:.3f}")
+    csv(f"serving,{n_refs},{n_q},indexed,qps,{s['qps']:.0f}")
+    csv(f"serving,{n_refs},{n_q},indexed,p50_ms,{s['p50_ms']:.2f}")
+    csv(f"serving,{n_refs},{n_q},indexed,p95_ms,{s['p95_ms']:.2f}")
+
+    # ---- from-scratch ScalLoPS: re-prepares the reference db every call -
+    t0 = time.time()
+    for _ in range(rounds):
+        sl2 = ScalLoPS(cfg)           # fresh jit, as a cold caller would
+        rs = np.asarray(sl2.signatures(data["ref_ids"], data["ref_lens"]))
+        qsg = sl2.signatures(qids, qlens)
+        res = sl2.search(qsg, rs)
+        np.asarray(res.pairs)
+    t_scratch = (time.time() - t0) / rounds
+    csv(f"serving,{n_refs},{n_q},from_scratch,round_s,{t_scratch:.3f}")
+    csv(f"serving,{n_refs},{n_q},from_scratch,qps,{n_q/t_scratch:.0f}")
+
+    speedup = t_scratch / max(t_indexed, 1e-9)
+    csv(f"serving,{n_refs},{n_q},indexed,speedup_vs_scratch,{speedup:.1f}")
+    assert t_indexed < t_scratch, (
+        f"indexed serving ({t_indexed:.3f}s/round) must beat from-scratch "
+        f"({t_scratch:.3f}s/round) at {n_refs} refs")
+
+
+if __name__ == "__main__":
+    run()

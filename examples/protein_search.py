@@ -63,6 +63,21 @@ print(f"[ring sweep]   {len(got_ring)} pairs in {time.time()-t0:.2f}s "
       f"(streams refs around the ring, overlap comm/compute)")
 assert got_ring == got
 
+# Single-device join with overflow detection: start with a deliberately
+# small pair buffer; SearchResult.overflowed drives grow-and-retry, so no
+# pair is ever silently truncated.
+mp = 64
+while True:
+    res = sl.search(qry_sigs, ref_sigs, max_pairs=mp)
+    if not bool(res.overflowed):
+        break
+    print(f"[warn] pair buffer overflow at max_pairs={mp} "
+          f"(true count {int(res.count)}) — growing capacity and retrying")
+    mp *= 2
+assert pairs_to_set(res.pairs) == got, "local join must match distributed"
+print(f"[join/local]   {int(res.count)} pairs at max_pairs={mp} "
+      f"(overflow-checked)")
+
 recall = len(got & truth) / len(truth)
 print(f"[quality] recall of planted homologs: {recall:.2%} "
       f"({len(got & truth)}/{len(truth)})")

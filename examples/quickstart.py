@@ -29,7 +29,8 @@ qry_ids, qry_lens = encode_batch(queries)
 sl = ScalLoPS(LSHConfig(k=3, T=13, f=32, d=2, max_pairs=64))
 ref_sigs = sl.signatures(ref_ids, ref_lens)     # MapReduce job 1 (refs)
 qry_sigs = sl.signatures(qry_ids, qry_lens)     # MapReduce job 1 (queries)
-pairs, count = sl.search(qry_sigs, ref_sigs)    # MapReduce job 2
+pairs, count, overflowed = sl.search(qry_sigs, ref_sigs)  # MapReduce job 2
+assert not bool(overflowed), "grow max_pairs and re-run"
 
 print(f"signatures (refs):    {np.asarray(ref_sigs).ravel()}")
 print(f"signatures (queries): {np.asarray(qry_sigs).ravel()}")

@@ -67,7 +67,7 @@ class CheckpointManager:
     # ------------------------------------------------------------ save
     def save(self, step: int, state, *, block: bool = True):
         """Snapshot `state` (any pytree of arrays) at `step`."""
-        flat, treedef = jax.tree.flatten_with_path(state)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
         # device->host copy happens NOW (state may be donated/mutated next step)
         host = [(self._path_str(kp), np.asarray(leaf)) for kp, leaf in flat]
         payload = (step, host, jax.tree.unflatten(treedef, [None] * len(flat)))
@@ -145,7 +145,7 @@ class CheckpointManager:
         with open(d / "manifest.json") as f:
             manifest = json.load(f)
         by_path = {l["path"]: l for l in manifest["leaves"]}
-        flat, treedef = jax.tree.flatten_with_path(like)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         shard_flat = (jax.tree.leaves(sharding_tree)
                       if sharding_tree is not None else [None] * len(flat))
         out = []

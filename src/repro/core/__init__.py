@@ -4,9 +4,10 @@ Public API: LSHConfig, ScalLoPS (pipeline.py); signature generation
 (simhash.py); joins (join.py); distributed MapReduce engine (mapreduce.py).
 """
 from .alphabet import AMINO_ACIDS, ALPHABET_SIZE, PAD, BLOSUM62, encode, decode, encode_batch
-from .pipeline import LSHConfig, ScalLoPS
+from .pipeline import LSHConfig, ScalLoPS, SearchResult
 
 __all__ = [
     "AMINO_ACIDS", "ALPHABET_SIZE", "PAD", "BLOSUM62",
     "encode", "decode", "encode_batch", "LSHConfig", "ScalLoPS",
+    "SearchResult",
 ]

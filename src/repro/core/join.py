@@ -92,14 +92,31 @@ def flip_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int):
 
 
 # ---------------------------------------------------------------- band join
-def band_keys(sigs, f: int, bands: int) -> jnp.ndarray:
+def band_bit_groups(f: int, bands: int, *, interleave: bool = False):
+    """Disjoint partition of bit positions into ``bands`` groups.
+
+    Contiguous (default, the classic banding) or interleaved (bit i -> band
+    i % bands). The pigeonhole guarantee needs only *disjointness*, so both
+    are exact; interleaving matters in practice because signature bit
+    entropy is position-skewed (the Java hashCode's high bits are nearly
+    constant for short words — see simhash.py), and a contiguous high-bit
+    band degenerates into one giant bucket.
+    """
+    if interleave:
+        return [np.arange(b, f, bands) for b in range(bands)]
+    edges = np.linspace(0, f, bands + 1).astype(int)
+    return [np.arange(edges[b], edges[b + 1]) for b in range(bands)]
+
+
+def band_keys(sigs, f: int, bands: int, *,
+              interleave: bool = False) -> jnp.ndarray:
     """Per-band integer keys: (N, bands) uint32 (band width <= 32 bits)."""
     bits = unpack_bits(sigs, f)                      # (N, f) in {0,1}
-    edges = np.linspace(0, f, bands + 1).astype(int)
     keys = []
-    for b in range(bands):
-        seg = bits[:, edges[b]:edges[b + 1]].astype(jnp.uint32)
+    for grp in band_bit_groups(f, bands, interleave=interleave):
+        seg = bits[:, grp].astype(jnp.uint32)
         w = seg.shape[-1]
+        assert w <= 32, "band width must fit a uint32 key"
         keys.append(jnp.sum(seg << jnp.arange(w, dtype=jnp.uint32), axis=-1))
     return jnp.stack(keys, axis=-1)
 
@@ -110,6 +127,11 @@ def band_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int,
 
     Candidates colliding in multiple bands are deduplicated; all candidates
     are exact-filtered by packed Hamming distance.
+
+    Returns (pairs, count, truncated): ``truncated`` is True when a band's
+    candidate emission overran the per-band capacity — the emitted pair set
+    (and ``count`` itself) may then be incomplete, so callers must treat it
+    as overflow and grow ``max_pairs``, even though count <= max_pairs.
     """
     b = bands if bands is not None else d + 1
     assert b >= d + 1, "bands must be >= d+1 for an exact join"
@@ -119,13 +141,16 @@ def band_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int,
     cap = max_pairs  # per-band candidate capacity
 
     all_pairs = []
+    truncated = jnp.zeros((), bool)
     for band in range(b):
         order = jnp.argsort(rk[:, band])
         rks = rk[:, band][order]
         rids = order.astype(jnp.int32)
         left = jnp.searchsorted(rks, qk[:, band], side="left")
         right = jnp.searchsorted(rks, qk[:, band], side="right")
-        p2, _ = _emit_from_ranges(left, (right - left).astype(jnp.int32), rids, cap)
+        p2, emitted = _emit_from_ranges(
+            left, (right - left).astype(jnp.int32), rids, cap)
+        truncated = truncated | (emitted > cap)
         all_pairs.append(p2)
     cand = jnp.concatenate(all_pairs, axis=0)        # (b*cap, 2)
 
@@ -150,7 +175,7 @@ def band_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int,
          jnp.where(ok, rv[order2], -1),
          jnp.where(ok, dist[order2], -1)], axis=-1
     ).astype(jnp.int32)
-    return out, count
+    return out, count, truncated
 
 
 def pairs_to_set(pairs) -> set[tuple[int, int]]:

@@ -57,8 +57,8 @@ def shuffle_records(keys, payload, *, axis_name: str, n_shards: int,
     order = jnp.argsort(jnp.where(dst < 0, n_shards, dst), stable=True)
     dst_s = dst[order]
     seg_start = jnp.concatenate([jnp.ones(1, bool), dst_s[1:] != dst_s[:-1]])
-    pos = jnp.arange(n) - jnp.maximum.accumulate(
-        jnp.where(seg_start, jnp.arange(n), 0)
+    pos = jnp.arange(n) - jax.lax.cummax(
+        jnp.where(seg_start, jnp.arange(n), 0), axis=0
     )
     ok = (dst_s >= 0) & (pos < capacity)
     send_k = jnp.full((n_shards, capacity), EMPTY, jnp.uint32)
@@ -131,7 +131,7 @@ def reduce_join(keys, payload, *, max_pairs: int):
         (qflag & valid).astype(jnp.int32))
     nq = qcount_per_seg[seg_id]
     # Index of the first row of this row's bucket.
-    seg_start_idx = jnp.maximum.accumulate(jnp.where(seg, jnp.arange(n), 0))
+    seg_start_idx = jax.lax.cummax(jnp.where(seg, jnp.arange(n), 0), axis=0)
     # Each *reference* row emits nq pairs (its bucket's queries).
     emit_counts = jnp.where(valid & ~qflag, nq, 0)
     offsets = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(emit_counts)])

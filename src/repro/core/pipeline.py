@@ -4,14 +4,21 @@
     sl = ScalLoPS(cfg)
     ref_sigs = sl.signatures(ref_ids_padded, ref_lengths)      # job 1 (refs)
     qry_sigs = sl.signatures(qry_ids_padded, qry_lengths)      # job 1 (queries)
-    pairs, count = sl.search(qry_sigs, ref_sigs)               # job 2
+    pairs, count, overflowed = sl.search(qry_sigs, ref_sigs)   # job 2
 
 Reference signatures are reusable across query sets (paper §5.3: the
-database-preparation analogue is paid once).
+database-preparation analogue is paid once); `repro.index` builds that reuse
+into a persistent, servable artifact.
+
+`search` returns a SearchResult: the fixed-capacity pair buffer, the *true*
+match count, and an `overflowed` flag — True when count exceeded the buffer
+and rows were truncated, so callers can grow capacity and retry instead of
+silently losing pairs (DESIGN.md §5 "no silent caps").
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +48,14 @@ class LSHConfig:
             assert self.f <= 32, "java hashCode yields 32 bits (paper); use splitmix"
 
 
+class SearchResult(NamedTuple):
+    """Fixed-capacity join result. ``count`` is the true number of matches;
+    ``overflowed`` is True iff the buffer truncated rows (grow + retry)."""
+    pairs: jax.Array        # (max_pairs, >=2) int32, -1 past the stored rows
+    count: jax.Array        # () int32 — true match count
+    overflowed: jax.Array   # () bool — buffer truncated
+
+
 class ScalLoPS:
     def __init__(self, cfg: LSHConfig):
         self.cfg = cfg
@@ -63,22 +78,32 @@ class ScalLoPS:
 
     # ---- job 2: Signature Processor ----
     def search(self, q_sigs, r_sigs, *, max_pairs: int | None = None,
-               q_valid=None, r_valid=None):
+               q_valid=None, r_valid=None) -> SearchResult:
         """Join the signature sets. q_valid/r_valid: optional bool masks —
         pairs touching invalid (zero-feature) sequences are dropped, per the
-        paper's non-zero-signature rule."""
+        paper's non-zero-signature rule. Returns a :class:`SearchResult`;
+        check ``overflowed`` before trusting the pair buffer to be complete.
+        """
         cfg = self.cfg
         mp = max_pairs or cfg.max_pairs
+        truncated = jnp.zeros((), bool)
         if cfg.join_method == "flip":
             pairs, count = flip_join(q_sigs, r_sigs, f=cfg.f, d=cfg.d,
                                      max_pairs=mp)
         elif cfg.join_method == "band":
-            pairs, count = band_join(q_sigs, r_sigs, f=cfg.f, d=cfg.d,
-                                     max_pairs=mp)
+            # band_join's count is computed from a capacity-bounded candidate
+            # buffer, so it can undercount once a band overran capacity; the
+            # truncated flag covers that case.
+            pairs, count, truncated = band_join(q_sigs, r_sigs, f=cfg.f,
+                                                d=cfg.d, max_pairs=mp)
         elif cfg.join_method == "dense":
             pairs, count = threshold_pairs(q_sigs, r_sigs, cfg.d, mp)
         else:
             raise ValueError(cfg.join_method)
+        # Overflow is judged on the raw join count: once the buffer
+        # truncates, any downstream count (including the masked one below)
+        # undercounts.
+        overflowed = (count > mp) | truncated
         if q_valid is not None or r_valid is not None:
             qv = (jnp.asarray(q_valid) if q_valid is not None
                   else jnp.ones(q_sigs.shape[0], bool))
@@ -89,4 +114,4 @@ class ScalLoPS:
                 & rv[jnp.maximum(pairs[:, 1], 0)]
             pairs = jnp.where(ok[:, None], pairs, -1)
             count = jnp.sum(ok.astype(jnp.int32))
-        return pairs, count
+        return SearchResult(pairs, count, overflowed)

@@ -81,7 +81,14 @@ def dedup_corpus(tokens, lengths, *, k: int = 4, f: int = 128, d: int = 28,
     index is dropped (first occurrence wins — deterministic).
     """
     sigs = token_signatures(tokens, lengths, k=k, f=f)
-    pairs, _ = band_join(sigs, sigs, f=f, d=d, max_pairs=max_pairs)
+    # Grow-and-retry on overflow: a truncated self-join would silently keep
+    # real duplicates in the corpus (no silent caps).
+    while True:
+        pairs, count, truncated = band_join(sigs, sigs, f=f, d=d,
+                                            max_pairs=max_pairs)
+        if not (bool(truncated) or int(count) > max_pairs):
+            break
+        max_pairs *= 2
     p = np.asarray(pairs)
     N = tokens.shape[0]
     keep = np.ones(N, bool)

@@ -1,0 +1,25 @@
+"""repro.index — persistent sharded LSH index + batched query serving.
+
+The paper's economic insight (§5.3) is that reference-database signature
+generation is paid once and amortized across query sets. This subsystem makes
+that a first-class artifact:
+
+* ``store``   — :class:`SignatureIndex`: immutable packed signatures +
+  per-band sorted bucket keys with CSR offsets, npz persistence keyed by a
+  config fingerprint, incremental ``add()`` with deferred re-sort.
+* ``shard``   — :class:`ShardedIndex`: round-robin device placement over a
+  mesh; queries fan out with ``shard_map``, results gather with global ids.
+* ``service`` — :class:`QueryEngine`: micro-batched serving with fixed-shape
+  padding (jit-cache stability), bucket probing, exact Hamming filtering,
+  fixed-capacity top-k, overflow grow-and-retry, optional Smith-Waterman
+  re-rank, and latency/throughput stats.
+"""
+from .store import IndexConfigMismatch, SignatureIndex, config_fingerprint
+from .shard import ShardedIndex
+from .service import QueryEngine, ServingConfig, topk_dense, topk_probe
+
+__all__ = [
+    "SignatureIndex", "IndexConfigMismatch", "config_fingerprint",
+    "ShardedIndex",
+    "QueryEngine", "ServingConfig", "topk_dense", "topk_probe",
+]

@@ -1,0 +1,345 @@
+"""Batched query serving over a :class:`~repro.index.store.SignatureIndex`.
+
+The serving path (paper §5.3's "database prepared once" made operational):
+
+  submit -> micro-batch queue -> pad to a fixed shape ladder (jit-cache
+  stability) -> signature generation -> bucket probe (CSR searchsorted) ->
+  exact Hamming filter -> fixed-capacity top-k -> optional Smith-Waterman
+  re-rank of the top-k.
+
+Two exact-filter paths:
+
+* ``dense`` — the Pallas ``hamming_dist_kernel`` sweeps the query batch
+  against the whole index (:func:`repro.kernels.ops.all_pairs_hamming`);
+  right when the index fits the arithmetic-intensity window.
+* ``probe`` — CSR bucket probing generates candidates; only candidate
+  signatures are gathered and popcount-filtered. Right at scale.
+
+Capacity discipline (DESIGN.md §5 "no silent caps"): the probe reports
+overflow when a bucket exceeds the candidate cap and the engine grows the
+cap and retries; the pair-dump path (:meth:`QueryEngine.search_pairs`) uses
+the ``overflowed`` flag of :class:`~repro.core.pipeline.SearchResult` the
+same way.
+"""
+from __future__ import annotations
+
+import functools
+import time
+import warnings
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.alphabet import PAD, encode
+from ..core.hamming import hamming_distance
+from ..core.pipeline import ScalLoPS
+from ..kernels import ops
+from .store import SignatureIndex
+
+BIG = 1 << 30  # sentinel distance for masked slots (int32-safe)
+
+
+# ---------------------------------------------------------------- primitives
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _probe_csr(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
+    """One band's bucket probe: searchsorted into the CSR unique keys.
+
+    qkeys (B,) uint32 -> (cand (B, cap) int32 with -1 padding,
+    bucket_size (B,) int32 — the *true* matched-bucket size, which may
+    exceed cap; the caller detects truncation from it).
+    """
+    B = qkeys.shape[0]
+    U = csr_keys.shape[0]
+    E = csr_ids.shape[0]
+    if U == 0 or E == 0:
+        return (jnp.full((B, cap), -1, jnp.int32), jnp.zeros(B, jnp.int32))
+    pos = jnp.searchsorted(csr_keys, qkeys)
+    pos_c = jnp.clip(pos, 0, U - 1)
+    match = (pos < U) & (csr_keys[pos_c] == qkeys)
+    start = csr_offsets[pos_c]
+    end = jnp.where(match, csr_offsets[pos_c + 1], start)
+    size = (end - start).astype(jnp.int32)
+    idx = start[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    ok = idx < end[:, None]
+    cand = jnp.where(ok, csr_ids[jnp.clip(idx, 0, E - 1)], -1)
+    return cand, size
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk_from_candidates(q_sigs, cand, ref_sigs, ref_valid, *, k: int):
+    """Exact-filter candidates and keep the k nearest per query.
+
+    cand (B, C) int32 with -1 padding (duplicates across bands allowed —
+    deduplicated here). Returns (ids (B, k) int32 with -1 padding,
+    dists (B, k) int32 with -1 padding).
+    """
+    B, C = cand.shape
+    safe = jnp.maximum(cand, 0)
+    dist = hamming_distance(q_sigs[:, None, :], ref_sigs[safe])   # (B, C)
+    ok = (cand >= 0) & ref_valid[safe]
+    # Dedup within each row: sort by candidate id, mask repeats.
+    sort_key = jnp.where(ok, cand, jnp.int32(2**31 - 1))
+    order = jnp.argsort(sort_key, axis=1)
+    cs = jnp.take_along_axis(cand, order, axis=1)
+    ds = jnp.take_along_axis(dist, order, axis=1)
+    oks = jnp.take_along_axis(ok, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((B, 1), bool), cs[:, 1:] == cs[:, :-1]], axis=1)
+    oks = oks & ~dup
+    dvals = jnp.where(oks, ds, BIG)
+    return _finalize_topk(dvals, cs, k)
+
+
+def _finalize_topk(dvals, id_source, k: int):
+    """Shared top-k tail: (B, C) distances (BIG = masked) + per-slot ids ->
+    ((B, k) ids, (B, k) dists), -1-padded past the valid entries.
+    ``id_source=None`` means slot index == reference id (dense path)."""
+    C = dvals.shape[1]
+    kk = min(k, C)
+    neg, idx = jax.lax.top_k(-dvals, kk)
+    nd = -neg
+    nid = (idx.astype(jnp.int32) if id_source is None
+           else jnp.take_along_axis(id_source, idx, axis=1))
+    nid = jnp.where(nd < BIG, nid, -1)
+    nd = jnp.where(nd < BIG, nd, -1)
+    if kk < k:
+        pad = ((0, 0), (0, k - kk))
+        nid = jnp.pad(nid, pad, constant_values=-1)
+        nd = jnp.pad(nd, pad, constant_values=-1)
+    return nid, nd
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk_from_dists(dist, ref_valid, *, k: int):
+    """(B, N) distances -> top-k (ids, dists) with invalid refs masked."""
+    dvals = jnp.where(ref_valid[None, :], dist, BIG)
+    return _finalize_topk(dvals, None, k)
+
+
+def topk_dense(index: SignatureIndex, q_sigs, *, k: int):
+    """Exact top-k via the Pallas all-pairs Hamming kernel (whole index)."""
+    dist = ops.all_pairs_hamming(jnp.asarray(q_sigs), index.device_sigs)
+    return _topk_from_dists(dist, index.device_valid, k=k)
+
+
+def topk_probe(index: SignatureIndex, q_sigs, *, k: int, cap: int,
+               max_cap: int = 1 << 14):
+    """Top-k via bucket probing, growing the candidate cap on overflow.
+
+    Returns (ids, dists, final_cap, truncated). Exact within the layout's
+    guarantee — every reference within Hamming d of the query shares a
+    bucket, so the top-k among candidates contains all true neighbors
+    within d — *unless* ``truncated`` is True: a bucket exceeded ``max_cap``
+    and candidates were dropped (no silent caps: the flag makes it
+    observable; raise ``max_cap`` to restore exactness).
+    """
+    q_sigs = jnp.asarray(q_sigs)
+    while True:
+        cand, overflowed = index.probe(q_sigs, cap=cap)
+        if not bool(overflowed) or cap >= max_cap:
+            break
+        cap = min(cap * 2, max_cap)     # grow-and-retry
+    ids, dists = _topk_from_candidates(
+        q_sigs, cand, index.device_sigs, index.device_valid, k=k)
+    return ids, dists, cap, bool(overflowed)
+
+
+# ---------------------------------------------------------------- serving
+@dataclass
+class ServingConfig:
+    k: int = 10
+    max_batch: int = 64
+    batch_ladder: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+    len_quantum: int = 64           # pad query length to multiples of this
+    probe_cap: int = 32             # initial candidates per band per query
+    max_probe_cap: int = 1 << 14
+    dense_threshold: int = 1024     # "auto": dense kernel below this size
+    mode: str = "auto"              # "probe" | "dense" | "auto"
+    rerank: bool = False            # Smith-Waterman re-rank of the top-k
+
+
+@dataclass
+class _Stats:
+    batch_sizes: list = field(default_factory=list)
+    latencies: list = field(default_factory=list)
+
+
+class QueryEngine:
+    """Micro-batched query serving over a built or loaded index.
+
+    ``submit()`` enqueues raw sequences (strings or encoded int8 rows);
+    ``flush()`` drains the queue in fixed-shape micro-batches and returns
+    per-query results; ``query_batch()`` is the synchronous batch entry.
+    ``ref_seqs=(ids, lens)`` enables Smith-Waterman re-ranking.
+    """
+
+    def __init__(self, index: SignatureIndex, cfg: ServingConfig | None = None,
+                 *, ref_seqs=None, sharded=None):
+        self.index = index
+        self.cfg = cfg or ServingConfig()
+        self.sl = ScalLoPS(index.cfg)
+        self.ref_seqs = ref_seqs
+        self.sharded = sharded          # optional ShardedIndex fan-out path
+        self._probe_cap = self.cfg.probe_cap
+        self._queue: list[tuple[np.ndarray, int]] = []
+        self._stats = _Stats()
+        if self.cfg.rerank and ref_seqs is None:
+            raise ValueError("rerank=True needs ref_seqs=(ref_ids, ref_lens)")
+
+    # ------------------------------------------------------------ queue
+    def submit(self, seq) -> None:
+        """Enqueue one query (amino-acid string or encoded int8 array)."""
+        if isinstance(seq, str):
+            row = np.asarray(encode(seq), np.int8)
+        else:
+            row = np.asarray(seq, np.int8).reshape(-1)
+        self._queue.append((row, len(row)))
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self):
+        """Serve every queued query; returns [(ids (k,), dists (k,)), ...]
+        in submission order."""
+        out = []
+        queue, self._queue = self._queue, []
+        for i in range(0, len(queue), self.cfg.max_batch):
+            chunk = queue[i:i + self.cfg.max_batch]
+            L = max(l for _, l in chunk)
+            ids = np.full((len(chunk), max(L, 1)), PAD, np.int8)
+            lens = np.zeros(len(chunk), np.int32)
+            for j, (row, l) in enumerate(chunk):
+                ids[j, :l] = row
+                lens[j] = l
+            nid, nd = self.query_batch(ids, lens)
+            out.extend((nid[j], nd[j]) for j in range(len(chunk)))
+        return out
+
+    # ------------------------------------------------------------ shaping
+    def _pad_shapes(self, ids, lens):
+        """Pad batch and length to the fixed-shape ladder (jit stability)."""
+        B0, L0 = ids.shape
+        ladder = [b for b in self.cfg.batch_ladder if b >= B0]
+        B = min(ladder) if ladder else self.cfg.max_batch
+        q = self.cfg.len_quantum
+        L = max(q, -(-L0 // q) * q)
+        out = np.full((B, L), PAD, np.int8)
+        out[:B0, :L0] = ids
+        olens = np.zeros(B, np.int32)
+        olens[:B0] = lens
+        return out, olens
+
+    # ------------------------------------------------------------ serving
+    def query_batch(self, ids, lens):
+        """Serve one batch: (B0, L) int8 + (B0,) lengths ->
+        (neighbor_ids (B0, k), neighbor_dists (B0, k)) int32 numpy, -1 padded.
+        Queries with zero neighbour features (paper §5.2) get all -1."""
+        ids = np.asarray(ids, np.int8)
+        lens = np.asarray(lens, np.int32)
+        B0 = ids.shape[0]
+        if B0 > self.cfg.max_batch:
+            parts = [self.query_batch(ids[i:i + self.cfg.max_batch],
+                                      lens[i:i + self.cfg.max_batch])
+                     for i in range(0, B0, self.cfg.max_batch)]
+            return (np.concatenate([p[0] for p in parts]),
+                    np.concatenate([p[1] for p in parts]))
+
+        t0 = time.perf_counter()
+        pids, plens = self._pad_shapes(ids, lens)
+        q_sigs = self.sl.signatures(pids, plens)
+        q_valid = np.asarray(self.sl.feature_counts(pids, plens)) > 0
+
+        k = self.cfg.k
+        if self.sharded is not None:
+            nid, nd = self.sharded.topk(q_sigs, k=k)
+        elif self._mode() == "dense":
+            nid, nd = topk_dense(self.index, q_sigs, k=k)
+        else:
+            nid, nd, self._probe_cap, truncated = topk_probe(
+                self.index, q_sigs, k=k, cap=self._probe_cap,
+                max_cap=self.cfg.max_probe_cap)
+            if truncated:
+                warnings.warn(
+                    f"probe candidates truncated at max_probe_cap="
+                    f"{self.cfg.max_probe_cap}; top-k may miss neighbors — "
+                    f"raise ServingConfig.max_probe_cap", RuntimeWarning,
+                    stacklevel=2)
+        nid = np.array(nid)     # writable host copies
+        nd = np.array(nd)
+        nid[~q_valid] = -1
+        nd[~q_valid] = -1
+        nid, nd = nid[:B0], nd[:B0]
+        if self.cfg.rerank:
+            nid, nd = self._rerank(ids, lens, nid, nd)
+
+        dt = time.perf_counter() - t0
+        self._stats.batch_sizes.append(B0)
+        self._stats.latencies.append(dt)
+        return nid, nd
+
+    def _mode(self) -> str:
+        if self.cfg.mode != "auto":
+            return self.cfg.mode
+        return "dense" if self.index.size <= self.cfg.dense_threshold \
+            else "probe"
+
+    # ------------------------------------------------------------ pair dump
+    def search_pairs(self, q_ids, q_lens, *, max_pairs: int | None = None,
+                     max_grow: int = 1 << 22):
+        """Classic unordered pair dump (`ScalLoPS.search` semantics) against
+        the indexed references, honouring the result's ``overflowed`` flag:
+        capacity grows and the join retries until nothing is truncated."""
+        q_sigs = self.sl.signatures(np.asarray(q_ids, np.int8),
+                                    np.asarray(q_lens, np.int32))
+        q_valid = np.asarray(self.sl.feature_counts(q_ids, q_lens)) > 0
+        mp = max_pairs or self.index.cfg.max_pairs
+        while True:
+            res = self.sl.search(q_sigs, self.index.device_sigs,
+                                 max_pairs=mp, q_valid=q_valid,
+                                 r_valid=self.index.device_valid)
+            if not bool(res.overflowed) or mp >= max_grow:
+                return res
+            mp = min(mp * 2, max_grow)  # grow-and-retry
+
+    # ------------------------------------------------------------ rerank
+    def _rerank(self, ids, lens, nid, nd):
+        """Reorder each query's top-k by Smith-Waterman score (descending)."""
+        from ..align.smith_waterman import sw_align_batch
+        ref_ids, ref_lens = self.ref_seqs
+        B, K = nid.shape
+        qi, ki = np.nonzero(nid >= 0)
+        if len(qi) == 0:
+            return nid, nd
+        rid = nid[qi, ki]
+        Lq = ids.shape[1]
+        Lr = ref_ids.shape[1]
+        qmat = np.full((len(qi), Lq), PAD, np.int8)
+        rmat = np.full((len(qi), Lr), PAD, np.int8)
+        for n, (a, r) in enumerate(zip(qi, rid)):
+            qmat[n] = ids[a]
+            rmat[n] = ref_ids[r]
+        scores = sw_align_batch(qmat, rmat)
+        smat = np.full((B, K), -np.inf)
+        smat[qi, ki] = scores
+        order = np.argsort(-smat, axis=1, kind="stable")
+        return (np.take_along_axis(nid, order, axis=1),
+                np.take_along_axis(nd, order, axis=1))
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        """Latency/throughput summary over every batch served so far."""
+        lat = np.asarray(self._stats.latencies)
+        nq = int(np.sum(self._stats.batch_sizes))
+        if len(lat) == 0:
+            return dict(n_queries=0, n_batches=0, qps=0.0,
+                        p50_ms=0.0, p95_ms=0.0, mean_ms=0.0)
+        return dict(
+            n_queries=nq,
+            n_batches=len(lat),
+            qps=nq / float(lat.sum()),
+            p50_ms=float(np.percentile(lat, 50) * 1e3),
+            p95_ms=float(np.percentile(lat, 95) * 1e3),
+            mean_ms=float(lat.mean() * 1e3),
+        )

@@ -1,0 +1,120 @@
+"""Device-sharded index placement: queries fan out, results gather globally.
+
+Placement is round-robin by reference id (global id g lives on shard
+``g % n_shards`` at local slot ``g // n_shards``), matching the
+``key % n_shards`` ownership convention of :mod:`repro.core.mapreduce`.
+Round-robin keeps every shard's load balanced regardless of insertion order.
+
+Queries are replicated to every shard with ``shard_map``; each shard sweeps
+its resident signatures (XOR + popcount on the VPU, the same hot loop the
+Pallas kernel compiles on TPU) and returns its local top-k *with global
+ids*; the host merges the per-shard top-k lists into the final top-k — a
+classic scatter-gather serving tree. The placement tracks the backing
+:class:`SignatureIndex`: references appended with ``add()`` are re-placed
+automatically on the next ``topk`` (same deferred-rebuild discipline as the
+CSR buckets).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.hamming import hamming_distance
+from ..util import shard_map_compat
+from .service import BIG, _finalize_topk
+from .store import SignatureIndex
+
+
+class ShardedIndex:
+    """A :class:`SignatureIndex` laid out over a device mesh."""
+
+    def __init__(self, index: SignatureIndex, mesh=None,
+                 *, axis_name: str = "data"):
+        self.index = index
+        self.axis_name = axis_name
+        if mesh is None:
+            n = jax.device_count()
+            mesh = jax.make_mesh((n,), (axis_name,))
+        self.mesh = mesh
+        self.n_shards = mesh.shape[axis_name]
+        self._snapshot_size = -1        # forces first placement
+        self._fn_cache = {}             # (B, kk) -> jitted fan-out program
+        self._place()
+
+    def _place(self) -> None:
+        """(Re)distribute the index rows round-robin across shards."""
+        index = self.index
+        index._ensure_built()
+        n = self.n_shards
+        N, nw = index.sigs.shape
+        Nl = max(-(-N // n), 1)         # local rows per shard (>=1 for SPMD)
+        sig_p = np.full((Nl * n, nw), 0xFFFFFFFF, np.uint32)
+        val_p = np.zeros(Nl * n, bool)
+        sig_p[:N] = index.sigs
+        val_p[:N] = index.valid
+        # Round-robin: padded row j*n + s -> shard s, local slot j. Reshape
+        # (Nl, n) -> transpose puts shard s's rows [s, s+n, s+2n, ...]
+        # contiguous; shard_map's P(axis) split then hands shard s exactly
+        # that block.
+        self._local_sigs = jnp.asarray(
+            sig_p.reshape(Nl, n, nw).transpose(1, 0, 2).reshape(n * Nl, nw))
+        self._local_valid = jnp.asarray(
+            val_p.reshape(Nl, n).T.reshape(n * Nl))
+        self.local_rows = Nl
+        self._snapshot_size = N
+        self._fn_cache.clear()          # shapes may have changed
+
+    def _refresh_if_stale(self) -> None:
+        if self.index._dirty or self.index.size != self._snapshot_size:
+            self._place()
+
+    @property
+    def size(self) -> int:
+        return self.index.size
+
+    def _fan_out_fn(self, B: int, kk: int):
+        """Jitted shard_map program for a (B, kk) query shape (cached —
+        this is the serving hot path, so no per-call re-trace)."""
+        key = (B, kk)
+        fn = self._fn_cache.get(key)
+        if fn is not None:
+            return fn
+        n, ax = self.n_shards, self.axis_name
+
+        def shard_fn(qs, rs, rv):
+            s = jax.lax.axis_index(ax)
+            dist = hamming_distance(qs[:, None, :], rs[None, :, :])  # (B, Nl)
+            dist = jnp.where(rv[None, :], dist, BIG)
+            neg, idx = jax.lax.top_k(-dist, kk)
+            d = -neg
+            gid = idx.astype(jnp.int32) * n + s          # local -> global id
+            gid = jnp.where(d < BIG, gid, -1)
+            d = jnp.where(d < BIG, d, BIG)
+            return gid, d
+
+        fn = jax.jit(shard_map_compat(
+            shard_fn, self.mesh,
+            in_specs=(P(), P(ax), P(ax)),
+            out_specs=(P(ax), P(ax)),
+        ))
+        self._fn_cache[key] = fn
+        return fn
+
+    def topk(self, q_sigs, *, k: int):
+        """Global top-k: (B, nw) query signatures -> ((B, k) global ids,
+        (B, k) dists), both -1-padded, merged across shards."""
+        self._refresh_if_stale()
+        q_sigs = jnp.asarray(q_sigs)
+        B = q_sigs.shape[0]
+        n = self.n_shards
+        kk = min(k, self.local_rows)
+        fn = self._fan_out_fn(B, kk)
+        gids, dists = fn(q_sigs, self._local_sigs, self._local_valid)
+        # out axis 0 concatenates shards: (n*B, kk) -> (B, n*kk)
+        gids = jnp.transpose(gids.reshape(n, B, kk), (1, 0, 2)).reshape(B, -1)
+        dists = jnp.transpose(dists.reshape(n, B, kk), (1, 0, 2)).reshape(B, -1)
+        # merge: global top-k over the per-shard winners (shared tail with
+        # the single-device service paths)
+        return _finalize_topk(dists, gids, k)

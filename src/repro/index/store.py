@@ -1,0 +1,286 @@
+"""Immutable signature index over a reference database (build once, query many).
+
+Structure (DESIGN.md §2 "HDFS -> on-device buffers + manifests"):
+
+* packed signatures ``sigs`` (N, f//32) uint32 — job 1's output, persisted;
+* ``valid`` (N,) bool — the paper's non-zero-signature rule (§5.2): sequences
+  with zero neighbour features collapse to the all-ones fingerprint and are
+  excluded from every bucket;
+* per-band sorted buckets in CSR form: for each band, the sorted unique
+  bucket ``keys`` (U,), ``offsets`` (U+1,) into ``ids`` (E,) — the reference
+  ids grouped by bucket. Two layouts:
+
+  - ``layout="band"`` (default): keys from :func:`repro.core.join.band_keys`
+    with ``bands >= d+1`` — the pigeonhole guarantee of ``band_join`` (any
+    pair within Hamming d agrees exactly on >= 1 band), so a probe of all
+    bands has no false negatives within d.
+  - ``layout="flip"``: the paper-faithful expansion — every reference emits
+    all C(f, <=d) bit-flips (:func:`repro.core.join.flip_masks`) as keys and
+    queries probe with their raw signature; one sorted array, exact, no
+    duplicate candidates. f <= 32.
+
+Persistence is a single ``.npz`` keyed by a *config fingerprint* (the LSH
+parameters that determine signature semantics). Loading an index against a
+different :class:`~repro.core.pipeline.LSHConfig` raises
+:class:`IndexConfigMismatch` — a stale index never silently serves wrong
+candidates.
+
+``add()`` appends new references cheaply (signatures only) and defers the
+bucket re-sort until the next probe/save (amortized growth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.join import band_keys, flip_masks
+from ..core.pipeline import LSHConfig, ScalLoPS
+
+FORMAT_VERSION = 1
+
+# Fields of LSHConfig that determine signature/bucket semantics. Serving-time
+# knobs (max_pairs, join_method) are deliberately excluded: changing them must
+# not invalidate a persisted index.
+_FINGERPRINT_FIELDS = ("k", "T", "f", "d", "scheme", "siggen_method")
+
+
+class IndexConfigMismatch(RuntimeError):
+    """A persisted index was loaded against an incompatible LSHConfig."""
+
+
+def config_fingerprint(cfg: LSHConfig, *, layout: str, bands: int,
+                       interleave: bool = True) -> str:
+    """Stable 16-hex-digit fingerprint of the index-relevant config."""
+    blob = json.dumps({
+        "cfg": {f: getattr(cfg, f) for f in _FINGERPRINT_FIELDS},
+        "layout": layout, "bands": bands, "interleave": interleave,
+        "format": FORMAT_VERSION,
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _sort_bucket(keys: np.ndarray, ids: np.ndarray):
+    """Group (key, id) entries into CSR: (unique keys, offsets, sorted ids)."""
+    order = np.argsort(keys, kind="stable")
+    ks, sids = keys[order], ids[order]
+    uk, first = np.unique(ks, return_index=True)
+    offsets = np.concatenate([first, [len(ks)]]).astype(np.int32)
+    return uk.astype(np.uint32), offsets, sids.astype(np.int32)
+
+
+class SignatureIndex:
+    """Build-once reference index over packed LSH signatures.
+
+    Use :meth:`build` (from sequences) or :meth:`load` (from disk); query via
+    :meth:`probe` / the serving layer (:mod:`repro.index.service`).
+    """
+
+    def __init__(self, cfg: LSHConfig, sigs: np.ndarray, valid: np.ndarray,
+                 *, layout: str = "band", bands: int | None = None,
+                 interleave: bool = True):
+        if layout not in ("band", "flip"):
+            raise ValueError(f"unknown index layout {layout!r}")
+        if layout == "flip" and cfg.f > 32:
+            raise ValueError("flip layout needs f <= 32 (paper used f=32)")
+        self.cfg = cfg
+        self.layout = layout
+        # Interleaved banding (bit i -> band i % bands) spreads the
+        # position-skewed signature-bit entropy evenly; see band_bit_groups.
+        self.interleave = bool(interleave)
+        self.bands = int(bands if bands is not None else max(cfg.d + 1, 1))
+        if layout == "band" and self.bands < cfg.d + 1:
+            raise ValueError("bands must be >= d+1 for an exact probe")
+        self.sigs = np.ascontiguousarray(np.asarray(sigs, np.uint32))
+        self.valid = np.asarray(valid, bool).reshape(-1).copy()
+        assert self.sigs.shape == (self.valid.shape[0], cfg.f // 32)
+        self._dirty = True          # buckets need (re)building
+        self._csr_np = None         # list[(keys, offsets, ids)] numpy
+        self._csr_dev = None        # same, device arrays
+        self._dev_sigs = None
+        self._dev_valid = None
+        self._pipeline = None
+
+    # ------------------------------------------------------------ properties
+    @property
+    def size(self) -> int:
+        return self.sigs.shape[0]
+
+    @property
+    def n_bands(self) -> int:
+        return 1 if self.layout == "flip" else self.bands
+
+    @property
+    def fingerprint(self) -> str:
+        return config_fingerprint(self.cfg, layout=self.layout,
+                                   bands=self.bands,
+                                   interleave=self.interleave)
+
+    @property
+    def device_sigs(self) -> jnp.ndarray:
+        self._ensure_built()
+        return self._dev_sigs
+
+    @property
+    def device_valid(self) -> jnp.ndarray:
+        self._ensure_built()
+        return self._dev_valid
+
+    # ------------------------------------------------------------ build
+    @classmethod
+    def build(cls, cfg: LSHConfig, ref_ids, ref_lens, *,
+              layout: str = "band", bands: int | None = None,
+              interleave: bool = True) -> "SignatureIndex":
+        """Run job 1 (signature generation + validity) over the reference set."""
+        sl = ScalLoPS(cfg)
+        sigs = np.asarray(sl.signatures(ref_ids, ref_lens))
+        valid = np.asarray(sl.feature_counts(ref_ids, ref_lens)) > 0
+        idx = cls(cfg, sigs, valid, layout=layout, bands=bands,
+                  interleave=interleave)
+        idx._pipeline = sl
+        return idx
+
+    def add(self, ref_ids, ref_lens) -> None:
+        """Incremental growth: append signatures now, re-sort buckets lazily
+        on the next probe/save (deferred, amortized)."""
+        if self._pipeline is None:
+            self._pipeline = ScalLoPS(self.cfg)
+        sl = self._pipeline
+        new_sigs = np.asarray(sl.signatures(ref_ids, ref_lens))
+        new_valid = np.asarray(sl.feature_counts(ref_ids, ref_lens)) > 0
+        self.sigs = np.concatenate([self.sigs, new_sigs], axis=0)
+        self.valid = np.concatenate([self.valid, new_valid], axis=0)
+        self._dirty = True
+
+    def _build_csr(self) -> list:
+        valid_ids = np.nonzero(self.valid)[0].astype(np.int32)
+        if self.layout == "flip":
+            masks = flip_masks(self.cfg.f, self.cfg.d)[:, 0]      # (M,) uint32
+            if len(valid_ids) == 0:
+                return [_sort_bucket(np.zeros(0, np.uint32),
+                                     np.zeros(0, np.int32))]
+            keys = (self.sigs[valid_ids, 0][:, None]
+                    ^ masks[None, :]).ravel()
+            ids = np.repeat(valid_ids, masks.shape[0])
+            return [_sort_bucket(keys, ids)]
+        if len(valid_ids) == 0:
+            return [_sort_bucket(np.zeros(0, np.uint32), np.zeros(0, np.int32))
+                    for _ in range(self.bands)]
+        kb = np.asarray(band_keys(jnp.asarray(self.sigs[valid_ids]),
+                                  self.cfg.f, self.bands,
+                                  interleave=self.interleave))    # (V, bands)
+        return [_sort_bucket(kb[:, b], valid_ids) for b in range(self.bands)]
+
+    def _ensure_built(self) -> None:
+        if not self._dirty and self._csr_dev is not None:
+            return
+        self._csr_np = self._build_csr()
+        self._csr_dev = [tuple(jnp.asarray(a) for a in csr)
+                         for csr in self._csr_np]
+        self._dev_sigs = jnp.asarray(self.sigs)
+        self._dev_valid = jnp.asarray(self.valid)
+        self._dirty = False
+
+    # ------------------------------------------------------------ probing
+    def query_keys(self, q_sigs) -> jnp.ndarray:
+        """Per-band probe keys for a query batch: (n_bands, B) uint32."""
+        q_sigs = jnp.asarray(q_sigs)
+        if self.layout == "flip":
+            return q_sigs[:, 0][None, :]
+        return band_keys(q_sigs, self.cfg.f, self.bands,
+                         interleave=self.interleave).T
+
+    def probe(self, q_sigs, *, cap: int):
+        """Candidate generation: for each query, up to ``cap`` reference ids
+        per band whose bucket key matches.
+
+        Returns (cand (B, n_bands*cap) int32 with -1 padding, overflowed
+        0-d bool — True iff some matched bucket held more than ``cap``
+        entries, i.e. candidates were truncated and the caller should grow
+        ``cap`` and retry).
+        """
+        from .service import _probe_csr  # jitted probe primitive
+        self._ensure_built()
+        qk = self.query_keys(q_sigs)
+        cands, sizes = [], []
+        for b, (keys, offsets, ids) in enumerate(self._csr_dev):
+            c, s = _probe_csr(qk[b], keys, offsets, ids, cap=cap)
+            cands.append(c)
+            sizes.append(s)
+        cand = jnp.concatenate(cands, axis=1)
+        overflowed = jnp.max(jnp.stack(sizes)) > cap
+        return cand, overflowed
+
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str | os.PathLike) -> None:
+        """Persist signatures + CSR buckets + config to one npz file."""
+        self._ensure_built()
+        meta = {
+            "format": FORMAT_VERSION,
+            "fingerprint": self.fingerprint,
+            "cfg": dataclasses.asdict(self.cfg),
+            "layout": self.layout,
+            "bands": self.bands,
+            "interleave": self.interleave,
+            "n_refs": self.size,
+        }
+        payload = {
+            "meta_json": np.frombuffer(
+                json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8),
+            "sigs": self.sigs,
+            "valid": self.valid,
+        }
+        for b, (keys, offsets, ids) in enumerate(self._csr_np):
+            payload[f"band{b}_keys"] = keys
+            payload[f"band{b}_offsets"] = offsets
+            payload[f"band{b}_ids"] = ids
+        np.savez_compressed(path, **payload)
+
+    @classmethod
+    def load(cls, path: str | os.PathLike,
+             expected_cfg: LSHConfig | None = None) -> "SignatureIndex":
+        """Load a persisted index; fails loudly on config mismatch.
+
+        If ``expected_cfg`` is given, its fingerprint must match the stored
+        one — a stale index built under different LSH parameters raises
+        :class:`IndexConfigMismatch` instead of silently serving wrong
+        buckets.
+        """
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
+            if meta.get("format") != FORMAT_VERSION:
+                raise IndexConfigMismatch(
+                    f"index format {meta.get('format')} != {FORMAT_VERSION}")
+            cfg = LSHConfig(**meta["cfg"])
+            layout, bands = meta["layout"], int(meta["bands"])
+            interleave = bool(meta.get("interleave", True))
+            stored = meta["fingerprint"]
+            recomputed = config_fingerprint(cfg, layout=layout, bands=bands,
+                                            interleave=interleave)
+            if stored != recomputed:
+                raise IndexConfigMismatch(
+                    f"fingerprint {stored} does not match stored config "
+                    f"(expected {recomputed}) — corrupt or stale index")
+            if expected_cfg is not None:
+                want = config_fingerprint(expected_cfg, layout=layout,
+                                          bands=bands, interleave=interleave)
+                if want != stored:
+                    raise IndexConfigMismatch(
+                        f"index fingerprint {stored} != {want} for the "
+                        f"requested config; rebuild the index")
+            idx = cls(cfg, z["sigs"], z["valid"], layout=layout,
+                      bands=bands, interleave=interleave)
+            csr = []
+            for b in range(idx.n_bands):
+                csr.append((z[f"band{b}_keys"], z[f"band{b}_offsets"],
+                            z[f"band{b}_ids"]))
+        idx._csr_np = csr
+        idx._csr_dev = [tuple(jnp.asarray(a) for a in t) for t in csr]
+        idx._dev_sigs = jnp.asarray(idx.sigs)
+        idx._dev_valid = jnp.asarray(idx.valid)
+        idx._dirty = False
+        return idx

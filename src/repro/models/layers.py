@@ -429,7 +429,7 @@ def moe_block(x, p, cfg, rules):
         e_s = e_flat[order]
         seg = jnp.concatenate([jnp.ones(1, bool), e_s[1:] != e_s[:-1]])
         idx = jnp.arange(Tg * K, dtype=jnp.int32)
-        rank_s = idx - jnp.maximum.accumulate(jnp.where(seg, idx, 0))
+        rank_s = idx - jax.lax.cummax(jnp.where(seg, idx, 0), axis=0)
         rank = jnp.zeros_like(rank_s).at[order].set(rank_s)
         keep = rank < C
         slot = jnp.where(keep, e_flat * C + rank, E * C)       # drop row

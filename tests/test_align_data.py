@@ -78,7 +78,7 @@ def test_scallops_recovers_homologs_end_to_end():
                             max_pairs=1 << 14))
     rs = sl.signatures(data["ref_ids"], data["ref_lens"])
     qs = sl.signatures(data["query_ids"], data["query_lens"])
-    pairs, count = sl.search(qs, rs)
+    pairs, count, _overflowed = sl.search(qs, rs)
     got = pairs_to_set(pairs)
     recovered = sum(1 for qi, (p, _) in enumerate(data["truth"])
                     if p >= 0 and (qi, p) in got)

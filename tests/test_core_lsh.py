@@ -1,59 +1,17 @@
-"""Core LSH correctness: signature generation + joins vs naive oracles."""
-import itertools
+"""Core LSH correctness: signature generation + joins vs naive oracles.
 
+Property-based (hypothesis) variants live in test_properties.py behind
+``pytest.importorskip`` so this module always collects.
+"""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
 from repro.core.alphabet import AMINO_ACIDS, ALPHABET_SIZE, BLOSUM62, encode_batch
 from repro.core import simhash
 from repro.core.hamming import all_pairs_hamming, hamming_distance, threshold_pairs
 from repro.core.join import band_join, flip_join, flip_masks, pairs_to_set
 from repro.core.shingle import extract_shingles, shingle_ids
-
-
-# ------------------------------------------------------------ python oracle
-def naive_signature(seq: str, k: int, T: int, f: int) -> int:
-    """Literal Algorithm 2: per-shingle neighbour enumeration, Java hashCode,
-    weighted ±1 accumulation, sign bits. (Set semantics of the pseudocode's
-    `neighwords` union is a known pseudocode artifact — Figure 3.1 semantics,
-    one contribution per (shingle, neighbour word) occurrence, is used, which
-    is what the matmul/table paths implement.)"""
-    V = [0] * f
-    for s in range(len(seq) - k + 1):
-        sh = seq[s : s + k]
-        for word in itertools.product(AMINO_ACIDS, repeat=k):
-            score = sum(
-                BLOSUM62[AMINO_ACIDS.index(sh[i]), AMINO_ACIDS.index(word[i])]
-                for i in range(k)
-            )
-            if score >= T:
-                h = 0
-                for c in word:
-                    h = (h * 31 + ord(c)) & 0xFFFFFFFF
-                for j in range(f):
-                    V[j] += score if (h >> j) & 1 else -score
-    bits = [1 if v >= 0 else 0 for v in V]
-    out = 0
-    for j, b in enumerate(bits):
-        out |= b << j
-    return out
-
-
-SEQ = st.text(alphabet=AMINO_ACIDS, min_size=4, max_size=24)
-
-
-@settings(max_examples=10, deadline=None)
-@given(seq=SEQ, T=st.integers(min_value=5, max_value=14))
-def test_signature_matches_naive_oracle(seq, T):
-    k, f = 2, 32  # k=2 keeps the 400-word oracle loop tractable
-    ids, lens = encode_batch([seq])
-    got_m = int(np.asarray(simhash.signatures_matmul(ids, lens, k=k, T=T, f=f))[0, 0])
-    got_t = int(np.asarray(simhash.signatures_table(ids, lens, k=k, T=T, f=f))[0, 0])
-    want = naive_signature(seq, k, T, f)
-    assert got_m == want
-    assert got_t == want
 
 
 def test_matmul_equals_table_k3():
@@ -89,11 +47,11 @@ def test_shingle_extraction_and_mask():
 
 
 # ------------------------------------------------------------ hamming
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
-def test_hamming_distance_matches_popcount(a, b):
-    d = int(hamming_distance(jnp.uint32([a]), jnp.uint32([b])))
-    assert d == bin(a ^ b).count("1")
+def test_hamming_distance_matches_popcount_examples():
+    rng = np.random.default_rng(8)
+    for a, b in rng.integers(0, 2**32, (32, 2), dtype=np.uint32):
+        d = int(hamming_distance(jnp.uint32([a]), jnp.uint32([b])))
+        assert d == bin(int(a) ^ int(b)).count("1")
 
 
 def test_all_pairs_hamming_blocked_vs_direct():
@@ -154,11 +112,12 @@ def test_band_join_exact(f, d, bands):
     for i in range(q.shape[0]):  # mutate i%4 bits of query i
         for b in range(i % 4):
             q[i, b % nw] ^= np.uint32(1) << np.uint32((7 * i + b) % 32)
-    got, count = band_join(jnp.asarray(q), jnp.asarray(r), f=f, d=d,
-                           max_pairs=2048, bands=bands)
+    got, count, truncated = band_join(jnp.asarray(q), jnp.asarray(r), f=f,
+                                      d=d, max_pairs=2048, bands=bands)
     want = _brute_pairs(q, r, d)
     assert pairs_to_set(got) == want
     assert int(count) == len(want)
+    assert not bool(truncated)
 
 
 def test_threshold_pairs_dense():

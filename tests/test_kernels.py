@@ -1,8 +1,11 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles.
+
+Property-based (hypothesis) variants live in test_properties.py behind
+``pytest.importorskip`` so this module always collects.
+"""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.core.alphabet import encode_batch
@@ -25,21 +28,6 @@ def test_hamming_dist_sweep(Q, R, nw, bq, br):
     r = jnp.asarray(rng.integers(0, 2**32, (R, nw), dtype=np.uint32))
     got = ops.all_pairs_hamming(q, r, bq=bq, br=br)
     want = ref.hamming_dist_ref(q, r)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-
-
-@settings(max_examples=15, deadline=None)
-@given(
-    Q=st.integers(1, 40), R=st.integers(1, 70),
-    nw=st.sampled_from([1, 2, 4]), d=st.integers(0, 64),
-    seed=st.integers(0, 2**16),
-)
-def test_hamming_count_property(Q, R, nw, d, seed):
-    rng = np.random.default_rng(seed)
-    q = jnp.asarray(rng.integers(0, 2**32, (Q, nw), dtype=np.uint32))
-    r = jnp.asarray(rng.integers(0, 2**32, (R, nw), dtype=np.uint32))
-    got = ops.hamming_counts(q, r, d, bq=8, br=16)
-    want = ref.hamming_count_ref(q, r, d)[:, 0]
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
