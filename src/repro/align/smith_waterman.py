@@ -1,10 +1,25 @@
 """Smith-Waterman local alignment in JAX + host-side traceback for PID.
 
 The paper evaluates result quality by the *percent identity* (PID) of the
-alignment of each emitted (query, reference) pair (§5.2). The DP recurrence
-runs on-device (scan over query rows, vectorized over the reference axis and
-over pairs via vmap); the O(L) traceback that extracts matched positions runs
-host-side in numpy (pairs to score are few; the DP is the hot part).
+alignment of each emitted (query, reference) pair (§5.2). The DP runs
+on-device as a *row wave*: with a linear gap penalty the within-row
+dependency
+
+    H[i,j] = max(A[j], H[i,j-1] + GAP),
+    A[j]   = max(0, H[i-1,j-1] + s[i,j], H[i-1,j] + GAP)
+
+has the closed form  H[i,j] = max_{t<=j} (A[t] + GAP*(j-t)), a max-plus
+prefix scan:  H[i,1:] = cummax(A + c*t) - c*t  with c = -GAP.  (A >= 0 makes
+the max(0, .) clamp automatic.)  Each row is therefore one vectorized cummax
+over the reference axis instead of a sequential column scan — the whole DP
+is a single `lax.scan` over query rows, vmapped over pairs, so a (B, Lq, Lr)
+pair block scores in one jitted program (the "SW wave" the all-pairs tiler
+dispatches).  Cell values are integer and identical to the classic
+recurrence, so scores, DP matrices, and tracebacks are bit-exact with the
+per-pair path.
+
+The O(L) traceback that extracts matched positions runs host-side in numpy
+(pairs to trace are few; the DP is the hot part).
 
 Linear gap penalty (the paper's quality analysis uses ungapped/simple-gap
 BLAST alignments; gap open == extend keeps the DP a 3-way max).
@@ -19,7 +34,30 @@ import numpy as np
 
 from ..core.alphabet import BLOSUM62_PADDED, PAD
 
-GAP = -4  # linear gap penalty (BLOSUM62-compatible default)
+GAP = -4     # linear gap penalty (BLOSUM62-compatible default)
+NEG = -10**6  # masked-substitution sentinel (padded positions never win)
+
+
+def _sub_matrix(q, r):
+    """(Lq,) x (Lr,) int8 -> (Lq, Lr) int32 substitution scores, PAD-masked."""
+    B = jnp.asarray(BLOSUM62_PADDED)
+    sub = B[q.astype(jnp.int32)][:, r.astype(jnp.int32)]
+    valid = (q[:, None] != PAD) & (r[None, :] != PAD)
+    return jnp.where(valid, sub, NEG)
+
+
+def _wave_row(prev_row, sub_row):
+    """One DP row via the max-plus prefix scan (see module docstring).
+
+    prev_row: H[i-1, :] (Lr+1,) int32;  sub_row: s[i, :] (Lr,) int32.
+    Returns H[i, :] (Lr+1,) int32, cell-exact with the classic recurrence.
+    """
+    c = jnp.int32(-GAP)
+    a = jnp.maximum(0, jnp.maximum(prev_row[:-1] + sub_row,
+                                   prev_row[1:] + GAP))
+    t = jnp.arange(1, a.shape[0] + 1, dtype=jnp.int32)
+    p = jax.lax.cummax(a + c * t)
+    return jnp.concatenate([jnp.zeros(1, jnp.int32), p - c * t])
 
 
 @functools.partial(jax.jit, static_argnames=("return_matrix",))
@@ -29,34 +67,22 @@ def _sw_dp(q, r, return_matrix: bool = False):
     Returns (best_score, H) where H is the (Lq+1, Lr+1) DP matrix if
     requested (int32), else a dummy scalar.
     """
-    B = jnp.asarray(BLOSUM62_PADDED)
-    Lq, Lr = q.shape[0], r.shape[0]
-    sub = B[q.astype(jnp.int32)][:, r.astype(jnp.int32)]       # (Lq, Lr)
-    # padded positions never improve the local score
-    valid = (q[:, None] != PAD) & (r[None, :] != PAD)
-    sub = jnp.where(valid, sub, -10**6)
+    sub = _sub_matrix(q, r)
+    H0 = jnp.zeros(r.shape[0] + 1, jnp.int32)
+    if return_matrix:
+        _, rows = jax.lax.scan(
+            lambda prev, s: (lambda row: (row, row))(_wave_row(prev, s)),
+            H0, sub)
+        H = jnp.concatenate([H0[None], rows], axis=0)   # (Lq+1, Lr+1)
+        return jnp.max(H), H
+    # score-only: carry a running max instead of materializing H
+    def step(carry, s):
+        prev, best = carry
+        row = _wave_row(prev, s)
+        return (row, jnp.maximum(best, jnp.max(row))), None
 
-    def row_step(prev_row, sub_row):
-        # prev_row: H[i-1, :] (Lr+1,)
-        def col_step(diag_and_left, inputs):
-            h_diag, h_left = diag_and_left
-            s, h_up = inputs
-            h = jnp.maximum(0, jnp.maximum(h_diag + s,
-                                           jnp.maximum(h_up + GAP,
-                                                       h_left + GAP)))
-            return (h_up, h), h
-
-        (_, _), row_tail = jax.lax.scan(
-            col_step, (prev_row[0], jnp.int32(0)),
-            (sub_row, prev_row[1:]))
-        row = jnp.concatenate([jnp.zeros(1, jnp.int32), row_tail])
-        return row, row
-
-    H0 = jnp.zeros(Lr + 1, jnp.int32)
-    _, rows = jax.lax.scan(row_step, H0, sub)
-    H = jnp.concatenate([H0[None], rows], axis=0)               # (Lq+1, Lr+1)
-    best = jnp.max(H)
-    return (best, H) if return_matrix else (best, jnp.int32(0))
+    (_, best), _ = jax.lax.scan(step, (H0, jnp.int32(0)), sub)
+    return best, jnp.int32(0)
 
 
 def sw_score(q, r) -> int:
@@ -65,13 +91,21 @@ def sw_score(q, r) -> int:
     return int(s)
 
 
-@functools.partial(jax.jit)
+@jax.jit
 def _sw_scores_batch(qs, rs):
     return jax.vmap(lambda a, b: _sw_dp(a, b)[0])(qs, rs)
 
 
+@jax.jit
+def _sw_batch_with_matrix(qs, rs):
+    def one(q, r):
+        best, H = _sw_dp(q, r, return_matrix=True)
+        return best, H
+    return jax.vmap(one)(qs, rs)
+
+
 def sw_align_batch(qs, rs) -> np.ndarray:
-    """Batched best-scores: (N, Lq) x (N, Lr) -> (N,) int32."""
+    """Batched best-scores: (N, Lq) x (N, Lr) -> (N,) int32 (one jit call)."""
     return np.asarray(_sw_scores_batch(jnp.asarray(qs), jnp.asarray(rs)))
 
 
@@ -110,13 +144,59 @@ def percent_identity(q, r) -> tuple[float, int, int]:
     return pid, length, int(score)
 
 
+def sw_wave_pid(qs, rs, *, chunk: int = 32):
+    """Batched scores + PID: one jitted DP wave per chunk of pairs, then the
+    host traceback per pair.
+
+    qs (N, Lq) x rs (N, Lr) int8, PAD-padded (padding only ever suffixes a
+    sequence, so the real subgrid of each padded DP matrix — and its argmax
+    cell in row-major order — is identical to the unpadded one; results are
+    bit-exact with :func:`percent_identity` on the unpadded pair).
+
+    Returns (pid (N,) float64, length (N,) int64, score (N,) int64).
+    All-PAD rows (wave padding) score 0 with pid 0, length 0.
+    """
+    qs = np.asarray(qs, np.int8)
+    rs = np.asarray(rs, np.int8)
+    N = qs.shape[0]
+    pid = np.zeros(N)
+    length = np.zeros(N, np.int64)
+    score = np.zeros(N, np.int64)
+    B = BLOSUM62_PADDED
+    for i in range(0, N, chunk):
+        qc, rc = qs[i:i + chunk], rs[i:i + chunk]
+        sc, H = _sw_batch_with_matrix(jnp.asarray(qc), jnp.asarray(rc))
+        Hn = np.asarray(H)
+        sc = np.asarray(sc)
+        for n in range(len(qc)):
+            sub = B[qc[n].astype(np.int64)][:, rc[n].astype(np.int64)]
+            p, l = _traceback_pid(Hn[n], qc[n], rc[n], sub)
+            pid[i + n] = p
+            length[i + n] = l
+            score[i + n] = int(sc[n])
+    return pid, length, score
+
+
 def batch_percent_identity(pairs, q_ids, q_lens, r_ids, r_lens) -> np.ndarray:
-    """PID for each (qi, ri) row of a pair buffer; invalid rows -> nan."""
+    """PID for each (qi, ri) row of a pair buffer; invalid rows -> nan.
+
+    Valid rows are gathered into padded blocks and scored as one DP wave per
+    chunk (bit-exact with the per-pair path, just batched).
+    """
+    pairs = np.asarray(pairs)
     out = np.full(len(pairs), np.nan)
-    for n, (qi, ri, *_) in enumerate(np.asarray(pairs)):
-        if qi < 0:
-            continue
-        q = q_ids[qi][: int(q_lens[qi])]
-        r = r_ids[ri][: int(r_lens[ri])]
-        out[n] = percent_identity(q, r)[0]
+    rows = [(n, int(qi), int(ri)) for n, (qi, ri, *_) in enumerate(pairs)
+            if qi >= 0]
+    if not rows:
+        return out
+    Lq = int(max(q_lens[qi] for _, qi, _ in rows))
+    Lr = int(max(r_lens[ri] for _, _, ri in rows))
+    qm = np.full((len(rows), max(Lq, 1)), PAD, np.int8)
+    rm = np.full((len(rows), max(Lr, 1)), PAD, np.int8)
+    for n, (_, qi, ri) in enumerate(rows):
+        qm[n, :int(q_lens[qi])] = q_ids[qi][:int(q_lens[qi])]
+        rm[n, :int(r_lens[ri])] = r_ids[ri][:int(r_lens[ri])]
+    pid, _, _ = sw_wave_pid(qm, rm)
+    for n, (slot, _, _) in enumerate(rows):
+        out[slot] = pid[n]
     return out

@@ -1,0 +1,96 @@
+"""repro.allpairs — many-against-many all-pairs similarity search.
+
+The paper's pipeline is one-directional (queries vs. a reference DB); the
+dominant metagenomic workload is all-vs-all over a whole corpus (PASTIS,
+arXiv:2009.14467; extreme-scale many-against-many, arXiv:2303.01845). This
+subsystem computes the corpus similarity graph on top of the persistent LSH
+index:
+
+  corpus -> SignatureIndex.build -> LSH self-join (within-bucket pairs,
+  deduped, upper-triangular CSR) -> tiled pair scheduler (length-bucketed
+  fixed-shape waves) -> batched Smith-Waterman row-wave scoring (+ PID)
+  -> similarity graph -> union-find connected components = protein families
+
+* ``selfjoin`` — :func:`lsh_self_join`: exact band-collision enumeration
+  with the grow-and-retry capacity discipline; CSR adjacency output.
+* ``tiles``   — :func:`score_pairs`: (tile_i, tile_j) blocks, padded-length
+  ladder, batched SW waves (jnp row-wave or the Pallas tile kernel).
+* ``graph``   — :func:`cluster_families`: PID/score-thresholded edges,
+  union-find components, families largest-first.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.pipeline import LSHConfig
+from ..index.store import SignatureIndex
+from .graph import FamilyResult, cluster_families, union_find
+from .selfjoin import SelfJoinResult, brute_force_collisions, lsh_self_join
+from .tiles import PairScores, WaveConfig, score_pairs, wave_plan
+
+
+@dataclass(frozen=True)
+class AllPairsConfig:
+    lsh: LSHConfig = field(default_factory=lambda: LSHConfig(k=3, T=13, f=32,
+                                                             d=1))
+    bands: int | None = None     # index bands (default: d+1)
+    hamming_filter: bool = True  # exact-filter candidates at Hamming <= d
+    wave: WaveConfig = field(default_factory=lambda: WaveConfig(with_pid=True))
+    min_pid: float = 50.0        # family edge threshold (percent identity)
+    min_score: int = 60          # edge threshold when waves skip PID
+    max_pairs: int = 1 << 16     # initial self-join capacity (grows)
+
+
+@dataclass(frozen=True)
+class AllPairsResult:
+    join: SelfJoinResult         # candidate pair set (CSR adjacency)
+    scored: PairScores           # SW scores (+ PID) aligned with join.pairs
+    families: FamilyResult       # thresholded components
+    index: SignatureIndex        # the corpus index (reusable/persistable)
+
+    @property
+    def pairs(self) -> np.ndarray:
+        return self.join.pairs
+
+    @property
+    def labels(self) -> np.ndarray:
+        return self.families.labels
+
+
+def all_pairs_search(ids, lens, cfg: AllPairsConfig | None = None,
+                     *, index: SignatureIndex | None = None) -> AllPairsResult:
+    """Corpus in, protein families out (the subsystem's one-call driver).
+
+    ``index=`` reuses a prebuilt/loaded :class:`SignatureIndex` over the
+    same corpus (the paper's pay-once economics applied to the self-join).
+    """
+    cfg = cfg or AllPairsConfig()
+    ids = np.asarray(ids, np.int8)
+    lens = np.asarray(lens, np.int32)
+    if index is None:
+        index = SignatureIndex.build(cfg.lsh, ids, lens, bands=cfg.bands)
+    elif index.size != len(lens):
+        raise ValueError(f"index covers {index.size} sequences, corpus has "
+                         f"{len(lens)}")
+    join = lsh_self_join(index, d=cfg.lsh.d if cfg.hamming_filter else None,
+                         max_pairs=cfg.max_pairs)
+    scored = score_pairs(ids, lens, join.pairs, cfg.wave)
+    if cfg.wave.with_pid:
+        families = cluster_families(index.size, join.pairs, scored.pid,
+                                    min_pid=cfg.min_pid)
+    else:       # score-only waves (e.g. the Pallas kernel path)
+        families = cluster_families(index.size, join.pairs, None,
+                                    scores=scored.scores,
+                                    min_score=cfg.min_score)
+    return AllPairsResult(join=join, scored=scored, families=families,
+                          index=index)
+
+
+__all__ = [
+    "AllPairsConfig", "AllPairsResult", "all_pairs_search",
+    "SelfJoinResult", "lsh_self_join", "brute_force_collisions",
+    "WaveConfig", "PairScores", "score_pairs", "wave_plan",
+    "FamilyResult", "cluster_families", "union_find",
+]

@@ -1,0 +1,81 @@
+"""Similarity graph -> protein families (union-find connected components).
+
+The scored edges of the all-pairs pipeline form a sparse similarity graph;
+families are its connected components after thresholding (the classic
+single-linkage clustering used by PASTIS-style many-to-many pipelines: an
+edge survives if its alignment is strong enough, and transitive closure
+groups distant relatives through intermediates).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def union_find(n: int, edges: np.ndarray) -> np.ndarray:
+    """Connected-component labels of n nodes under (m, 2) edges.
+
+    Path-halving + union by size, vectorized-ish host loop (edges are few
+    after thresholding). Labels are the component's smallest member id, so
+    they are stable under edge order.
+    """
+    parent = np.arange(n, dtype=np.int64)
+    size = np.ones(n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]   # path halving
+            x = parent[x]
+        return x
+
+    for a, b in np.asarray(edges, np.int64):
+        ra, rb = find(int(a)), find(int(b))
+        if ra == rb:
+            continue
+        if size[ra] < size[rb]:
+            ra, rb = rb, ra
+        parent[rb] = ra
+        size[ra] += size[rb]
+    # canonical label: smallest member id of each component
+    roots = np.fromiter((find(i) for i in range(n)), np.int64, count=n)
+    smallest = np.full(n, n, dtype=np.int64)
+    np.minimum.at(smallest, roots, np.arange(n, dtype=np.int64))
+    return smallest[roots].astype(np.int32)
+
+
+@dataclass(frozen=True)
+class FamilyResult:
+    labels: np.ndarray            # (N,) int32 component label per sequence
+    families: list[np.ndarray]    # members of each multi-member family
+    edge_mask: np.ndarray         # (P,) bool — which input edges survived
+
+    @property
+    def n_families(self) -> int:
+        return len(self.families)
+
+
+def cluster_families(n: int, pairs: np.ndarray, pid: np.ndarray | None = None,
+                     *, min_pid: float = 50.0,
+                     scores: np.ndarray | None = None,
+                     min_score: int | None = None) -> FamilyResult:
+    """Threshold edges (PID and/or SW score) and extract families.
+
+    ``pairs`` (P, 2); ``pid`` (P,) percent identities (NaN never passes);
+    ``scores``/``min_score`` adds an SW-score floor. Families are the
+    connected components with >= 2 members, largest first.
+    """
+    pairs = np.asarray(pairs)
+    mask = np.ones(len(pairs), bool)
+    if pid is not None:
+        with np.errstate(invalid="ignore"):
+            mask &= np.nan_to_num(np.asarray(pid), nan=-1.0) >= min_pid
+    if min_score is not None:
+        if scores is None:
+            raise ValueError("min_score needs scores")
+        mask &= np.asarray(scores) >= min_score
+    labels = union_find(n, pairs[mask])
+    uniq, counts = np.unique(labels, return_counts=True)
+    fams = [np.flatnonzero(labels == u) for u in uniq[counts >= 2]]
+    fams.sort(key=len, reverse=True)
+    return FamilyResult(labels=labels, families=fams, edge_mask=mask)

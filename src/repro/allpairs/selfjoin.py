@@ -1,0 +1,165 @@
+"""LSH self-join: the corpus joined against itself via the index's buckets.
+
+The many-against-many candidate generator (PASTIS-style similarity graphs):
+instead of probing queries against reference buckets, every bucket of the
+:class:`~repro.index.store.SignatureIndex` emits its own within-bucket pairs.
+A bucket of m members contributes m*(m-1)/2 unordered pairs; pairs colliding
+in several bands are deduplicated; the result is the *exact* set of LSH band
+collisions — upper-triangular (i < j), only valid (non-zero-signature)
+sequences, identical to brute-force enumeration of per-band key equality.
+The pigeonhole guarantee carries over: any pair within Hamming distance d of
+each other shares >= 1 band, so filtering candidates by packed Hamming
+distance (``d=``) yields the exact d-neighborhood graph.
+
+Emission reuses the fixed-capacity buffer discipline of ``core/join.py``
+(rows past the count are -1; ``overflowed`` means rows were truncated), and
+:func:`lsh_self_join` wraps it in the same grow-and-retry loop as the
+serving layer — no silent caps.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.hamming import hamming_distance
+from ..core.join import compact_pairs, dedup_pairs
+from ..index.store import SignatureIndex
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _emit_bucket_pairs(offsets, ids, *, cap: int):
+    """Within-bucket upper-triangular pairs of one band's CSR buckets.
+
+    offsets (U+1,) int32, ids (E,) int32 (ids grouped by bucket). Element at
+    position p pairs with every later position of its bucket, so it owns
+    c[p] = bucket_end(p) - 1 - p pairs; a cumsum over c maps fixed buffer
+    slots back to (p, partner). Returns pairs (cap, 2) int32, -1 past the
+    band's true pair count. The caller guarantees cap >= that count (sized
+    host-side in int64 — the on-device int32 cumsum would wrap for a
+    degenerate bucket of ~66k members), so nothing here can truncate.
+    """
+    E = ids.shape[0]
+    pos = jnp.arange(E, dtype=jnp.int32)
+    b = jnp.searchsorted(offsets, pos, side="right").astype(jnp.int32) - 1
+    end = offsets[jnp.clip(b + 1, 0, offsets.shape[0] - 1)].astype(jnp.int32)
+    cnt = jnp.maximum(end - 1 - pos, 0)
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(cnt)])
+    total = cum[-1]
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    p = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32) - 1
+    p = jnp.clip(p, 0, E - 1)
+    partner = p + 1 + (slots - cum[p])
+    valid = slots < total
+    a = ids[p]
+    c2 = ids[jnp.clip(partner, 0, E - 1)]
+    lo = jnp.minimum(a, c2)
+    hi = jnp.maximum(a, c2)
+    return jnp.stack([jnp.where(valid, lo, -1),
+                      jnp.where(valid, hi, -1)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("max_pairs", "d"))
+def _dedup_filter(cand, sigs, *, max_pairs: int, d: int | None):
+    """Cross-band dedup (core.join machinery) + optional exact Hamming
+    filter, compacted to ``max_pairs`` rows. Returns (pairs, count)."""
+    cs, keep = dedup_pairs(cand)
+    if d is not None:
+        dist = hamming_distance(sigs[jnp.maximum(cs[:, 0], 0)],
+                                sigs[jnp.maximum(cs[:, 1], 0)])
+        keep = keep & (dist <= d)
+    return compact_pairs((cs[:, 0], cs[:, 1]), keep, max_pairs)
+
+
+@dataclass(frozen=True)
+class SelfJoinResult:
+    """Deduplicated upper-triangular candidate set as a CSR adjacency."""
+    pairs: np.ndarray      # (P, 2) int32, i < j, lexicographically sorted
+    indptr: np.ndarray     # (N+1,) int64 — CSR row offsets over corpus ids
+    indices: np.ndarray    # (P,) int32 — CSR column ids (the j of each pair)
+    n_candidates: int      # == P
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.indptr) - 1
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return self.indices[self.indptr[i]:self.indptr[i + 1]]
+
+
+def _pairs_to_csr(pairs: np.ndarray, n: int) -> SelfJoinResult:
+    rows = pairs[:, 0]
+    indptr = np.searchsorted(rows, np.arange(n + 1)).astype(np.int64)
+    return SelfJoinResult(pairs=pairs, indptr=indptr,
+                          indices=np.ascontiguousarray(pairs[:, 1]),
+                          n_candidates=len(pairs))
+
+
+def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
+                  max_pairs: int = 1 << 16,
+                  max_grow: int = 1 << 24) -> SelfJoinResult:
+    """All-pairs candidate generation over the indexed corpus.
+
+    Emits every within-bucket pair of every band, deduplicates across bands,
+    and (optionally, ``d=``) exact-filters by packed Hamming distance.
+    Capacity discipline: per-band emission capacity is sized EXACTLY from
+    host-side int64 bucket totals (the device-side int32 count would wrap
+    for a degenerate ~66k-member bucket and truncate silently); the
+    deduplicated cross-band union still grow-and-retries. Either demand
+    beyond ``max_grow`` raises — never a silent cap.
+    """
+    index._ensure_built()
+    # exact per-band pair totals in int64 (sum of m*(m-1)/2 over buckets)
+    totals = []
+    for _, offsets, _ids in index._csr_np:
+        sizes = np.diff(np.asarray(offsets)).astype(np.int64)
+        totals.append(int((sizes * (sizes - 1) // 2).sum()))
+    need = max(totals, default=0)
+
+    def _raise():
+        raise RuntimeError(
+            f"self-join exceeded max_grow={max_grow} pairs; the corpus "
+            f"has a degenerate bucket (see repro.index.stats) — raise "
+            f"max_grow or increase bands/d selectivity")
+
+    cap = max_pairs
+    while True:
+        if need > cap:
+            if need > max_grow:
+                _raise()
+            cap = need              # exact: emission can never truncate
+        bufs = [
+            _emit_bucket_pairs(offsets, ids, cap=cap)
+            for (keys, offsets, ids), tot in zip(index._csr_dev, totals)
+            if tot > 0]
+        if not bufs:
+            return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
+        cand = jnp.concatenate(bufs, axis=0)
+        pairs, count = _dedup_filter(cand, index.device_sigs,
+                                     max_pairs=cap, d=d)
+        if int(count) <= cap:
+            p = np.asarray(pairs[:int(count)])
+            return _pairs_to_csr(p, index.size)
+        if cap >= max_grow:         # dedup union overran the buffer
+            _raise()
+        cap = min(cap * 2, max_grow)    # grow-and-retry
+
+
+def brute_force_collisions(index: SignatureIndex) -> set[tuple[int, int]]:
+    """Oracle: enumerate all within-bucket pairs with host loops (exactness
+    reference for tests/benchmarks — O(sum m^2), small corpora only)."""
+    index._ensure_built()
+    out: set[tuple[int, int]] = set()
+    for (keys, offsets, ids) in index._csr_np:
+        ids = np.asarray(ids)
+        offsets = np.asarray(offsets)
+        for u in range(len(keys)):
+            members = ids[offsets[u]:offsets[u + 1]]
+            for a in range(len(members)):
+                for b in range(a + 1, len(members)):
+                    i, j = int(members[a]), int(members[b])
+                    out.add((min(i, j), max(i, j)))
+    return out

@@ -1,0 +1,122 @@
+"""Tiled pair scheduler: candidate pairs -> fixed-shape batched SW waves.
+
+At corpus scale the candidate set of the self-join is far too ragged to
+score naively: pair lengths vary, and per-pair DP calls retrace the jit
+cache for every new (Lq, Lr) and leave the device idle between dispatches.
+The scheduler imposes structure in three steps:
+
+1. **(tile_i, tile_j) blocks** — pairs are grouped by the corpus tile of
+   each endpoint (tile size ~ device-memory budget for gathered sequences),
+   and blocks are walked in order, so the working set of gathered rows is
+   bounded by two tiles regardless of corpus size.
+2. **length buckets** — within a block, pairs are bucketed by their padded
+   (Lq, Lr) on a quantized ladder (same idea as ``QueryEngine``'s padding
+   ladder: a small, closed set of shapes keeps the jit cache stable).
+3. **waves** — each bucket is chunked into fixed-size (B, Lq, Lr) pair
+   blocks, padded with all-PAD rows (which score 0 and are discarded), and
+   dispatched as one jitted Smith-Waterman row-wave program — optionally the
+   Pallas tile kernel (``use_pallas=True``).
+
+Scores (and optionally PID via the batched wave + host traceback) come back
+aligned with the input pair order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..align.smith_waterman import sw_align_batch, sw_wave_pid
+from ..core.alphabet import PAD
+
+
+@dataclass(frozen=True)
+class WaveConfig:
+    tile: int = 1024             # corpus rows per (tile_i, tile_j) block
+    wave_batch: int = 64         # pairs per SW wave (upper bound)
+    len_quantum: int = 64        # pad pair lengths to multiples of this
+    max_wave_cells: int = 1 << 23  # B*Lq*Lr budget; shrinks B for long pairs
+    use_pallas: bool = False     # score-only waves via the Pallas tile
+                                 # kernel (ignored when with_pid is set —
+                                 # the PID traceback needs the DP matrices,
+                                 # which only the jnp wave materializes)
+    with_pid: bool = False       # also run the batched PID traceback
+
+
+@dataclass(frozen=True)
+class PairScores:
+    scores: np.ndarray           # (P,) int32 SW best score per input pair
+    pid: np.ndarray | None       # (P,) float64 percent identity (with_pid)
+    aln_len: np.ndarray | None   # (P,) int64 alignment length (with_pid)
+    n_waves: int                 # jitted dispatches issued
+    n_shapes: int                # distinct (B, Lq, Lr) wave shapes compiled
+
+
+def _quantize(lens: np.ndarray, quantum: int) -> np.ndarray:
+    return np.maximum(quantum, -(-lens // quantum) * quantum)
+
+
+def wave_plan(pairs: np.ndarray, lens: np.ndarray, cfg: WaveConfig):
+    """Group pair indices into dispatch order: (tile_i, tile_j) block, then
+    padded-length bucket. Yields (pair_idx (m,), Lq_pad, Lr_pad) with
+    pair_idx referring to rows of ``pairs``."""
+    if len(pairs) == 0:
+        return
+    ti = pairs[:, 0] // cfg.tile
+    tj = pairs[:, 1] // cfg.tile
+    lq = _quantize(lens[pairs[:, 0]], cfg.len_quantum)
+    lr = _quantize(lens[pairs[:, 1]], cfg.len_quantum)
+    # dispatch key: block-major, then shape; lexsort is stable so pairs stay
+    # in input order within a wave
+    order = np.lexsort((lr, lq, tj, ti))
+    keys = np.stack([ti[order], tj[order], lq[order], lr[order]], axis=1)
+    starts = np.flatnonzero(
+        np.concatenate([[True], (np.diff(keys, axis=0) != 0).any(axis=1)]))
+    bounds = np.concatenate([starts, [len(order)]])
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        yield order[s:e], int(keys[s, 2]), int(keys[s, 3])
+
+
+def score_pairs(ids: np.ndarray, lens: np.ndarray, pairs: np.ndarray,
+                cfg: WaveConfig | None = None) -> PairScores:
+    """Score every (i, j) candidate pair with batched Smith-Waterman waves.
+
+    ids (N, L) int8 PAD-padded corpus, lens (N,), pairs (P, 2) int32.
+    Returns scores (and PID when ``cfg.with_pid``) aligned with ``pairs``.
+    """
+    cfg = cfg or WaveConfig()
+    pairs = np.asarray(pairs, np.int32)
+    lens = np.asarray(lens, np.int32)
+    P = len(pairs)
+    scores = np.zeros(P, np.int32)
+    pid = np.zeros(P) if cfg.with_pid else None
+    aln = np.zeros(P, np.int64) if cfg.with_pid else None
+    n_waves = 0
+    shapes: set[tuple[int, int, int]] = set()
+    for idx, Lq, Lr in wave_plan(pairs, lens, cfg):
+        # shrink the wave batch so B*Lq*Lr respects the cell budget
+        B = max(1, min(cfg.wave_batch, cfg.max_wave_cells // (Lq * Lr)))
+        for s in range(0, len(idx), B):
+            chunk = idx[s:s + B]
+            qm = np.full((B, Lq), PAD, np.int8)
+            rm = np.full((B, Lr), PAD, np.int8)
+            for n, p in enumerate(chunk):
+                i, j = pairs[p]
+                qm[n, :lens[i]] = ids[i, :lens[i]]
+                rm[n, :lens[j]] = ids[j, :lens[j]]
+            if cfg.with_pid:
+                pw, lw, sw = sw_wave_pid(qm, rm, chunk=B)
+                pid[chunk] = pw[:len(chunk)]
+                aln[chunk] = lw[:len(chunk)]
+                scores[chunk] = sw[:len(chunk)]
+            elif cfg.use_pallas:
+                from ..kernels import ops
+                sw = np.asarray(ops.sw_wave_scores(qm, rm))
+                scores[chunk] = sw[:len(chunk)]
+            else:
+                sw = sw_align_batch(qm, rm)
+                scores[chunk] = sw[:len(chunk)]
+            n_waves += 1
+            shapes.add((B, Lq, Lr))
+    return PairScores(scores=scores, pid=pid, aln_len=aln,
+                      n_waves=n_waves, n_shapes=len(shapes))

@@ -121,6 +121,35 @@ def band_keys(sigs, f: int, bands: int, *,
     return jnp.stack(keys, axis=-1)
 
 
+def dedup_pairs(cand):
+    """Lexsort a (M, 2) candidate buffer and mark first occurrences.
+
+    Returns (cand_sorted, keep): ``keep`` is True on the first copy of each
+    valid (qid >= 0) pair. (lexsort avoids the q*R+r code, which overflows
+    int32 for big sets.) Shared by the query join (band_join) and the
+    corpus self-join (repro.allpairs.selfjoin).
+    """
+    order = jnp.lexsort((cand[:, 1], cand[:, 0]))
+    cs = cand[order]
+    same = (cs[1:, 0] == cs[:-1, 0]) & (cs[1:, 1] == cs[:-1, 1])
+    keep = jnp.concatenate([jnp.ones(1, bool), ~same]) & (cs[:, 0] >= 0)
+    return cs, keep
+
+
+def compact_pairs(cols, keep, max_pairs: int):
+    """Stable-compact kept rows to the front of a fixed (max_pairs, k) buffer.
+
+    cols: per-column (M,) arrays; rows where ``keep`` is False become -1.
+    Returns (out (max_pairs, len(cols)) int32, count — the TRUE kept count,
+    which exceeds max_pairs when the buffer truncated).
+    """
+    count = jnp.sum(keep.astype(jnp.int32))
+    order = jnp.argsort(~keep, stable=True)[:max_pairs]
+    ok = keep[order]
+    out = jnp.stack([jnp.where(ok, c[order], -1) for c in cols], axis=-1)
+    return out.astype(jnp.int32), count
+
+
 def band_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int,
               bands: int | None = None):
     """Pigeonhole banding join: exact for bands >= d+1, no false negatives.
@@ -154,27 +183,12 @@ def band_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int,
         all_pairs.append(p2)
     cand = jnp.concatenate(all_pairs, axis=0)        # (b*cap, 2)
 
-    # Dedup: sort lexicographically by (qid, rid); mark first occurrence.
-    # (lexsort avoids the q*R+r code, which overflows int32 for big sets.)
-    order = jnp.lexsort((cand[:, 1], cand[:, 0]))
-    cand_s = cand[order]
-    same = (cand_s[1:, 0] == cand_s[:-1, 0]) & (cand_s[1:, 1] == cand_s[:-1, 1])
-    first = jnp.concatenate([jnp.ones(1, bool), ~same])
-    keep = first & (cand_s[:, 0] >= 0)
-
+    cand_s, keep = dedup_pairs(cand)
     qv = jnp.where(keep, cand_s[:, 0], -1)
     rv = jnp.where(keep, cand_s[:, 1], -1)
     dist = hamming_distance(q_sigs[jnp.maximum(qv, 0)], r_sigs[jnp.maximum(rv, 0)])
     hit = keep & (dist <= d)
-    count = jnp.sum(hit.astype(jnp.int32))
-    # Compact hits to the front, truncate to max_pairs.
-    order2 = jnp.argsort(~hit, stable=True)[:max_pairs]
-    ok = hit[order2]
-    out = jnp.stack(
-        [jnp.where(ok, qv[order2], -1),
-         jnp.where(ok, rv[order2], -1),
-         jnp.where(ok, dist[order2], -1)], axis=-1
-    ).astype(jnp.int32)
+    out, count = compact_pairs((qv, rv, dist), hit, max_pairs)
     return out, count, truncated
 
 

@@ -108,6 +108,57 @@ def make_protein_sets(cfg: SyntheticProteinConfig):
                 query_lens=q_lens, truth=truth)
 
 
+@dataclass(frozen=True)
+class FamilyCorpusConfig:
+    """A flat corpus with planted protein families (for all-vs-all search)."""
+    n_families: int = 32
+    family_size: int = 4            # members per family (>= 2)
+    n_singletons: int = 64          # unrelated sequences (their own family)
+    len_mean: int = 200
+    len_std: int = 40
+    sub_rate: float = 0.1           # within-family mutation channel
+    indel_rate: float = 0.0
+    seed: int = 0
+
+
+def make_family_corpus(cfg: FamilyCorpusConfig):
+    """Corpus with known family structure for many-against-many search.
+
+    Each family is one random founder plus ``family_size - 1`` mutated
+    copies; singletons are unrelated random sequences. Members are shuffled
+    so family structure never aligns with corpus order.
+
+    Returns dict(ids (N, L) int8 PAD-padded, lens (N,) int32,
+    labels (N,) int32 — ground-truth family id, singletons get unique ids).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    seqs, labels = [], []
+    for fam in range(cfg.n_families):
+        L = max(30, int(rng.normal(cfg.len_mean, cfg.len_std)))
+        founder = random_protein(rng, L)
+        seqs.append(founder)
+        labels.append(fam)
+        for _ in range(cfg.family_size - 1):
+            seqs.append(mutate(rng, founder, sub_rate=cfg.sub_rate,
+                               indel_rate=cfg.indel_rate))
+            labels.append(fam)
+    for s in range(cfg.n_singletons):
+        L = max(30, int(rng.normal(cfg.len_mean, cfg.len_std)))
+        seqs.append(random_protein(rng, L))
+        labels.append(cfg.n_families + s)
+    perm = rng.permutation(len(seqs))
+    seqs = [seqs[i] for i in perm]
+    labels = np.asarray(labels, np.int32)[perm]
+
+    L = max(len(s) for s in seqs)
+    ids = np.full((len(seqs), L), ALPHABET_SIZE, np.int8)  # PAD
+    lens = np.zeros(len(seqs), np.int32)
+    for i, s in enumerate(seqs):
+        ids[i, : len(s)] = s
+        lens[i] = len(s)
+    return dict(ids=ids, lens=lens, labels=labels)
+
+
 def to_strings(ids, lens) -> list[str]:
     from ..core.alphabet import decode
     return [decode(ids[i][: int(lens[i])]) for i in range(len(lens))]

@@ -13,13 +13,17 @@ that a first-class artifact:
   padding (jit-cache stability), bucket probing, exact Hamming filtering,
   fixed-capacity top-k, overflow grow-and-retry, optional Smith-Waterman
   re-rank, and latency/throughput stats.
+* ``stats``   — bucket-occupancy/entropy diagnostics (per-band histograms,
+  hash-scheme comparison).
 """
 from .store import IndexConfigMismatch, SignatureIndex, config_fingerprint
 from .shard import ShardedIndex
 from .service import QueryEngine, ServingConfig, topk_dense, topk_probe
+from .stats import BandStats, band_stats, compare_schemes, occupancy_report
 
 __all__ = [
     "SignatureIndex", "IndexConfigMismatch", "config_fingerprint",
     "ShardedIndex",
     "QueryEngine", "ServingConfig", "topk_dense", "topk_probe",
+    "BandStats", "band_stats", "compare_schemes", "occupancy_report",
 ]

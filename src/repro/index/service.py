@@ -67,6 +67,30 @@ def _probe_csr(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
     return cand, size
 
 
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _probe_csr_fused(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
+    """All bands' bucket probes + cross-band dedup in ONE jitted program.
+
+    The per-band CSR arrays are stacked and padded to common sizes by
+    ``SignatureIndex`` (keys padded by repeating the last key, offsets by
+    repeating the end offset — padded entries are empty buckets, so they
+    match nothing; see store._stack_csr). Fusing removes the per-band
+    Python dispatch loop from the probe hot path — one device program per
+    query batch instead of n_bands (ROADMAP "probe path on-device").
+
+    qkeys (nb, B) uint32, csr_keys (nb, U), csr_offsets (nb, U+1),
+    csr_ids (nb, E) -> (cand (B, nb*cap) int32 with -1 padding, duplicates
+    across bands allowed — _topk_from_candidates dedups downstream,
+    bucket_size (nb, B) int32 — true matched-bucket sizes).
+    """
+    def one_band(qk, keys, offsets, ids):
+        return _probe_csr(qk, keys, offsets, ids, cap=cap)
+
+    cand, size = jax.vmap(one_band)(qkeys, csr_keys, csr_offsets, csr_ids)
+    B = qkeys.shape[1]
+    return jnp.transpose(cand, (1, 0, 2)).reshape(B, -1), size
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def _topk_from_candidates(q_sigs, cand, ref_sigs, ref_valid, *, k: int):
     """Exact-filter candidates and keep the k nearest per query.

@@ -101,6 +101,7 @@ class SignatureIndex:
         self._dirty = True          # buckets need (re)building
         self._csr_np = None         # list[(keys, offsets, ids)] numpy
         self._csr_dev = None        # same, device arrays
+        self._csr_stacked = None    # (keys, offsets, ids) stacked over bands
         self._dev_sigs = None
         self._dev_valid = None
         self._pipeline = None
@@ -175,12 +176,38 @@ class SignatureIndex:
                                   interleave=self.interleave))    # (V, bands)
         return [_sort_bucket(kb[:, b], valid_ids) for b in range(self.bands)]
 
+    def _stack_csr(self) -> None:
+        """Stack the per-band CSR arrays padded to common sizes, so the
+        probe runs as ONE jitted program over a (n_bands, ...) batch.
+
+        Padding is inert by construction: keys are padded by repeating the
+        last key (sortedness preserved; a query matching it still finds the
+        *first* occurrence, the real bucket) and offsets by repeating the
+        end offset (padded unique-key slots are empty buckets)."""
+        nb = len(self._csr_np)
+        U = max((len(k) for k, _, _ in self._csr_np), default=0)
+        E = max((len(i) for _, _, i in self._csr_np), default=0)
+        keys_s = np.zeros((nb, U), np.uint32)
+        offs_s = np.zeros((nb, U + 1), np.int32)
+        ids_s = np.zeros((nb, max(E, 1)), np.int32)
+        for b, (keys, offsets, ids) in enumerate(self._csr_np):
+            u, e = len(keys), len(ids)
+            keys_s[b, :u] = keys
+            if u:
+                keys_s[b, u:] = keys[-1]
+            offs_s[b, :u + 1] = offsets
+            offs_s[b, u + 1:] = offsets[u] if u else 0
+            ids_s[b, :e] = ids
+        self._csr_stacked = tuple(jnp.asarray(a)
+                                  for a in (keys_s, offs_s, ids_s))
+
     def _ensure_built(self) -> None:
         if not self._dirty and self._csr_dev is not None:
             return
         self._csr_np = self._build_csr()
         self._csr_dev = [tuple(jnp.asarray(a) for a in csr)
                          for csr in self._csr_np]
+        self._stack_csr()
         self._dev_sigs = jnp.asarray(self.sigs)
         self._dev_valid = jnp.asarray(self.valid)
         self._dirty = False
@@ -198,22 +225,25 @@ class SignatureIndex:
         """Candidate generation: for each query, up to ``cap`` reference ids
         per band whose bucket key matches.
 
-        Returns (cand (B, n_bands*cap) int32 with -1 padding, overflowed
-        0-d bool — True iff some matched bucket held more than ``cap``
-        entries, i.e. candidates were truncated and the caller should grow
-        ``cap`` and retry).
+        Returns (cand (B, n_bands*cap) int32 with -1 padding — duplicates
+        across bands allowed, consumers dedup, overflowed 0-d bool — True
+        iff some matched bucket held more than ``cap`` entries, i.e.
+        candidates were truncated and the caller should grow ``cap`` and
+        retry).
+
+        All bands probe in ONE jitted program over the stacked per-band
+        CSR arrays (no per-band Python dispatch loop).
         """
-        from .service import _probe_csr  # jitted probe primitive
+        from .service import _probe_csr_fused  # jitted probe primitive
         self._ensure_built()
         qk = self.query_keys(q_sigs)
-        cands, sizes = [], []
-        for b, (keys, offsets, ids) in enumerate(self._csr_dev):
-            c, s = _probe_csr(qk[b], keys, offsets, ids, cap=cap)
-            cands.append(c)
-            sizes.append(s)
-        cand = jnp.concatenate(cands, axis=1)
-        overflowed = jnp.max(jnp.stack(sizes)) > cap
-        return cand, overflowed
+        keys_s, offs_s, ids_s = self._csr_stacked
+        if keys_s.shape[1] == 0:           # no buckets at all (empty index)
+            B = qk.shape[1]
+            return (jnp.full((B, self.n_bands * cap), -1, jnp.int32),
+                    jnp.zeros((), bool))
+        cand, sizes = _probe_csr_fused(qk, keys_s, offs_s, ids_s, cap=cap)
+        return cand, jnp.max(sizes) > cap
 
     # ------------------------------------------------------------ persistence
     def save(self, path: str | os.PathLike) -> None:
@@ -280,6 +310,7 @@ class SignatureIndex:
                             z[f"band{b}_ids"]))
         idx._csr_np = csr
         idx._csr_dev = [tuple(jnp.asarray(a) for a in t) for t in csr]
+        idx._stack_csr()
         idx._dev_sigs = jnp.asarray(idx.sigs)
         idx._dev_valid = jnp.asarray(idx.valid)
         idx._dirty = False

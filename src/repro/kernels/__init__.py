@@ -4,6 +4,8 @@ interpret=True on CPU):
   hamming.py — the Signature Processor's blocked XOR+popcount sweep
   siggen.py  — the Signature Generator's fused score->threshold->hyperplane
                accumulation (two chained MXU matmuls per VMEM tile)
+  sw.py      — batched Smith-Waterman row-wave DP over a pair block (the
+               all-pairs tiler's inner loop; lane-parallel prefix max)
 
 ops.py: jit'd public wrappers (padding + platform dispatch).
 ref.py: pure-jnp oracles — the correctness contract for every kernel.

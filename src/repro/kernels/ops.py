@@ -13,9 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.alphabet import PAD
 from . import ref as kref
 from .hamming import hamming_count_kernel, hamming_dist_kernel
 from .siggen import siggen_accumulate_kernel
+from .sw import sw_scores_kernel
 
 
 def _on_tpu() -> bool:
@@ -65,6 +67,21 @@ def hamming_counts(q, r, d: int, *, bq: int = 256, br: int = 256,
         per_pad = kref.hamming_count_ref(qp, pad_sig, d)[:, 0]
         out = out - per_pad * (rp.shape[0] - R)
     return out[:Q]
+
+
+def sw_wave_scores(qs, rs, *, bb: int = 8,
+                   prefer_ref: bool = False) -> jnp.ndarray:
+    """Batched Smith-Waterman best scores for a (B, Lq) x (B, Lr) pair block
+    via the Pallas row-wave kernel (padded + cropped); bit-exact with the
+    jnp wave (`align.smith_waterman.sw_align_batch`), which is also the
+    ``prefer_ref`` fallback."""
+    if prefer_ref:
+        from ..align.smith_waterman import _sw_scores_batch
+        return _sw_scores_batch(jnp.asarray(qs), jnp.asarray(rs))
+    qp, B = _pad_rows(jnp.asarray(qs), bb, value=PAD)
+    rp, _ = _pad_rows(jnp.asarray(rs), bb, value=PAD)
+    out = sw_scores_kernel(qp, rp, bb=bb, interpret=not _on_tpu())
+    return out[:B, 0]
 
 
 def signatures_fused(rows, cb, H, *, T: int, bs: int = 256, bw: int = 512,

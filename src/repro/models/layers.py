@@ -335,9 +335,24 @@ def attention_block(x, p, cfg, rules, *, positions, causal: bool,
             # the chunk still need. Attention runs over concat(cache, fresh);
             # stale ring entries are masked by the window predicate, empty
             # slots (pos == -1) by the validity predicate.
-            k_all = jnp.concatenate([cache["k"], k], axis=1)
-            v_all = jnp.concatenate([cache["v"], v], axis=1)
-            pos_all = jnp.concatenate([cache["pos"], positions])
+            ck_in, cv_in, cpos_in = cache["k"], cache["v"], cache["pos"]
+            if mesh is not None and rules.get("kv_seq"):
+                # XLA SPMD (jax 0.4.37) mis-partitions concatenate along a
+                # "model"-sharded axis when the other operand is replicated:
+                # the output is the elementwise SUM of the shards, not their
+                # concatenation (cache values come out doubled, positions
+                # 0..7 become 0,2,..,14 — every slot looks invalid or
+                # mis-placed and attention reads garbage). Gathering the
+                # cache's seq axis before the concat sidesteps the bug;
+                # prefill runs once per sequence, so the all-gather is paid
+                # off the decode hot path (which takes the seq-sharded
+                # shard_map route above, no concat involved).
+                ck_in = constrain(ck_in, rules, "batch", None, "kv", None)
+                cv_in = constrain(cv_in, rules, "batch", None, "kv", None)
+                cpos_in = constrain(cpos_in, rules, None)
+            k_all = jnp.concatenate([ck_in, k], axis=1)
+            v_all = jnp.concatenate([cv_in, v], axis=1)
+            pos_all = jnp.concatenate([cpos_in, positions])
             k_roped = rope(k_all, pos_all, cfg.rope_theta)
             out = flash_attention(q, k_roped, v_all, q_pos=positions,
                                   k_pos=pos_all, causal=causal,

@@ -1,0 +1,203 @@
+"""repro.allpairs: self-join exactness, tiled SW waves, clustering, and the
+batched Smith-Waterman edge cases (empty sets, length-1, all-PAD, PID
+parity between the wave and the per-pair path)."""
+import numpy as np
+import pytest
+
+from repro.align.smith_waterman import (percent_identity, sw_align_batch,
+                                        sw_score, sw_wave_pid)
+from repro.allpairs import (AllPairsConfig, WaveConfig, all_pairs_search,
+                            brute_force_collisions, cluster_families,
+                            lsh_self_join, score_pairs, union_find)
+from repro.core import LSHConfig
+from repro.core.alphabet import PAD
+from repro.data import FamilyCorpusConfig, make_family_corpus
+from repro.index import SignatureIndex
+
+CFG = LSHConfig(k=3, T=13, f=32, d=1)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_family_corpus(FamilyCorpusConfig(
+        n_families=10, family_size=3, n_singletons=30, len_mean=90,
+        len_std=12, sub_rate=0.04, seed=5))
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    return SignatureIndex.build(CFG, corpus["ids"], corpus["lens"])
+
+
+# ---------------------------------------------------------------- self-join
+def test_selfjoin_matches_bruteforce_collisions(index):
+    join = lsh_self_join(index)
+    got = {tuple(p) for p in join.pairs}
+    assert got == brute_force_collisions(index)
+    # upper-triangular, deduplicated, lex-sorted
+    assert (join.pairs[:, 0] < join.pairs[:, 1]).all()
+    assert len(got) == join.n_candidates == len(join.pairs)
+    order = np.lexsort((join.pairs[:, 1], join.pairs[:, 0]))
+    np.testing.assert_array_equal(order, np.arange(len(order)))
+
+
+def test_selfjoin_grow_and_retry_exact(index):
+    """A tiny initial capacity must still converge to the exact pair set."""
+    small = lsh_self_join(index, max_pairs=2)
+    full = lsh_self_join(index, max_pairs=1 << 16)
+    np.testing.assert_array_equal(small.pairs, full.pairs)
+
+
+def test_selfjoin_max_grow_raises(index):
+    with pytest.raises(RuntimeError, match="max_grow"):
+        lsh_self_join(index, max_pairs=2, max_grow=2)
+
+
+def test_selfjoin_hamming_filter_subset(index):
+    raw = lsh_self_join(index)
+    filt = lsh_self_join(index, d=CFG.d)
+    got = {tuple(p) for p in filt.pairs}
+    assert got <= {tuple(p) for p in raw.pairs}
+    # filter keeps exactly the within-d collisions
+    sigs = index.sigs
+    for i, j in raw.pairs:
+        dist = bin(int(sigs[i, 0] ^ sigs[j, 0])).count("1")
+        assert ((i, j) in got) == (dist <= CFG.d)
+
+
+def test_selfjoin_csr_adjacency(index):
+    join = lsh_self_join(index)
+    assert join.indptr.shape == (index.size + 1,)
+    assert join.indptr[-1] == join.n_candidates
+    want = {tuple(p) for p in join.pairs}
+    got = {(i, int(j)) for i in range(index.size)
+           for j in join.neighbors(i)}
+    assert got == want
+
+
+def test_selfjoin_empty_corpus():
+    ids = np.zeros((0, 1), np.int8)
+    lens = np.zeros((0,), np.int32)
+    idx = SignatureIndex.build(CFG, ids, lens)
+    join = lsh_self_join(idx)
+    assert join.n_candidates == 0 and join.indptr.shape == (1,)
+
+
+# ---------------------------------------------------------------- SW waves
+def test_wave_scores_match_per_pair(corpus):
+    """Batched wave == per-pair scores over a randomized pair set."""
+    rng = np.random.default_rng(0)
+    ids, lens = corpus["ids"], corpus["lens"]
+    n = len(lens)
+    pairs = np.stack([rng.integers(0, n, 24), rng.integers(0, n, 24)],
+                     axis=1).astype(np.int32)
+    scored = score_pairs(ids, lens, pairs, WaveConfig(wave_batch=8))
+    for row, (i, j) in enumerate(pairs):
+        assert scored.scores[row] == sw_score(ids[i][:lens[i]],
+                                              ids[j][:lens[j]])
+
+
+def test_wave_pid_matches_per_pair(corpus):
+    """PID parity: the batched wave + traceback must be bit-exact with the
+    per-pair percent_identity path on a randomized corpus."""
+    rng = np.random.default_rng(1)
+    ids, lens = corpus["ids"], corpus["lens"]
+    n = len(lens)
+    pairs = np.stack([rng.integers(0, n, 16), rng.integers(0, n, 16)],
+                     axis=1).astype(np.int32)
+    scored = score_pairs(ids, lens, pairs,
+                         WaveConfig(wave_batch=8, with_pid=True))
+    for row, (i, j) in enumerate(pairs):
+        pid, length, score = percent_identity(ids[i][:lens[i]],
+                                              ids[j][:lens[j]])
+        assert scored.pid[row] == pid
+        assert scored.aln_len[row] == length
+        assert scored.scores[row] == score
+
+
+def test_wave_empty_candidate_set(corpus):
+    scored = score_pairs(corpus["ids"], corpus["lens"],
+                         np.zeros((0, 2), np.int32), WaveConfig())
+    assert scored.scores.shape == (0,) and scored.n_waves == 0
+
+
+def test_wave_length_one_sequences():
+    ids = np.array([[0], [0], [4]], np.int8)      # A, A, C
+    lens = np.ones(3, np.int32)
+    pairs = np.array([[0, 1], [0, 2]], np.int32)
+    scored = score_pairs(ids, lens, pairs, WaveConfig(with_pid=True))
+    assert scored.scores[0] == 4                  # BLOSUM62[A,A]
+    assert scored.pid[0] == 100.0 and scored.aln_len[0] == 1
+    assert scored.scores[1] == 0                  # A vs C scores 0 locally
+    assert scored.pid[1] == 0.0
+
+
+def test_wave_all_pad_rows():
+    """All-PAD rows (wave padding) score 0 / PID 0 and never poison real
+    rows in the same wave."""
+    qs = np.full((3, 12), PAD, np.int8)
+    rs = np.full((3, 12), PAD, np.int8)
+    seq = np.array([12, 3, 4, 16, 5, 0], np.int8)
+    qs[1, :6] = seq
+    rs[1, :6] = seq
+    pid, length, score = sw_wave_pid(qs, rs)
+    assert score[0] == score[2] == 0 and pid[0] == 0 and length[0] == 0
+    want_pid, want_len, want_score = percent_identity(seq, seq)
+    assert (pid[1], length[1], score[1]) == (want_pid, want_len, want_score)
+    np.testing.assert_array_equal(
+        sw_align_batch(qs, rs), [0, want_score, 0])
+
+
+def test_wave_pallas_kernel_parity(corpus):
+    """The Pallas tile kernel scores == the jnp wave on ragged real pairs."""
+    rng = np.random.default_rng(2)
+    ids, lens = corpus["ids"], corpus["lens"]
+    n = len(lens)
+    pairs = np.stack([rng.integers(0, n, 10), rng.integers(0, n, 10)],
+                     axis=1).astype(np.int32)
+    a = score_pairs(ids, lens, pairs, WaveConfig(wave_batch=4))
+    b = score_pairs(ids, lens, pairs,
+                    WaveConfig(wave_batch=4, use_pallas=True))
+    np.testing.assert_array_equal(a.scores, b.scores)
+
+
+# ---------------------------------------------------------------- clustering
+def test_union_find_components():
+    edges = np.array([[0, 1], [1, 2], [4, 5]], np.int64)
+    labels = union_find(6, edges)
+    assert labels[0] == labels[1] == labels[2]
+    assert labels[4] == labels[5]
+    assert labels[3] not in (labels[0], labels[4])
+    # canonical label = smallest member
+    assert labels[0] == 0 and labels[4] == 4 and labels[3] == 3
+
+
+def test_cluster_families_thresholds():
+    pairs = np.array([[0, 1], [2, 3], [4, 5]], np.int32)
+    pid = np.array([90.0, 30.0, np.nan])
+    fams = cluster_families(6, pairs, pid, min_pid=50.0)
+    assert fams.n_families == 1
+    np.testing.assert_array_equal(fams.families[0], [0, 1])
+    np.testing.assert_array_equal(fams.edge_mask, [True, False, False])
+
+
+def test_all_pairs_search_end_to_end(corpus):
+    res = all_pairs_search(corpus["ids"], corpus["lens"],
+                           AllPairsConfig(lsh=CFG, min_pid=60.0))
+    labels = corpus["labels"]
+    # every discovered family must be pure under the planted ground truth
+    for fam in res.families.families:
+        assert len(set(labels[fam])) == 1, f"mixed family {fam}"
+    assert res.families.n_families >= 5       # most planted families surface
+    # scored arrays align with the candidate pairs
+    assert len(res.scored.scores) == res.join.n_candidates
+    assert res.scored.pid is not None
+
+
+def test_all_pairs_search_reuses_index(corpus, index):
+    res = all_pairs_search(corpus["ids"], corpus["lens"],
+                           AllPairsConfig(lsh=CFG), index=index)
+    assert res.index is index
+    with pytest.raises(ValueError, match="corpus"):
+        all_pairs_search(corpus["ids"][:4], corpus["lens"][:4],
+                         AllPairsConfig(lsh=CFG), index=index)

@@ -1,0 +1,53 @@
+"""index.stats: occupancy histograms and the splitmix key-diversity claim."""
+import numpy as np
+
+from repro.core import LSHConfig
+from repro.data import SyntheticProteinConfig, make_protein_sets
+from repro.index import (SignatureIndex, band_stats, compare_schemes,
+                         occupancy_report)
+
+CFG = LSHConfig(k=3, T=13, f=32, d=1)
+
+
+def _refs(n=512, seed=9):
+    d = make_protein_sets(SyntheticProteinConfig(
+        n_refs=n, n_homolog_queries=0, n_decoy_queries=0,
+        ref_len_mean=120, ref_len_std=20, seed=seed))
+    return d["ref_ids"], d["ref_lens"]
+
+
+def test_band_stats_consistency():
+    ids, lens = _refs()
+    idx = SignatureIndex.build(CFG, ids, lens)
+    stats = band_stats(idx)
+    assert len(stats) == idx.n_bands
+    n_valid = int(idx.valid.sum())
+    for s in stats:
+        assert s.n_entries == n_valid
+        assert 1 <= s.max_bucket <= n_valid
+        assert 0.0 <= s.entropy_frac <= 1.0
+        assert s.expected_probe >= 1.0
+        assert sum(s.hist.values()) == s.n_buckets
+    assert "entropy" in occupancy_report(idx)
+
+
+def test_empty_index_stats():
+    ids = np.zeros((0, 1), np.int8)
+    lens = np.zeros((0,), np.int32)
+    stats = band_stats(SignatureIndex.build(CFG, ids, lens))
+    assert all(s.n_entries == 0 for s in stats)
+
+
+def test_splitmix_recovers_key_diversity():
+    """The ROADMAP key-entropy question, answered: splitmix hyperplane bits
+    must spread buckets far more evenly than the position-skewed Java hash
+    (higher occupancy entropy, cheaper expected probe)."""
+    ids, lens = _refs()
+    res = compare_schemes(CFG, ids, lens)
+    for b in range(len(res["java"])):
+        java, splitmix = res["java"][b], res["splitmix"][b]
+        assert splitmix.entropy_frac > java.entropy_frac
+        assert splitmix.expected_probe < java.expected_probe
+        assert splitmix.max_bucket <= java.max_bucket
+    # and the gap is large, not marginal: near-ideal entropy for splitmix
+    assert min(s.entropy_frac for s in res["splitmix"]) > 0.9
