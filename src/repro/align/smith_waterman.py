@@ -96,6 +96,123 @@ def _sw_scores_batch(qs, rs):
     return jax.vmap(lambda a, b: _sw_dp(a, b)[0])(qs, rs)
 
 
+def sw_scores_device(qs, rs) -> jax.Array:
+    """Device-resident wave entry: (B, Lq) x (B, Lr) int8 device (or host)
+    arrays -> (B,) int32 best scores, returned *on device* without a host
+    sync — the all-pairs scheduler chains this behind its fused gather and
+    drains results through an async ring (`repro.allpairs.tiles`)."""
+    return _sw_scores_batch(qs, rs)
+
+
+# ------------------------------------------------------------ device gather
+def gather_rows(ids_dev, lens_dev, idx, L: int):
+    """Fused wave gather: (N, Lmax) device corpus -> (B, L) PAD-masked block
+    for row indices ``idx`` (idx < 0 marks padding slots -> all-PAD rows).
+    The corpus is uploaded once; per-wave H2D traffic is just ``idx``."""
+    safe = jnp.maximum(idx, 0)
+    rows = ids_dev[safe, :min(L, ids_dev.shape[1])]
+    if rows.shape[1] < L:       # padded ladder exceeds the corpus width
+        rows = jnp.pad(rows, ((0, 0), (0, L - rows.shape[1])),
+                       constant_values=PAD)
+    ln = jnp.where(idx >= 0, lens_dev[safe], 0)
+    pos = jnp.arange(L, dtype=jnp.int32)[None, :]
+    return jnp.where(pos < ln[:, None], rows, PAD)
+
+
+@functools.partial(jax.jit, static_argnames=("Lq", "Lr"))
+def sw_gather_scores(q_ids, q_lens, r_ids, r_lens, qi, ri, *,
+                     Lq: int, Lr: int) -> jax.Array:
+    """ONE jitted program: gather both pair sides from device-resident
+    corpora and run the full SW wave. (qi, ri) (B,) int32 with -1 padding;
+    padding slots score 0. Used by the all-pairs scheduler (q_ids is r_ids)
+    and the serving re-rank (queries vs the reference store)."""
+    qm = gather_rows(q_ids, q_lens, qi, Lq)
+    rm = gather_rows(r_ids, r_lens, ri, Lr)
+    return _sw_scores_batch(qm, rm)
+
+
+# ------------------------------------------------------------ ungapped X-drop
+_UNROLL = 16       # scan unroll: amortizes CPU per-step dispatch overhead
+_INT16_MAX_L = 1024  # int16 carries are exact while 11*L + margins < 2^15
+
+
+def _ungapped_pair(q, r, x: int | None, dtype):
+    """Best X-drop-terminated ungapped diagonal run of one padded pair.
+
+    Cell (i, j) extends the run of (i-1, j-1) on its diagonal:
+
+        c[i,j] = cur[i-1,j-1] + s[i,j]
+
+    and the run *restarts* (c -> 0, run-best -> 0) when it goes non-positive
+    (Kadane's reset — local alignments never keep negative prefixes) or,
+    with finite ``x``, when it X-drops: the run fell more than ``x`` below
+    its own running best (BLAST's ungapped-extension termination rule). The
+    returned score is the max of c over all cells; ``x=None`` is the x->inf
+    limit — exactly the best ungapped local segment score (max-subarray per
+    diagonal) — and drops the run-best carry from the recurrence.
+
+    Indexing the carries by reference column j makes the diagonal
+    predecessor a right-shift of the carry row, so each DP row is
+    elementwise — no prefix scan — which (plus int16 lanes for short waves
+    and an unrolled scan) is what makes this a cheap prefilter for the
+    gapped wave.
+    """
+    # masked cells: any run is killed, yet cur + neg can't underflow dtype
+    neg = dtype(-(1 << 14)) if dtype == jnp.int16 else jnp.int32(NEG)
+    B = jnp.asarray(BLOSUM62_PADDED, dtype)
+    sub = B[q.astype(jnp.int32)][:, r.astype(jnp.int32)]
+    valid = (q[:, None] != PAD) & (r[None, :] != PAD)
+    sub = jnp.where(valid, sub, neg)
+    Lr = sub.shape[1]
+    z = jnp.zeros(Lr, dtype)
+
+    if x is None:
+        def row(carry, s_row):
+            cur, gbest = carry
+            cur_s = jnp.concatenate([jnp.zeros(1, dtype), cur[:-1]])
+            c = jnp.maximum(cur_s + s_row, 0)
+            return (c, jnp.maximum(gbest, jnp.max(c))), None
+
+        (_, best), _ = jax.lax.scan(row, (z, jnp.zeros((), dtype)), sub,
+                                    unroll=_UNROLL)
+    else:
+        # any x above the max possible run score (11 * L) never triggers a
+        # drop, so clamping keeps huge margins exact AND inside the dtype
+        cap = (1 << 14) if dtype == jnp.int16 else (1 << 30)
+        xv = dtype(min(int(x), cap))
+
+        def row(carry, s_row):
+            cur, rbest, gbest = carry
+            cur_s = jnp.concatenate([jnp.zeros(1, dtype), cur[:-1]])
+            rb_s = jnp.concatenate([jnp.zeros(1, dtype), rbest[:-1]])
+            c = cur_s + s_row
+            drop = (c <= 0) | (rb_s - c > xv)
+            c = jnp.where(drop, 0, c).astype(dtype)
+            rb = jnp.where(drop, 0, jnp.maximum(rb_s, c)).astype(dtype)
+            return (c, rb, jnp.maximum(gbest, jnp.max(c))), None
+
+        (_, _, best), _ = jax.lax.scan(
+            row, (z, z, jnp.zeros((), dtype)), sub, unroll=_UNROLL)
+    return best.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("x",))
+def _ungapped_batch(qs, rs, x: int | None = None):
+    small = max(qs.shape[1], rs.shape[1]) <= _INT16_MAX_L
+    dtype = jnp.int16 if small else jnp.int32
+    return jax.vmap(lambda q, r: _ungapped_pair(q, r, x, dtype))(qs, rs)
+
+
+def ungapped_xdrop_scores(qs, rs, *, x: int | None = None) -> jax.Array:
+    """Batched ungapped X-drop scores: (B, Lq) x (B, Lr) int8 -> (B,) int32,
+    on device (no host sync). ``x=None`` disables the drop test (plain best
+    ungapped segment, the max-recall and fastest setting). Always a lower
+    bound of the gapped SW score, so thresholding on it never *adds* pairs —
+    the all-pairs prefilter contract.
+    """
+    return _ungapped_batch(jnp.asarray(qs), jnp.asarray(rs), x)
+
+
 @jax.jit
 def _sw_batch_with_matrix(qs, rs):
     def one(q, r):

@@ -14,7 +14,11 @@ index:
 * ``selfjoin`` — :func:`lsh_self_join`: exact band-collision enumeration
   with the grow-and-retry capacity discipline; CSR adjacency output.
 * ``tiles``   — :func:`score_pairs`: (tile_i, tile_j) blocks, padded-length
-  ladder, batched SW waves (jnp row-wave or the Pallas tile kernel).
+  ladder, *device-resident* batched SW waves — fused on-device gathers
+  (corpus uploaded once, per-wave H2D is just pair indices), an optional
+  ungapped X-drop prefilter that skips full DP for hopeless pairs, and
+  async double-buffered dispatch drained through a small in-flight ring
+  (jnp row-wave or the Pallas tile kernel).
 * ``graph``   — :func:`cluster_families`: PID/score-thresholded edges,
   union-find components, families largest-first.
 """

@@ -125,19 +125,20 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
             f"has a degenerate bucket (see repro.index.stats) — raise "
             f"max_grow or increase bands/d selectivity")
 
-    cap = max_pairs
+    if need > max_grow:
+        _raise()
+    # Emission runs ONCE at the exact per-band capacity (it can never
+    # truncate); only the deduplicated cross-band union below grows, so a
+    # retry re-runs just the dedup/compact step, never the emission.
+    bufs = [
+        _emit_bucket_pairs(offsets, ids, cap=need)
+        for (keys, offsets, ids), tot in zip(index._csr_dev, totals)
+        if tot > 0]
+    if not bufs:
+        return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
+    cand = jnp.concatenate(bufs, axis=0)
+    cap = max(max_pairs, need)
     while True:
-        if need > cap:
-            if need > max_grow:
-                _raise()
-            cap = need              # exact: emission can never truncate
-        bufs = [
-            _emit_bucket_pairs(offsets, ids, cap=cap)
-            for (keys, offsets, ids), tot in zip(index._csr_dev, totals)
-            if tot > 0]
-        if not bufs:
-            return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
-        cand = jnp.concatenate(bufs, axis=0)
         pairs, count = _dedup_filter(cand, index.device_sigs,
                                      max_pairs=cap, d=d)
         if int(count) <= cap:

@@ -1,9 +1,10 @@
-"""Tiled pair scheduler: candidate pairs -> fixed-shape batched SW waves.
+"""Tiled pair scheduler: candidate pairs -> device-resident batched SW waves.
 
 At corpus scale the candidate set of the self-join is far too ragged to
-score naively: pair lengths vary, and per-pair DP calls retrace the jit
-cache for every new (Lq, Lr) and leave the device idle between dispatches.
-The scheduler imposes structure in three steps:
+score naively: pair lengths vary, per-pair DP calls retrace the jit cache
+for every new (Lq, Lr), and any host work between dispatches leaves the
+device idle. The scheduler imposes structure — and keeps the whole hot path
+on device:
 
 1. **(tile_i, tile_j) blocks** — pairs are grouped by the corpus tile of
    each endpoint (tile size ~ device-memory budget for gathered sequences),
@@ -12,44 +13,97 @@ The scheduler imposes structure in three steps:
 2. **length buckets** — within a block, pairs are bucketed by their padded
    (Lq, Lr) on a quantized ladder (same idea as ``QueryEngine``'s padding
    ladder: a small, closed set of shapes keeps the jit cache stable).
-3. **waves** — each bucket is chunked into fixed-size (B, Lq, Lr) pair
-   blocks, padded with all-PAD rows (which score 0 and are discarded), and
-   dispatched as one jitted Smith-Waterman row-wave program — optionally the
-   Pallas tile kernel (``use_pallas=True``).
+3. **fused device gather** — the padded corpus ``(N, Lmax)`` is uploaded
+   ONCE; each wave is one jitted take-and-mask program over pair index
+   arrays (``ids[pair_idx, :Lq]``), so the only per-wave H2D traffic is the
+   (B,) index vectors — no per-pair host copy loop
+   (``device_gather=False`` restores the PR 2 host path, bit-exact).
+4. **ungapped X-drop prefilter** (``prefilter=True``) — every wave first
+   runs a cheap ungapped diagonal scan (BLAST-style X-drop extension, an
+   elementwise DP with no within-row prefix scan); only pairs whose
+   ungapped score reaches ``prefilter_min`` proceed to the full gapped
+   wave. The ungapped score is a *lower bound* of the SW score, so the
+   filter never adds pairs; rejected pairs report their ungapped score
+   (``kept`` marks the survivors, whose scores are full SW, bit-exact).
+5. **async double-buffered dispatch** — wave n+1's gather+DP is issued
+   while wave n's scores are still in flight; a small FIFO ring
+   (``inflight``) drains ``device_get`` results, so wall-clock tracks
+   device DP time instead of Python dispatch.
+
+    pairs ──wave_plan──▶ [gather ▶ prefilter ▶ full SW] ──▶ drain ring
+                           (one jitted program per wave shape)
 
 Scores (and optionally PID via the batched wave + host traceback) come back
 aligned with the input pair order.
 """
 from __future__ import annotations
 
+import functools
+import time
+from collections import deque
 from dataclasses import dataclass
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from ..align.smith_waterman import sw_align_batch, sw_wave_pid
+from ..align.smith_waterman import (gather_rows, sw_gather_scores,
+                                    sw_scores_device, sw_wave_pid,
+                                    ungapped_xdrop_scores)
 from ..core.alphabet import PAD
+from ..kernels.sw import on_tpu
 
 
 @dataclass(frozen=True)
 class WaveConfig:
     tile: int = 1024             # corpus rows per (tile_i, tile_j) block
-    wave_batch: int = 64         # pairs per SW wave (upper bound)
+    wave_batch: int = 64         # pairs per full-SW wave (upper bound)
     len_quantum: int = 64        # pad pair lengths to multiples of this
     max_wave_cells: int = 1 << 23  # B*Lq*Lr budget; shrinks B for long pairs
-    use_pallas: bool = False     # score-only waves via the Pallas tile
-                                 # kernel (ignored when with_pid is set —
-                                 # the PID traceback needs the DP matrices,
-                                 # which only the jnp wave materializes)
+    device_gather: bool = True   # fused on-device wave gather (False: PR 2
+                                 # host copy loop, bit-exact, for comparison)
+    inflight: int = 2            # async ring depth: waves in flight before
+                                 # the oldest result is drained to host
+    prefilter: bool = False      # ungapped X-drop prefilter before full SW
+    prefilter_min: int = 40      # skip full SW below this ungapped score
+    xdrop: int | None = None     # X-drop termination margin; None is the
+                                 # x->inf limit (plain best ungapped
+                                 # segment): max recall AND fastest (the
+                                 # run-best carry drops out of the scan)
+    prefilter_batch: int = 256   # pairs per prefilter wave (the ungapped
+                                 # scan is elementwise, so it batches wider)
+    use_pallas: bool | None = None  # route score-only waves through the
+                                 # Pallas tile kernel; None = auto (TPU
+                                 # only — interpret mode is slower than the
+                                 # jnp wave off-TPU). Ignored with with_pid
+                                 # (the PID traceback needs the DP matrices,
+                                 # which only the jnp wave materializes).
+    pallas_interpret: bool | None = None  # kernel interpret override
+                                 # (None = autodetect by backend)
     with_pid: bool = False       # also run the batched PID traceback
+    profile: bool = False        # block after each phase for an accurate
+                                 # gather/DP/drain time split (slower)
 
 
 @dataclass(frozen=True)
 class PairScores:
     scores: np.ndarray           # (P,) int32 SW best score per input pair
+                                 # (prefilter-rejected pairs: ungapped score,
+                                 # a lower bound — see ``kept``)
     pid: np.ndarray | None       # (P,) float64 percent identity (with_pid)
     aln_len: np.ndarray | None   # (P,) int64 alignment length (with_pid)
-    n_waves: int                 # jitted dispatches issued
-    n_shapes: int                # distinct (B, Lq, Lr) wave shapes compiled
+    n_waves: int                 # jitted dispatches issued (incl. prefilter)
+    n_shapes: int                # distinct wave shapes compiled
+    ungapped: np.ndarray | None = None  # (P,) int32 prefilter scores
+    kept: np.ndarray | None = None      # (P,) bool — pair ran full SW
+    timings: dict | None = None  # coarse phase seconds: host_gather,
+                                 # dispatch (gather/DP issue), drain,
+                                 # prefilter, pid_wave (device DP + H
+                                 # transfer + host traceback combined)
+
+    @property
+    def n_prefiltered(self) -> int:
+        return 0 if self.kept is None else int((~self.kept).sum())
 
 
 def _quantize(lens: np.ndarray, quantum: int) -> np.ndarray:
@@ -77,12 +131,189 @@ def wave_plan(pairs: np.ndarray, lens: np.ndarray, cfg: WaveConfig):
         yield order[s:e], int(keys[s, 2]), int(keys[s, 3])
 
 
+# ---------------------------------------------------------------- device side
+@functools.partial(jax.jit, static_argnames=("Lq", "Lr"))
+def _gather_wave(ids_dev, lens_dev, pi, pj, *, Lq: int, Lr: int):
+    return (gather_rows(ids_dev, lens_dev, pi, Lq),
+            gather_rows(ids_dev, lens_dev, pj, Lr))
+
+
+@functools.partial(jax.jit, static_argnames=("x", "Lq", "Lr"))
+def _wave_ungapped_device(ids_dev, lens_dev, pi, pj, *, x: int | None,
+                          Lq: int, Lr: int):
+    """Fused gather + ungapped X-drop prefilter scan."""
+    qm, rm = _gather_wave(ids_dev, lens_dev, pi, pj, Lq=Lq, Lr=Lr)
+    return ungapped_xdrop_scores(qm, rm, x=x)
+
+
+class _DrainRing:
+    """FIFO of in-flight device results. JAX dispatch is async: pushing wave
+    n+1 before fetching wave n overlaps its gather+DP with wave n's D2H
+    transfer; only when the ring exceeds ``depth`` does the oldest result
+    block on ``np.asarray`` (device_get)."""
+
+    def __init__(self, depth: int, sink):
+        self.depth = max(0, depth)
+        self.sink = sink                # sink(slots, host_values)
+        self._q: deque = deque()
+
+    def push(self, slots, dev) -> None:
+        self._q.append((slots, dev))
+        while len(self._q) > self.depth:
+            self._pop()
+
+    def _pop(self) -> None:
+        slots, dev = self._q.popleft()
+        self.sink(slots, np.asarray(dev))
+
+    def drain(self) -> None:
+        while self._q:
+            self._pop()
+
+
+# ---------------------------------------------------------------- scheduler
+class _WaveStats:
+    def __init__(self):
+        self.n_waves = 0
+        self.shapes: set = set()
+        self.t = {"host_gather": 0.0, "dispatch": 0.0, "drain": 0.0,
+                  "prefilter": 0.0, "pid_wave": 0.0}
+
+
+def _host_gather(ids, lens, pairs, chunk, B, Lq, Lr):
+    """PR 2 path: assemble the wave with a per-pair host copy loop."""
+    qm = np.full((B, Lq), PAD, np.int8)
+    rm = np.full((B, Lr), PAD, np.int8)
+    for n, p in enumerate(chunk):
+        i, j = pairs[p]
+        qm[n, :lens[i]] = ids[i, :lens[i]]
+        rm[n, :lens[j]] = ids[j, :lens[j]]
+    return qm, rm
+
+
+def _pad_chunk(pairs, chunk, B):
+    """Pair index vectors for one wave, -1-padded to the fixed batch B."""
+    pi = np.full(B, -1, np.int32)
+    pj = np.full(B, -1, np.int32)
+    pi[:len(chunk)] = pairs[chunk, 0]
+    pj[:len(chunk)] = pairs[chunk, 1]
+    return pi, pj
+
+
+def _score_block(qm, rm, kind: str, x: int | None, use_pallas: bool,
+                 cfg: WaveConfig):
+    """Score one assembled (B, Lq) x (B, Lr) block on device."""
+    if use_pallas:
+        from ..kernels import ops
+        if kind == "ungapped":
+            return ops.ungapped_wave_scores(
+                qm, rm, x=2**30 if x is None else x,
+                interpret=cfg.pallas_interpret)
+        return ops.sw_wave_scores(qm, rm, interpret=cfg.pallas_interpret)
+    if kind == "ungapped":
+        return ungapped_xdrop_scores(qm, rm, x=x)
+    return sw_scores_device(jnp.asarray(qm), jnp.asarray(rm))
+
+
+def _iter_wave_chunks(sub, lens, cfg: WaveConfig, wave_batch: int):
+    """Shared wave-chunking skeleton: walk the dispatch plan, shrink the
+    batch to the cell budget, and yield fixed-shape (chunk, B, Lq, Lr)
+    work units (the last chunk of a bucket may be shorter than B — the
+    dispatchers pad it). Single source of truth for the score and PID
+    paths, so wave shapes can never diverge between them."""
+    for idx, Lq, Lr in wave_plan(sub, lens, cfg):
+        B = max(1, min(wave_batch, cfg.max_wave_cells // (Lq * Lr)))
+        for s in range(0, len(idx), B):
+            yield idx[s:s + B], B, Lq, Lr
+
+
+def _run_score_waves(ids, lens, pairs, subset, cfg: WaveConfig, dev, out,
+                     stats: _WaveStats, *, kind: str, wave_batch: int,
+                     use_pallas: bool) -> None:
+    """Dispatch score-only waves (``kind``: "sw" | "ungapped") over
+    ``pairs[subset]``, writing results into ``out[subset[...]]`` through the
+    async drain ring."""
+    sub = pairs[subset]
+
+    def sink(slots, host):
+        out[slots] = host[:len(slots)]
+
+    ring = _DrainRing(0 if cfg.profile else cfg.inflight, sink)
+    for chunk, B, Lq, Lr in _iter_wave_chunks(sub, lens, cfg, wave_batch):
+        t0 = time.perf_counter()
+        if dev is None:                     # host-gather (PR 2) path
+            qm, rm = _host_gather(ids, lens, sub, chunk, B, Lq, Lr)
+            stats.t["host_gather"] += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res = _score_block(qm, rm, kind, cfg.xdrop, use_pallas, cfg)
+        elif use_pallas:                    # device gather -> Pallas tile
+            pi, pj = _pad_chunk(sub, chunk, B)
+            qm, rm = _gather_wave(dev[0], dev[1], jnp.asarray(pi),
+                                  jnp.asarray(pj), Lq=Lq, Lr=Lr)
+            res = _score_block(qm, rm, kind, cfg.xdrop, True, cfg)
+        elif kind == "ungapped":            # fused gather + scan
+            pi, pj = _pad_chunk(sub, chunk, B)
+            res = _wave_ungapped_device(dev[0], dev[1], pi, pj,
+                                        x=cfg.xdrop, Lq=Lq, Lr=Lr)
+        else:
+            pi, pj = _pad_chunk(sub, chunk, B)
+            res = sw_gather_scores(dev[0], dev[1], dev[0], dev[1],
+                                   pi, pj, Lq=Lq, Lr=Lr)
+        if cfg.profile:
+            jax.block_until_ready(res)
+        key = "prefilter" if kind == "ungapped" else "dispatch"
+        stats.t[key] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ring.push(subset[chunk], res)
+        stats.t["drain"] += time.perf_counter() - t0
+        stats.n_waves += 1
+        stats.shapes.add((kind, B, Lq, Lr))
+    t0 = time.perf_counter()
+    ring.drain()
+    stats.t["drain"] += time.perf_counter() - t0
+
+
+def _run_pid_waves(ids, lens, pairs, subset, cfg: WaveConfig, dev,
+                   scores, pid, aln, stats: _WaveStats) -> None:
+    """PID waves: batched DP (+ matrices) then the host traceback. The
+    traceback is host-bound either way, so this path drains synchronously;
+    the device gather still removes the per-pair copy loop."""
+    sub = pairs[subset]
+    for chunk, B, Lq, Lr in _iter_wave_chunks(sub, lens, cfg,
+                                              cfg.wave_batch):
+        t0 = time.perf_counter()
+        if dev is None:
+            qm, rm = _host_gather(ids, lens, sub, chunk, B, Lq, Lr)
+            stats.t["host_gather"] += time.perf_counter() - t0
+        else:
+            pi, pj = _pad_chunk(sub, chunk, B)
+            qmd, rmd = _gather_wave(dev[0], dev[1], jnp.asarray(pi),
+                                    jnp.asarray(pj), Lq=Lq, Lr=Lr)
+            qm, rm = np.asarray(qmd), np.asarray(rmd)
+            stats.t["dispatch"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pw, lw, sw = sw_wave_pid(qm, rm, chunk=B)
+        # one bucket for the whole PID wave: device DP + H-matrix D2H +
+        # host traceback (sw_wave_pid interleaves them internally)
+        stats.t["pid_wave"] += time.perf_counter() - t0
+        slots = subset[chunk]
+        pid[slots] = pw[:len(chunk)]
+        aln[slots] = lw[:len(chunk)]
+        scores[slots] = sw[:len(chunk)]
+        stats.n_waves += 1
+        stats.shapes.add(("pid", B, Lq, Lr))
+
+
 def score_pairs(ids: np.ndarray, lens: np.ndarray, pairs: np.ndarray,
                 cfg: WaveConfig | None = None) -> PairScores:
     """Score every (i, j) candidate pair with batched Smith-Waterman waves.
 
     ids (N, L) int8 PAD-padded corpus, lens (N,), pairs (P, 2) int32.
     Returns scores (and PID when ``cfg.with_pid``) aligned with ``pairs``.
+    With ``cfg.prefilter`` the ungapped X-drop scan runs first and only
+    survivors (``result.kept``) pay the full DP — their scores are bit-exact
+    with the unfiltered path; rejected pairs report the ungapped lower
+    bound (and PID 0).
     """
     cfg = cfg or WaveConfig()
     pairs = np.asarray(pairs, np.int32)
@@ -91,32 +322,34 @@ def score_pairs(ids: np.ndarray, lens: np.ndarray, pairs: np.ndarray,
     scores = np.zeros(P, np.int32)
     pid = np.zeros(P) if cfg.with_pid else None
     aln = np.zeros(P, np.int64) if cfg.with_pid else None
-    n_waves = 0
-    shapes: set[tuple[int, int, int]] = set()
-    for idx, Lq, Lr in wave_plan(pairs, lens, cfg):
-        # shrink the wave batch so B*Lq*Lr respects the cell budget
-        B = max(1, min(cfg.wave_batch, cfg.max_wave_cells // (Lq * Lr)))
-        for s in range(0, len(idx), B):
-            chunk = idx[s:s + B]
-            qm = np.full((B, Lq), PAD, np.int8)
-            rm = np.full((B, Lr), PAD, np.int8)
-            for n, p in enumerate(chunk):
-                i, j = pairs[p]
-                qm[n, :lens[i]] = ids[i, :lens[i]]
-                rm[n, :lens[j]] = ids[j, :lens[j]]
-            if cfg.with_pid:
-                pw, lw, sw = sw_wave_pid(qm, rm, chunk=B)
-                pid[chunk] = pw[:len(chunk)]
-                aln[chunk] = lw[:len(chunk)]
-                scores[chunk] = sw[:len(chunk)]
-            elif cfg.use_pallas:
-                from ..kernels import ops
-                sw = np.asarray(ops.sw_wave_scores(qm, rm))
-                scores[chunk] = sw[:len(chunk)]
-            else:
-                sw = sw_align_batch(qm, rm)
-                scores[chunk] = sw[:len(chunk)]
-            n_waves += 1
-            shapes.add((B, Lq, Lr))
+    stats = _WaveStats()
+    use_pallas = (cfg.use_pallas if cfg.use_pallas is not None
+                  else (on_tpu() and not cfg.with_pid))
+    dev = ((jnp.asarray(ids), jnp.asarray(lens))
+           if cfg.device_gather and P else None)
+
+    everything = np.arange(P)
+    ungapped = None
+    kept = None
+    subset = everything
+    if cfg.prefilter and P:
+        ungapped = np.zeros(P, np.int32)
+        _run_score_waves(ids, lens, pairs, everything, cfg, dev, ungapped,
+                         stats, kind="ungapped",
+                         wave_batch=cfg.prefilter_batch,
+                         use_pallas=use_pallas)
+        kept = ungapped >= cfg.prefilter_min
+        scores[:] = ungapped        # lower bound for the rejected pairs
+        subset = np.flatnonzero(kept)
+    if len(subset):
+        if cfg.with_pid:
+            _run_pid_waves(ids, lens, pairs, subset, cfg, dev,
+                           scores, pid, aln, stats)
+        else:
+            _run_score_waves(ids, lens, pairs, subset, cfg, dev, scores,
+                             stats, kind="sw", wave_batch=cfg.wave_batch,
+                             use_pallas=use_pallas)
     return PairScores(scores=scores, pid=pid, aln_len=aln,
-                      n_waves=n_waves, n_shapes=len(shapes))
+                      n_waves=stats.n_waves, n_shapes=len(stats.shapes),
+                      ungapped=ungapped, kept=kept,
+                      timings=dict(stats.t))

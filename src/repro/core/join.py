@@ -108,9 +108,32 @@ def band_bit_groups(f: int, bands: int, *, interleave: bool = False):
     return [np.arange(edges[b], edges[b + 1]) for b in range(bands)]
 
 
-def band_keys(sigs, f: int, bands: int, *,
-              interleave: bool = False) -> jnp.ndarray:
-    """Per-band integer keys: (N, bands) uint32 (band width <= 32 bits)."""
+def mix32(keys) -> jnp.ndarray:
+    """Splitmix-style 32-bit finalizer (murmur3 fmix32) over uint32 keys.
+
+    A *bijection* on uint32, so equality classes — and therefore bucket
+    membership and the pigeonhole guarantee — are exactly preserved; what
+    changes is that the mixed keys are uniform over the word, so anything
+    that partitions by key arithmetic (``key % n_shards`` bucket sharding,
+    hash tables) sees splitmix-grade diversity even when the raw band bits
+    are position-skewed (the Java hashCode problem measured in
+    ``index.stats``).
+    """
+    h = jnp.asarray(keys, jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> 16)
+
+
+def band_keys(sigs, f: int, bands: int, *, interleave: bool = False,
+              key_hash: str = "none") -> jnp.ndarray:
+    """Per-band integer keys: (N, bands) uint32 (band width <= 32 bits).
+
+    ``key_hash="splitmix"`` mixes each band key through :func:`mix32`
+    before bucketing (exactness-preserving — the mix is bijective).
+    """
     bits = unpack_bits(sigs, f)                      # (N, f) in {0,1}
     keys = []
     for grp in band_bit_groups(f, bands, interleave=interleave):
@@ -118,7 +141,12 @@ def band_keys(sigs, f: int, bands: int, *,
         w = seg.shape[-1]
         assert w <= 32, "band width must fit a uint32 key"
         keys.append(jnp.sum(seg << jnp.arange(w, dtype=jnp.uint32), axis=-1))
-    return jnp.stack(keys, axis=-1)
+    out = jnp.stack(keys, axis=-1)
+    if key_hash == "splitmix":
+        return mix32(out)
+    if key_hash != "none":
+        raise ValueError(f"unknown key_hash {key_hash!r}")
+    return out
 
 
 def dedup_pairs(cand):

@@ -209,8 +209,22 @@ class QueryEngine:
         self._probe_cap = self.cfg.probe_cap
         self._queue: list[tuple[np.ndarray, int]] = []
         self._stats = _Stats()
+        self._ref_dev = None            # device-resident (ids, lens) for the
+                                        # SW re-rank gather (uploaded once)
         if self.cfg.rerank and ref_seqs is None:
             raise ValueError("rerank=True needs ref_seqs=(ref_ids, ref_lens)")
+        self._ref_dev_src = None        # the ref_seqs the snapshot mirrors
+        if self.cfg.rerank:       # upload once; skipped when never re-ranking
+            self._upload_refs()
+
+    def _upload_refs(self) -> None:
+        """Mirror ``self.ref_seqs`` on device for the re-rank gather. Rebind
+        ``engine.ref_seqs`` to refresh (e.g. after ``index.add``); in-place
+        mutation of the arrays is not tracked (same contract as the index's
+        own signatures, which are computed at build time)."""
+        self._ref_dev = (jnp.asarray(np.asarray(self.ref_seqs[0], np.int8)),
+                         jnp.asarray(np.asarray(self.ref_seqs[1], np.int32)))
+        self._ref_dev_src = self.ref_seqs
 
     # ------------------------------------------------------------ queue
     def submit(self, seq) -> None:
@@ -329,22 +343,42 @@ class QueryEngine:
 
     # ------------------------------------------------------------ rerank
     def _rerank(self, ids, lens, nid, nd):
-        """Reorder each query's top-k by Smith-Waterman score (descending)."""
-        from ..align.smith_waterman import sw_align_batch
-        ref_ids, ref_lens = self.ref_seqs
+        """Reorder each query's top-k by Smith-Waterman score (descending).
+
+        Device-resident: the reference corpus was uploaded once at engine
+        construction; both pair sides are gathered *on device* inside one
+        jitted gather+DP program (`align.smith_waterman.sw_gather_scores`) —
+        the only H2D traffic per call is the query batch and the (M,) index
+        vectors, never a per-pair host copy loop. The (query, slot) pair
+        list is padded to a fixed M (all-PAD rows score 0) so the jit cache
+        sees one shape per (batch, k) configuration.
+        """
+        from ..align.smith_waterman import sw_gather_scores
+        if self.ref_seqs is not self._ref_dev_src:
+            self._upload_refs()     # caller rebound ref_seqs (index.add etc.)
+        ref_ids_dev, ref_lens_dev = self._ref_dev
         B, K = nid.shape
         qi, ki = np.nonzero(nid >= 0)
         if len(qi) == 0:
             return nid, nd
         rid = nid[qi, ki]
-        Lq = ids.shape[1]
-        Lr = ref_ids.shape[1]
-        qmat = np.full((len(qi), Lq), PAD, np.int8)
-        rmat = np.full((len(qi), Lr), PAD, np.int8)
-        for n, (a, r) in enumerate(zip(qi, rid)):
-            qmat[n] = ids[a]
-            rmat[n] = ref_ids[r]
-        scores = sw_align_batch(qmat, rmat)
+        if rid.max(initial=-1) >= ref_ids_dev.shape[0]:
+            # the on-device gather clamps instead of raising — fail loudly
+            # rather than silently re-rank against the wrong reference
+            raise IndexError(
+                f"re-rank hit reference id {int(rid.max())} outside "
+                f"ref_seqs ({int(ref_ids_dev.shape[0])} rows); pass the "
+                f"grown corpus as ref_seqs after index.add()")
+        M = -(-len(qi) // 64) * 64          # fixed-shape ladder for the wave
+        qv = np.full(M, -1, np.int32)
+        rv = np.full(M, -1, np.int32)
+        qv[:len(qi)] = qi
+        rv[:len(qi)] = rid
+        scores = np.asarray(sw_gather_scores(
+            jnp.asarray(np.asarray(ids, np.int8)),
+            jnp.asarray(np.asarray(lens, np.int32)),
+            ref_ids_dev, ref_lens_dev, qv, rv,
+            Lq=ids.shape[1], Lr=int(ref_ids_dev.shape[1])))[:len(qi)]
         smat = np.full((B, K), -np.inf)
         smat[qi, ki] = scores
         order = np.argsort(-smat, axis=1, kind="stable")

@@ -54,13 +54,18 @@ class IndexConfigMismatch(RuntimeError):
 
 
 def config_fingerprint(cfg: LSHConfig, *, layout: str, bands: int,
-                       interleave: bool = True) -> str:
+                       interleave: bool = True,
+                       key_hash: str = "none") -> str:
     """Stable 16-hex-digit fingerprint of the index-relevant config."""
-    blob = json.dumps({
+    payload = {
         "cfg": {f: getattr(cfg, f) for f in _FINGERPRINT_FIELDS},
         "layout": layout, "bands": bands, "interleave": interleave,
         "format": FORMAT_VERSION,
-    }, sort_keys=True)
+    }
+    # key_hash="none" is omitted so pre-key-hash fingerprints stay valid
+    if key_hash != "none":
+        payload["key_hash"] = key_hash
+    blob = json.dumps(payload, sort_keys=True)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
@@ -82,16 +87,23 @@ class SignatureIndex:
 
     def __init__(self, cfg: LSHConfig, sigs: np.ndarray, valid: np.ndarray,
                  *, layout: str = "band", bands: int | None = None,
-                 interleave: bool = True):
+                 interleave: bool = True, key_hash: str = "splitmix"):
         if layout not in ("band", "flip"):
             raise ValueError(f"unknown index layout {layout!r}")
         if layout == "flip" and cfg.f > 32:
             raise ValueError("flip layout needs f <= 32 (paper used f=32)")
+        if key_hash not in ("splitmix", "none"):
+            raise ValueError(f"unknown key_hash {key_hash!r}")
         self.cfg = cfg
         self.layout = layout
         # Interleaved banding (bit i -> band i % bands) spreads the
         # position-skewed signature-bit entropy evenly; see band_bit_groups.
         self.interleave = bool(interleave)
+        # Serving default: splitmix-mix band keys before bucketing (a
+        # bijection — bucket membership is untouched; key *arithmetic*
+        # becomes skew-free, the ROADMAP "hash band keys" follow-on).
+        # key_hash="none" keeps the raw band bits for paper-fidelity runs.
+        self.key_hash = key_hash if layout == "band" else "none"
         self.bands = int(bands if bands is not None else max(cfg.d + 1, 1))
         if layout == "band" and self.bands < cfg.d + 1:
             raise ValueError("bands must be >= d+1 for an exact probe")
@@ -119,7 +131,8 @@ class SignatureIndex:
     def fingerprint(self) -> str:
         return config_fingerprint(self.cfg, layout=self.layout,
                                    bands=self.bands,
-                                   interleave=self.interleave)
+                                   interleave=self.interleave,
+                                   key_hash=self.key_hash)
 
     @property
     def device_sigs(self) -> jnp.ndarray:
@@ -135,13 +148,14 @@ class SignatureIndex:
     @classmethod
     def build(cls, cfg: LSHConfig, ref_ids, ref_lens, *,
               layout: str = "band", bands: int | None = None,
-              interleave: bool = True) -> "SignatureIndex":
+              interleave: bool = True,
+              key_hash: str = "splitmix") -> "SignatureIndex":
         """Run job 1 (signature generation + validity) over the reference set."""
         sl = ScalLoPS(cfg)
         sigs = np.asarray(sl.signatures(ref_ids, ref_lens))
         valid = np.asarray(sl.feature_counts(ref_ids, ref_lens)) > 0
         idx = cls(cfg, sigs, valid, layout=layout, bands=bands,
-                  interleave=interleave)
+                  interleave=interleave, key_hash=key_hash)
         idx._pipeline = sl
         return idx
 
@@ -173,7 +187,8 @@ class SignatureIndex:
                     for _ in range(self.bands)]
         kb = np.asarray(band_keys(jnp.asarray(self.sigs[valid_ids]),
                                   self.cfg.f, self.bands,
-                                  interleave=self.interleave))    # (V, bands)
+                                  interleave=self.interleave,
+                                  key_hash=self.key_hash))        # (V, bands)
         return [_sort_bucket(kb[:, b], valid_ids) for b in range(self.bands)]
 
     def _stack_csr(self) -> None:
@@ -219,7 +234,8 @@ class SignatureIndex:
         if self.layout == "flip":
             return q_sigs[:, 0][None, :]
         return band_keys(q_sigs, self.cfg.f, self.bands,
-                         interleave=self.interleave).T
+                         interleave=self.interleave,
+                         key_hash=self.key_hash).T
 
     def probe(self, q_sigs, *, cap: int):
         """Candidate generation: for each query, up to ``cap`` reference ids
@@ -256,6 +272,7 @@ class SignatureIndex:
             "layout": self.layout,
             "bands": self.bands,
             "interleave": self.interleave,
+            "key_hash": self.key_hash,
             "n_refs": self.size,
         }
         payload = {
@@ -288,22 +305,26 @@ class SignatureIndex:
             cfg = LSHConfig(**meta["cfg"])
             layout, bands = meta["layout"], int(meta["bands"])
             interleave = bool(meta.get("interleave", True))
+            # pre-key-hash indexes bucketed on raw band keys
+            key_hash = meta.get("key_hash", "none")
             stored = meta["fingerprint"]
             recomputed = config_fingerprint(cfg, layout=layout, bands=bands,
-                                            interleave=interleave)
+                                            interleave=interleave,
+                                            key_hash=key_hash)
             if stored != recomputed:
                 raise IndexConfigMismatch(
                     f"fingerprint {stored} does not match stored config "
                     f"(expected {recomputed}) — corrupt or stale index")
             if expected_cfg is not None:
                 want = config_fingerprint(expected_cfg, layout=layout,
-                                          bands=bands, interleave=interleave)
+                                          bands=bands, interleave=interleave,
+                                          key_hash=key_hash)
                 if want != stored:
                     raise IndexConfigMismatch(
                         f"index fingerprint {stored} != {want} for the "
                         f"requested config; rebuild the index")
             idx = cls(cfg, z["sigs"], z["valid"], layout=layout,
-                      bands=bands, interleave=interleave)
+                      bands=bands, interleave=interleave, key_hash=key_hash)
             csr = []
             for b in range(idx.n_bands):
                 csr.append((z[f"band{b}_keys"], z[f"band{b}_offsets"],

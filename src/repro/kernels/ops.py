@@ -17,11 +17,10 @@ from ..core.alphabet import PAD
 from . import ref as kref
 from .hamming import hamming_count_kernel, hamming_dist_kernel
 from .siggen import siggen_accumulate_kernel
-from .sw import sw_scores_kernel
+from .sw import (on_tpu, resolve_interpret, sw_scores_kernel,
+                 ungapped_scores_kernel)
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+_on_tpu = on_tpu  # back-compat alias
 
 
 def _pad_rows(x, mult, value=0):
@@ -69,18 +68,35 @@ def hamming_counts(q, r, d: int, *, bq: int = 256, br: int = 256,
     return out[:Q]
 
 
-def sw_wave_scores(qs, rs, *, bb: int = 8,
-                   prefer_ref: bool = False) -> jnp.ndarray:
+def sw_wave_scores(qs, rs, *, bb: int = 8, prefer_ref: bool = False,
+                   interpret: bool | None = None) -> jnp.ndarray:
     """Batched Smith-Waterman best scores for a (B, Lq) x (B, Lr) pair block
     via the Pallas row-wave kernel (padded + cropped); bit-exact with the
     jnp wave (`align.smith_waterman.sw_align_batch`), which is also the
-    ``prefer_ref`` fallback."""
+    ``prefer_ref`` fallback. ``interpret=None`` autodetects by backend."""
     if prefer_ref:
         from ..align.smith_waterman import _sw_scores_batch
         return _sw_scores_batch(jnp.asarray(qs), jnp.asarray(rs))
     qp, B = _pad_rows(jnp.asarray(qs), bb, value=PAD)
     rp, _ = _pad_rows(jnp.asarray(rs), bb, value=PAD)
-    out = sw_scores_kernel(qp, rp, bb=bb, interpret=not _on_tpu())
+    out = sw_scores_kernel(qp, rp, bb=bb, interpret=resolve_interpret(interpret))
+    return out[:B, 0]
+
+
+def ungapped_wave_scores(qs, rs, *, x: int = 20, bb: int = 8,
+                         prefer_ref: bool = False,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """Batched ungapped X-drop prefilter scores for a (B, Lq) x (B, Lr) pair
+    block via the Pallas diagonal-scan kernel (padded + cropped); bit-exact
+    with `align.smith_waterman.ungapped_xdrop_scores` (the ``prefer_ref``
+    fallback, which is also faster off-TPU)."""
+    if prefer_ref:
+        from ..align.smith_waterman import ungapped_xdrop_scores
+        return ungapped_xdrop_scores(qs, rs, x=x)
+    qp, B = _pad_rows(jnp.asarray(qs), bb, value=PAD)
+    rp, _ = _pad_rows(jnp.asarray(rs), bb, value=PAD)
+    out = ungapped_scores_kernel(qp, rp, x=x, bb=bb,
+                                 interpret=resolve_interpret(interpret))
     return out[:B, 0]
 
 

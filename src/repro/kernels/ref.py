@@ -22,3 +22,30 @@ def siggen_accumulate_ref(rows, cb, H, T: int) -> jnp.ndarray:
     scores = rows.astype(jnp.int32) @ cb.astype(jnp.int32).T   # (S, W)
     wts = jnp.where(scores >= T, scores, 0)
     return wts @ H.astype(jnp.int32)                           # (S, f)
+
+
+def ungapped_xdrop_ref(q, r, x: int) -> int:
+    """Host oracle for the ungapped X-drop diagonal scan: one encoded pair
+    (unpadded int8 arrays), walking every diagonal cell-by-cell with the
+    exact restart rule of ``align.smith_waterman._ungapped_pair``."""
+    import numpy as np
+
+    from ..core.alphabet import BLOSUM62_PADDED
+
+    q = np.asarray(q, np.int64)
+    r = np.asarray(r, np.int64)
+    sub = BLOSUM62_PADDED[q][:, r].astype(np.int64)
+    best = 0
+    for k in range(-(len(q) - 1), len(r)):
+        i0, j0 = (max(0, -k), max(0, k))
+        cur, rbest = 0, 0
+        while i0 < len(q) and j0 < len(r):
+            c = cur + int(sub[i0, j0])
+            if c <= 0 or rbest - c > x:
+                c, rbest = 0, 0
+            else:
+                rbest = max(rbest, c)
+            best = max(best, c)
+            cur = c
+            i0, j0 = i0 + 1, j0 + 1
+    return best

@@ -1,10 +1,16 @@
-"""Pallas TPU kernel: batched Smith-Waterman row-wave DP over a pair block.
+"""Pallas TPU kernels: batched Smith-Waterman row-wave DP and the ungapped
+X-drop prefilter over a pair block.
 
 The all-pairs tiler's inner loop (`repro.allpairs.tiles`): score a block of
 (query, reference) pairs in one program. The grid is 1-D over pair blocks;
 each program holds a (bb, Lq) query block and a (bb, Lr) reference block in
 VMEM and scans query rows with `fori_loop`, keeping only the previous DP row
 (bb, Lr+1) and the running best — O(bb*Lr) state, never the full matrix.
+
+``interpret`` defaults to *autodetect*: kernels lower natively wherever the
+backend supports Pallas TPU lowering and fall back to interpret mode only
+where it is unavailable (this CPU container). Pass ``interpret=True/False``
+to override (exposed as ``WaveConfig.pallas_interpret``).
 
 Per row the within-row gap dependency is resolved by the same max-plus
 prefix scan as :mod:`repro.align.smith_waterman` (H = cummax(A + c*t) - c*t),
@@ -30,6 +36,17 @@ from ..align.smith_waterman import GAP, NEG
 from ..core.alphabet import ALPHABET_SIZE, BLOSUM62_PADDED, PAD
 
 DEFAULT_BB = 8
+
+
+def on_tpu() -> bool:
+    """True iff the default backend lowers Pallas TPU kernels natively."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Autodetect interpret mode: explicit override wins, otherwise
+    interpret only where native Pallas lowering is unavailable."""
+    return (not on_tpu()) if interpret is None else bool(interpret)
 
 
 def _sw_kernel(q_ref, qsub_ref, r_ref, out_ref, *, Lq: int):
@@ -75,10 +92,12 @@ def _sw_kernel(q_ref, qsub_ref, r_ref, out_ref, *, Lq: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bb", "interpret"))
-def sw_scores_kernel(qs, rs, *, bb: int = DEFAULT_BB, interpret: bool = True):
+def sw_scores_kernel(qs, rs, *, bb: int = DEFAULT_BB,
+                     interpret: bool | None = None):
     """(B, Lq) x (B, Lr) int8 pair block -> (B, 1) int32 best local scores.
 
     B % bb == 0 is handled by padding in ops.sw_wave_scores.
+    ``interpret=None`` autodetects (native lowering on TPU).
     """
     B, Lq = qs.shape
     Lr = rs.shape[1]
@@ -95,5 +114,66 @@ def sw_scores_kernel(qs, rs, *, bb: int = DEFAULT_BB, interpret: bool = True):
         ],
         out_specs=pl.BlockSpec((bb, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
+    )(qs, qsub, rs)
+
+
+def _ungapped_kernel(q_ref, qsub_ref, r_ref, out_ref, *, Lq: int, x: int):
+    """Ungapped X-drop diagonal scan over a (bb,) pair block — the prefilter
+    twin of `_sw_kernel`. Carries are indexed by reference column, so the
+    diagonal predecessor is a right-shift: every row is elementwise (no
+    prefix scan), O(bb*Lr) state."""
+    q = q_ref[...].astype(jnp.int32)          # (bb, Lq)
+    qsub = qsub_ref[...]                      # (bb, Lq, A+1) int32
+    r = r_ref[...].astype(jnp.int32)          # (bb, Lr)
+    bb, Lr = r.shape
+    r_pad = r == PAD
+
+    def row_step(i, carry):
+        cur, rbest, gbest = carry             # (bb, Lr) x2, (bb, 1)
+        qi = jax.lax.dynamic_index_in_dim(q, i, axis=1, keepdims=False)
+        si = jax.lax.dynamic_index_in_dim(qsub, i, axis=1, keepdims=False)
+        sub_row = jnp.zeros((bb, Lr), jnp.int32)
+        for a in range(ALPHABET_SIZE + 1):
+            sub_row = jnp.where(r == a, si[:, a][:, None], sub_row)
+        masked = r_pad | (qi == PAD)[:, None]
+        sub_row = jnp.where(masked, NEG, sub_row)
+        cur_s = jnp.concatenate(
+            [jnp.zeros((bb, 1), jnp.int32), cur[:, :-1]], axis=1)
+        rb_s = jnp.concatenate(
+            [jnp.zeros((bb, 1), jnp.int32), rbest[:, :-1]], axis=1)
+        c = cur_s + sub_row
+        drop = (c <= 0) | (rb_s - c > x)
+        c = jnp.where(drop, 0, c)
+        rb = jnp.where(drop, 0, jnp.maximum(rb_s, c))
+        gbest = jnp.maximum(gbest, jnp.max(c, axis=1, keepdims=True))
+        return c, rb, gbest
+
+    z = jnp.zeros((bb, Lr), jnp.int32)
+    _, _, best = jax.lax.fori_loop(
+        0, Lq, row_step, (z, z, jnp.zeros((bb, 1), jnp.int32)))
+    out_ref[...] = best
+
+
+@functools.partial(jax.jit, static_argnames=("x", "bb", "interpret"))
+def ungapped_scores_kernel(qs, rs, *, x: int, bb: int = DEFAULT_BB,
+                           interpret: bool | None = None):
+    """(B, Lq) x (B, Lr) int8 pair block -> (B, 1) int32 best ungapped
+    X-drop run scores; bit-exact with
+    `align.smith_waterman.ungapped_xdrop_scores`."""
+    B, Lq = qs.shape
+    Lr = rs.shape[1]
+    assert B % bb == 0, "pad the pair block to a bb multiple"
+    qsub = jnp.asarray(BLOSUM62_PADDED)[qs.astype(jnp.int32)]  # (B, Lq, A+1)
+    return pl.pallas_call(
+        functools.partial(_ungapped_kernel, Lq=Lq, x=x),
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, Lq), lambda i: (i, 0)),
+            pl.BlockSpec((bb, Lq, ALPHABET_SIZE + 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, Lr), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=resolve_interpret(interpret),
     )(qs, qsub, rs)

@@ -1,11 +1,13 @@
-"""repro.allpairs: self-join exactness, tiled SW waves, clustering, and the
+"""repro.allpairs: self-join exactness, tiled SW waves (device-resident
+gather, ungapped X-drop prefilter, async drain ring), clustering, and the
 batched Smith-Waterman edge cases (empty sets, length-1, all-PAD, PID
 parity between the wave and the per-pair path)."""
 import numpy as np
 import pytest
 
 from repro.align.smith_waterman import (percent_identity, sw_align_batch,
-                                        sw_score, sw_wave_pid)
+                                        sw_score, sw_wave_pid,
+                                        ungapped_xdrop_scores)
 from repro.allpairs import (AllPairsConfig, WaveConfig, all_pairs_search,
                             brute_force_collisions, cluster_families,
                             lsh_self_join, score_pairs, union_find)
@@ -146,6 +148,144 @@ def test_wave_all_pad_rows():
     assert (pid[1], length[1], score[1]) == (want_pid, want_len, want_score)
     np.testing.assert_array_equal(
         sw_align_batch(qs, rs), [0, want_score, 0])
+
+
+def _random_pairs(corpus, m, seed):
+    rng = np.random.default_rng(seed)
+    n = len(corpus["lens"])
+    return np.stack([rng.integers(0, n, m), rng.integers(0, n, m)],
+                    axis=1).astype(np.int32)
+
+
+# ------------------------------------------------- device-resident pipeline
+def test_device_vs_host_gather_bitexact_ragged(corpus):
+    """Fused on-device gather == host copy loop on a ragged corpus, for
+    score-only, PID, and prefilter waves alike."""
+    ids, lens = corpus["ids"], corpus["lens"]
+    assert len(set(lens.tolist())) > 1, "corpus must be ragged"
+    pairs = _random_pairs(corpus, 32, 3)
+    host = score_pairs(ids, lens, pairs,
+                       WaveConfig(wave_batch=8, device_gather=False,
+                                  with_pid=True))
+    dev = score_pairs(ids, lens, pairs,
+                      WaveConfig(wave_batch=8, device_gather=True,
+                                 with_pid=True))
+    np.testing.assert_array_equal(host.scores, dev.scores)
+    np.testing.assert_array_equal(host.pid, dev.pid)
+    np.testing.assert_array_equal(host.aln_len, dev.aln_len)
+    hostp = score_pairs(ids, lens, pairs,
+                        WaveConfig(wave_batch=8, device_gather=False,
+                                   prefilter=True))
+    devp = score_pairs(ids, lens, pairs,
+                       WaveConfig(wave_batch=8, device_gather=True,
+                                  prefilter=True))
+    np.testing.assert_array_equal(hostp.ungapped, devp.ungapped)
+    np.testing.assert_array_equal(hostp.scores, devp.scores)
+
+
+def test_max_wave_cells_forces_single_pair_waves(corpus):
+    """A cell budget below one padded pair must degrade to B=1 waves and
+    still score exactly."""
+    ids, lens = corpus["ids"], corpus["lens"]
+    pairs = _random_pairs(corpus, 6, 4)
+    tiny = WaveConfig(wave_batch=8, max_wave_cells=1)   # << Lq*Lr
+    scored = score_pairs(ids, lens, pairs, tiny)
+    assert scored.n_waves == len(pairs)                 # B=1 -> one per pair
+    ref = score_pairs(ids, lens, pairs, WaveConfig(wave_batch=8))
+    np.testing.assert_array_equal(scored.scores, ref.scores)
+
+
+def test_wave_last_chunk_all_padding(corpus):
+    """A bucket one pair larger than a wave leaves a last chunk that is
+    mostly padding; padding rows must not perturb real scores."""
+    ids, lens = corpus["ids"], corpus["lens"]
+    # 9 pairs of identical shape with wave_batch 8 -> waves of 8 and 1(+7 pad)
+    i = int(np.argmax(lens))
+    pairs = np.array([[i, i]] * 9, np.int32)
+    scored = score_pairs(ids, lens, pairs, WaveConfig(wave_batch=8))
+    want = sw_score(ids[i][:lens[i]], ids[i][:lens[i]])
+    np.testing.assert_array_equal(scored.scores, [want] * 9)
+    assert scored.n_waves == 2
+
+
+def test_prefilter_survivors_bitexact_rejected_lower_bound(corpus):
+    ids, lens = corpus["ids"], corpus["lens"]
+    pairs = _random_pairs(corpus, 48, 5)
+    full = score_pairs(ids, lens, pairs, WaveConfig(wave_batch=8))
+    pre = score_pairs(ids, lens, pairs,
+                      WaveConfig(wave_batch=8, prefilter=True,
+                                 prefilter_min=40))
+    assert pre.kept is not None and pre.ungapped is not None
+    # ungapped is a lower bound of SW everywhere
+    assert (pre.ungapped <= full.scores).all()
+    # survivors re-scored by full SW, bit-exact
+    np.testing.assert_array_equal(pre.scores[pre.kept],
+                                  full.scores[pre.kept])
+    # rejected pairs report the (lower-bound) ungapped score
+    np.testing.assert_array_equal(pre.scores[~pre.kept],
+                                  pre.ungapped[~pre.kept])
+    assert pre.n_prefiltered == int((~pre.kept).sum())
+
+
+def test_xdrop_recall_on_planted_families(corpus):
+    """Prefilter recall: every pair scoring >= the family threshold must
+    survive the ungapped X-drop filter (the benchmark's 99% criterion is
+    exactly 100% on this corpus), for both x=None and finite x."""
+    ids, lens, labels = corpus["ids"], corpus["lens"], corpus["labels"]
+    res = lsh_self_join(SignatureIndex.build(CFG, ids, lens))
+    full = score_pairs(ids, lens, res.pairs, WaveConfig())
+    S = 150                                     # family score threshold
+    fam = labels[res.pairs[:, 0]] == labels[res.pairs[:, 1]]
+    assert (full.scores[fam] >= S).all(), "planted pairs must score >= S"
+    for x in (None, 20):
+        pre = score_pairs(ids, lens, res.pairs,
+                          WaveConfig(prefilter=True, prefilter_min=40,
+                                     xdrop=x))
+        high = full.scores >= S
+        assert pre.kept[high].all(), f"x={x} lost a high-scoring pair"
+
+
+def test_prefilter_indel_regime_needs_calibration():
+    """Documented limitation: dense indels chop ungapped runs, so the
+    gapped/ungapped gap widens and the default threshold loses true pairs —
+    the reason the clustering CLI keeps the prefilter opt-in."""
+    c = make_family_corpus(FamilyCorpusConfig(
+        n_families=8, family_size=3, n_singletons=16, len_mean=150,
+        sub_rate=0.02, indel_rate=0.4, seed=3))
+    cfg = AllPairsConfig(lsh=LSHConfig(k=3, T=13, f=32, d=4), min_pid=50.0,
+                         wave=WaveConfig(with_pid=True, prefilter=True,
+                                         prefilter_min=40))
+    res = all_pairs_search(c["ids"], c["lens"], cfg)
+    full = score_pairs(c["ids"], c["lens"], res.pairs,
+                       WaveConfig(with_pid=True))
+    true_edge = np.asarray(full.pid) >= 50.0
+    # gapped homologs exist whose ungapped lower bound is under-threshold
+    assert (res.scored.ungapped[true_edge] < 40).any()
+    # and with the prefilter off, none of them are lost
+    assert (np.asarray(full.pid)[true_edge] >= 50.0).all()
+
+
+def test_ungapped_xdrop_monotone_in_x(corpus):
+    """Finite X-drop can only terminate runs earlier: score(x) <=
+    score(None), and both lower-bound the gapped SW score."""
+    ids, lens = corpus["ids"], corpus["lens"]
+    pairs = _random_pairs(corpus, 16, 6)
+    qm, rm = ids[pairs[:, 0]], ids[pairs[:, 1]]
+    inf_sc = np.asarray(ungapped_xdrop_scores(qm, rm, x=None))
+    x_sc = np.asarray(ungapped_xdrop_scores(qm, rm, x=10))
+    sw = sw_align_batch(qm, rm)
+    assert (x_sc <= inf_sc).all()
+    assert (inf_sc <= sw).all()
+
+
+def test_async_ring_depths_agree(corpus):
+    """Results are independent of the in-flight ring depth."""
+    ids, lens = corpus["ids"], corpus["lens"]
+    pairs = _random_pairs(corpus, 24, 7)
+    base = score_pairs(ids, lens, pairs, WaveConfig(inflight=0))
+    for depth in (1, 2, 8):
+        got = score_pairs(ids, lens, pairs, WaveConfig(inflight=depth))
+        np.testing.assert_array_equal(got.scores, base.scores)
 
 
 def test_wave_pallas_kernel_parity(corpus):

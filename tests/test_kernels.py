@@ -64,6 +64,54 @@ def test_siggen_fused_sweep(S, k, f, T, bs, bw):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# ------------------------------------------------------------ sw / ungapped
+def test_interpret_autodetect_off_tpu():
+    from repro.kernels.sw import on_tpu, resolve_interpret
+    assert resolve_interpret(None) == (not on_tpu())
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+@pytest.mark.parametrize("B,Lq,Lr,x", [
+    (4, 24, 24, 20),       # square block, finite X
+    (5, 17, 33, 20),       # ragged -> bb padding
+    (8, 16, 16, 2**30),    # x -> inf (plain best ungapped segment)
+])
+def test_ungapped_kernel_matches_jnp(B, Lq, Lr, x):
+    from repro.align.smith_waterman import ungapped_xdrop_scores
+    from repro.core.alphabet import PAD
+
+    rng = np.random.default_rng(B * 100 + Lq)
+    qs = rng.integers(0, 20, (B, Lq)).astype(np.int8)
+    rs = rng.integers(0, 20, (B, Lr)).astype(np.int8)
+    for n in range(B):          # ragged PAD tails
+        qs[n, rng.integers(Lq // 2, Lq):] = PAD
+        rs[n, rng.integers(Lr // 2, Lr):] = PAD
+    got = np.asarray(ops.ungapped_wave_scores(qs, rs, x=x, bb=4))
+    want = np.asarray(ungapped_xdrop_scores(
+        qs, rs, x=None if x >= 2**30 else x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ungapped_jnp_matches_host_oracle():
+    from repro.align.smith_waterman import ungapped_xdrop_scores
+    from repro.core.alphabet import PAD
+
+    rng = np.random.default_rng(9)
+    for x in (20, None):
+        for _ in range(4):
+            lq, lr = rng.integers(4, 48, 2)
+            q = rng.integers(0, 20, lq).astype(np.int8)
+            r = rng.integers(0, 20, lr).astype(np.int8)
+            qm = np.full((1, 64), PAD, np.int8)
+            rm = np.full((1, 48), PAD, np.int8)
+            qm[0, :lq] = q
+            rm[0, :lr] = r
+            got = int(np.asarray(ungapped_xdrop_scores(qm, rm, x=x))[0])
+            assert got == ref.ungapped_xdrop_ref(q, r, 10**9 if x is None
+                                                 else x)
+
+
 def test_kernel_path_matches_core_signatures():
     """End-to-end: kernel-accumulated V signs == core signatures_matmul."""
     rng = np.random.default_rng(3)
