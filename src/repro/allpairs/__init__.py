@@ -40,6 +40,10 @@ class AllPairsConfig:
     lsh: LSHConfig = field(default_factory=lambda: LSHConfig(k=3, T=13, f=32,
                                                              d=1))
     bands: int | None = None     # index bands (default: d+1)
+    n_shards: int = 1            # bucket shards for the self-join (each
+                                 # device emits its own buckets' pairs);
+                                 # pair with wave=WaveConfig(n_devices=...)
+                                 # for multi-device SW waves
     hamming_filter: bool = True  # exact-filter candidates at Hamming <= d
     wave: WaveConfig = field(default_factory=lambda: WaveConfig(with_pid=True))
     min_pid: float = 50.0        # family edge threshold (percent identity)
@@ -74,12 +78,13 @@ def all_pairs_search(ids, lens, cfg: AllPairsConfig | None = None,
     ids = np.asarray(ids, np.int8)
     lens = np.asarray(lens, np.int32)
     if index is None:
-        index = SignatureIndex.build(cfg.lsh, ids, lens, bands=cfg.bands)
+        index = SignatureIndex.build(cfg.lsh, ids, lens, bands=cfg.bands,
+                                     n_shards=cfg.n_shards)
     elif index.size != len(lens):
         raise ValueError(f"index covers {index.size} sequences, corpus has "
                          f"{len(lens)}")
     join = lsh_self_join(index, d=cfg.lsh.d if cfg.hamming_filter else None,
-                         max_pairs=cfg.max_pairs)
+                         max_pairs=cfg.max_pairs, n_shards=cfg.n_shards)
     scored = score_pairs(ids, lens, join.pairs, cfg.wave)
     if cfg.wave.with_pid:
         families = cluster_families(index.size, join.pairs, scored.pid,

@@ -11,6 +11,16 @@ The pigeonhole guarantee carries over: any pair within Hamming distance d of
 each other shares >= 1 band, so filtering candidates by packed Hamming
 distance (``d=``) yields the exact d-neighborhood graph.
 
+Emission runs over the shard-owned bucket slabs of
+:class:`~repro.index.partition.BucketPartition` (``mix32(key) % n_shards``
+— the MapReduce shuffle): with ``n_shards > 1`` each mesh device emits its
+own buckets' pairs in parallel (``shard_map``; a vmap over the shard axis
+when the process has fewer devices), and the per-shard buffers are merged
+host-side with the cross-shard/cross-band dedup. Buckets are never split
+across shards, so the union of per-shard emissions is EXACTLY the
+single-device pair set — the result arrays are bit-identical for every
+``n_shards``.
+
 Emission reuses the fixed-capacity buffer discipline of ``core/join.py``
 (rows past the count are -1; ``overflowed`` means rows were truncated), and
 :func:`lsh_self_join` wraps it in the same grow-and-retry loop as the
@@ -24,10 +34,13 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from ..core.hamming import hamming_distance
 from ..core.join import compact_pairs, dedup_pairs
 from ..index.store import SignatureIndex
+from ..util import shard_map_compat
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
@@ -60,6 +73,59 @@ def _emit_bucket_pairs(offsets, ids, *, cap: int):
     hi = jnp.maximum(a, c2)
     return jnp.stack([jnp.where(valid, lo, -1),
                       jnp.where(valid, hi, -1)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _emit_slab_pairs(offs_s, ids_s, *, cap: int):
+    """Within-bucket pairs of one shard's stacked slab: offsets (nb, U+1),
+    ids (nb, E) -> (nb, cap, 2) int32, -1 past each band's true count.
+    Padded bucket slots (offsets repeating the end) own zero pairs by
+    construction, so slab padding can never emit."""
+    return jax.vmap(
+        lambda o, i: _emit_bucket_pairs(o, i, cap=cap))(offs_s, ids_s)
+
+
+@functools.lru_cache(maxsize=16)
+def _default_mesh(n: int, axis_name: str):
+    """One mesh per shard count (a fresh Mesh per call would defeat the
+    jit cache of every program built on it)."""
+    return Mesh(np.array(jax.devices()[:n]), (axis_name,))
+
+
+@functools.lru_cache(maxsize=64)
+def _emit_sharded_fn(mesh, axis_name: str, cap: int):
+    """Cached jitted shard_map emission program (keyed by mesh + capacity —
+    Mesh hashes by device set, so repeated self-joins reuse the program)."""
+    ax = axis_name
+
+    def shard_fn(offs, ids):
+        return _emit_slab_pairs(offs[0], ids[0], cap=cap)
+
+    return jax.jit(shard_map_compat(
+        shard_fn, mesh, in_specs=(P(ax), P(ax)), out_specs=P(ax)))
+
+
+def _emit_partition(part, cap: int, mesh, axis_name: str):
+    """Emit every shard's within-bucket pairs over the partition slabs.
+
+    Returns (S*nb, cap, 2) candidate buffers. With a mesh of
+    ``part.n_shards`` devices each shard emits on its own device
+    (``shard_map``); otherwise the same program runs as a vmap over the
+    shard axis — identical math, one device.
+    """
+    if mesh is not None:
+        # host -> owning devices directly (NamedSharding split on the shard
+        # axis): device 0 never concentrates the stack, and the emission
+        # program's in_specs see their expected layout without resharding
+        sharding = NamedSharding(mesh, P(axis_name))
+        _, offs_np, ids_np = part.host_slabs()
+        offs_s = jax.device_put(offs_np, sharding)
+        ids_s = jax.device_put(ids_np, sharding)
+        return _emit_sharded_fn(mesh, axis_name, cap)(offs_s, ids_s)
+    _, offs_s, ids_s = part.device_slabs()
+    out = jax.vmap(
+        lambda o, i: _emit_slab_pairs(o, i, cap=cap))(offs_s, ids_s)
+    return out.reshape(-1, cap, 2)
 
 
 @functools.partial(jax.jit, static_argnames=("max_pairs", "d"))
@@ -100,24 +166,30 @@ def _pairs_to_csr(pairs: np.ndarray, n: int) -> SelfJoinResult:
 
 def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
                   max_pairs: int = 1 << 16,
-                  max_grow: int = 1 << 24) -> SelfJoinResult:
+                  max_grow: int = 1 << 24,
+                  n_shards: int | None = None,
+                  mesh=None, axis_name: str = "data") -> SelfJoinResult:
     """All-pairs candidate generation over the indexed corpus.
 
-    Emits every within-bucket pair of every band, deduplicates across bands,
-    and (optionally, ``d=``) exact-filters by packed Hamming distance.
-    Capacity discipline: per-band emission capacity is sized EXACTLY from
-    host-side int64 bucket totals (the device-side int32 count would wrap
-    for a degenerate ~66k-member bucket and truncate silently); the
-    deduplicated cross-band union still grow-and-retries. Either demand
+    Emits every within-bucket pair of every band, deduplicates across bands
+    (and shards), and (optionally, ``d=``) exact-filters by packed Hamming
+    distance. ``n_shards`` (default: the index's own ``n_shards``) routes
+    emission through the bucket partition: with a mesh — ``mesh=`` or, when
+    the process has that many devices, the first ``n_shards`` of
+    ``jax.devices()`` — each shard emits its buckets' pairs on its own
+    device in parallel; the pair set (and the result arrays) are
+    bit-identical for every ``n_shards``.
+
+    Capacity discipline: per-(shard, band) emission capacity is sized
+    EXACTLY from host-side int64 bucket totals (the device-side int32 count
+    would wrap for a degenerate ~66k-member bucket and truncate silently);
+    the deduplicated cross-band union still grow-and-retries. Either demand
     beyond ``max_grow`` raises — never a silent cap.
     """
-    index._ensure_built()
-    # exact per-band pair totals in int64 (sum of m*(m-1)/2 over buckets)
-    totals = []
-    for _, offsets, _ids in index._csr_np:
-        sizes = np.diff(np.asarray(offsets)).astype(np.int64)
-        totals.append(int((sizes * (sizes - 1) // 2).sum()))
-    need = max(totals, default=0)
+    n = int(n_shards) if n_shards is not None else index.n_shards
+    part = index.partition(n)
+    # exact per-(shard, band) pair totals in int64
+    need = int(part.pair_totals.max()) if part.pair_totals.size else 0
 
     def _raise():
         raise RuntimeError(
@@ -127,16 +199,23 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
 
     if need > max_grow:
         _raise()
-    # Emission runs ONCE at the exact per-band capacity (it can never
-    # truncate); only the deduplicated cross-band union below grows, so a
-    # retry re-runs just the dedup/compact step, never the emission.
-    bufs = [
-        _emit_bucket_pairs(offsets, ids, cap=need)
-        for (keys, offsets, ids), tot in zip(index._csr_dev, totals)
-        if tot > 0]
-    if not bufs:
+    if need == 0:       # every bucket is a singleton: no collisions at all
         return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
-    cand = jnp.concatenate(bufs, axis=0)
+    if n > 1 and mesh is None and jax.device_count() >= n:
+        mesh = _default_mesh(n, axis_name)
+    if mesh is not None and (axis_name not in mesh.axis_names
+                             or mesh.shape[axis_name] != n):
+        # shard_fn emits block[0] only — a smaller mesh would silently
+        # drop the other shards' pairs
+        raise ValueError(
+            f"mesh axes {dict(mesh.shape)} do not provide {n} devices on "
+            f"axis {axis_name!r} (one per partition shard)")
+    if n == 1:
+        mesh = None     # a 1-ring shard_map would only add dispatch cost
+    # Emission runs ONCE at the exact per-(shard, band) capacity (it can
+    # never truncate); only the deduplicated cross-shard union below grows,
+    # so a retry re-runs just the dedup/compact step, never the emission.
+    cand = _emit_partition(part, need, mesh, axis_name).reshape(-1, 2)
     cap = max(max_pairs, need)
     while True:
         pairs, count = _dedup_filter(cand, index.device_sigs,

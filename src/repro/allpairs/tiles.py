@@ -29,9 +29,20 @@ on device:
    while wave n's scores are still in flight; a small FIFO ring
    (``inflight``) drains ``device_get`` results, so wall-clock tracks
    device DP time instead of Python dispatch.
+6. **multi-device waves** (``n_devices > 1``) — each wave batch is split
+   over the first ``n_devices`` of ``jax.devices()`` as ONE SPMD program
+   (``shard_map``: pair index vectors partitioned, corpus replicated), so
+   ``n_devices`` pair blocks gather+score concurrently per dispatch — the
+   reduce-side join of the sharded self-join run on the reducers
+   themselves. SPMD (not per-device round-robin dispatch) is load-bearing:
+   the CPU PJRT client serializes independent per-device executions, and
+   only partitions *inside* one program run on parallel threads; on
+   accelerator meshes the same program overlaps the usual way. Pairs are
+   embarrassingly parallel, so the split is bit-exact by construction.
 
     pairs ──wave_plan──▶ [gather ▶ prefilter ▶ full SW] ──▶ drain ring
-                           (one jitted program per wave shape)
+                           (one jitted program per wave shape,
+                            split P("wave") over n_devices)
 
 Scores (and optionally PID via the batched wave + host traceback) come back
 aligned with the input pair order.
@@ -64,6 +75,13 @@ class WaveConfig:
                                  # host copy loop, bit-exact, for comparison)
     inflight: int = 2            # async ring depth: waves in flight before
                                  # the oldest result is drained to host
+    n_devices: int = 1           # split each wave over this many devices
+                                 # as one SPMD shard_map program (clamped
+                                 # to jax.device_count(); needs
+                                 # device_gather; wave_batch becomes the
+                                 # PER-DEVICE batch). Ignored by the
+                                 # Pallas and PID paths (kernel resp. host
+                                 # traceback stay single-device).
     prefilter: bool = False      # ungapped X-drop prefilter before full SW
     prefilter_min: int = 40      # skip full SW below this ungapped score
     xdrop: int | None = None     # X-drop termination margin; None is the
@@ -146,6 +164,41 @@ def _wave_ungapped_device(ids_dev, lens_dev, pi, pj, *, x: int | None,
     return ungapped_xdrop_scores(qm, rm, x=x)
 
 
+@functools.lru_cache(maxsize=8)
+def _sharded_wave_fns(ndev: int):
+    """SPMD wave programs over the first ``ndev`` devices: the (B,) pair
+    index vectors split ``P("wave")`` (B a multiple of ndev), the corpus
+    replicates, and every device gathers+scores its B/ndev pairs inside
+    ONE jitted program — the only dispatch form the CPU PJRT client
+    actually runs concurrently. Per-pair results are independent, so the
+    split is bit-exact with the single-device wave."""
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    from ..util import shard_map_compat
+    mesh = Mesh(np.array(jax.devices()[:ndev]), ("wave",))
+    ax = "wave"
+
+    @functools.partial(jax.jit, static_argnames=("Lq", "Lr"))
+    def sw_fn(ids_dev, lens_dev, pi, pj, *, Lq: int, Lr: int):
+        f = shard_map_compat(
+            lambda i, l, a, b: sw_gather_scores(i, l, i, l, a, b,
+                                                Lq=Lq, Lr=Lr),
+            mesh, in_specs=(P(), P(), P(ax), P(ax)), out_specs=P(ax))
+        return f(ids_dev, lens_dev, pi, pj)
+
+    @functools.partial(jax.jit, static_argnames=("x", "Lq", "Lr"))
+    def ungapped_fn(ids_dev, lens_dev, pi, pj, *, x: int | None,
+                    Lq: int, Lr: int):
+        f = shard_map_compat(
+            lambda i, l, a, b: ungapped_xdrop_scores(
+                gather_rows(i, l, a, Lq), gather_rows(i, l, b, Lr), x=x),
+            mesh, in_specs=(P(), P(), P(ax), P(ax)), out_specs=P(ax))
+        return f(ids_dev, lens_dev, pi, pj)
+
+    return sw_fn, ungapped_fn
+
+
 class _DrainRing:
     """FIFO of in-flight device results. JAX dispatch is async: pushing wave
     n+1 before fetching wave n overlaps its gather+DP with wave n's D2H
@@ -215,31 +268,37 @@ def _score_block(qm, rm, kind: str, x: int | None, use_pallas: bool,
     return sw_scores_device(jnp.asarray(qm), jnp.asarray(rm))
 
 
-def _iter_wave_chunks(sub, lens, cfg: WaveConfig, wave_batch: int):
+def _iter_wave_chunks(sub, lens, cfg: WaveConfig, wave_batch: int,
+                      ndev: int = 1):
     """Shared wave-chunking skeleton: walk the dispatch plan, shrink the
     batch to the cell budget, and yield fixed-shape (chunk, B, Lq, Lr)
     work units (the last chunk of a bucket may be shorter than B — the
     dispatchers pad it). Single source of truth for the score and PID
-    paths, so wave shapes can never diverge between them."""
+    paths, so wave shapes can never diverge between them. ``wave_batch``
+    and the cell budget are per-device: an SPMD wave (``ndev > 1``)
+    carries ndev times the pairs per dispatch."""
     for idx, Lq, Lr in wave_plan(sub, lens, cfg):
-        B = max(1, min(wave_batch, cfg.max_wave_cells // (Lq * Lr)))
+        B = max(1, min(wave_batch, cfg.max_wave_cells // (Lq * Lr))) * ndev
         for s in range(0, len(idx), B):
             yield idx[s:s + B], B, Lq, Lr
 
 
 def _run_score_waves(ids, lens, pairs, subset, cfg: WaveConfig, dev, out,
                      stats: _WaveStats, *, kind: str, wave_batch: int,
-                     use_pallas: bool) -> None:
+                     use_pallas: bool, ndev: int = 1) -> None:
     """Dispatch score-only waves (``kind``: "sw" | "ungapped") over
-    ``pairs[subset]``, writing results into ``out[subset[...]]`` through the
-    async drain ring."""
+    ``pairs[subset]``, writing results into ``out[subset[...]]`` through
+    the async drain ring. With ``ndev > 1`` each wave is one SPMD program
+    splitting its batch over the mesh (``_sharded_wave_fns``)."""
     sub = pairs[subset]
 
     def sink(slots, host):
         out[slots] = host[:len(slots)]
 
+    sharded = _sharded_wave_fns(ndev) if ndev > 1 else None
     ring = _DrainRing(0 if cfg.profile else cfg.inflight, sink)
-    for chunk, B, Lq, Lr in _iter_wave_chunks(sub, lens, cfg, wave_batch):
+    for chunk, B, Lq, Lr in _iter_wave_chunks(sub, lens, cfg, wave_batch,
+                                              ndev):
         t0 = time.perf_counter()
         if dev is None:                     # host-gather (PR 2) path
             qm, rm = _host_gather(ids, lens, sub, chunk, B, Lq, Lr)
@@ -251,6 +310,14 @@ def _run_score_waves(ids, lens, pairs, subset, cfg: WaveConfig, dev, out,
             qm, rm = _gather_wave(dev[0], dev[1], jnp.asarray(pi),
                                   jnp.asarray(pj), Lq=Lq, Lr=Lr)
             res = _score_block(qm, rm, kind, cfg.xdrop, True, cfg)
+        elif sharded is not None:           # SPMD split over the mesh
+            pi, pj = _pad_chunk(sub, chunk, B)
+            sw_fn, ungapped_fn = sharded
+            if kind == "ungapped":
+                res = ungapped_fn(dev[0], dev[1], pi, pj, x=cfg.xdrop,
+                                  Lq=Lq, Lr=Lr)
+            else:
+                res = sw_fn(dev[0], dev[1], pi, pj, Lq=Lq, Lr=Lr)
         elif kind == "ungapped":            # fused gather + scan
             pi, pj = _pad_chunk(sub, chunk, B)
             res = _wave_ungapped_device(dev[0], dev[1], pi, pj,
@@ -327,6 +394,11 @@ def score_pairs(ids: np.ndarray, lens: np.ndarray, pairs: np.ndarray,
                   else (on_tpu() and not cfg.with_pid))
     dev = ((jnp.asarray(ids), jnp.asarray(lens))
            if cfg.device_gather and P else None)
+    # SPMD wave split: only the jnp score/prefilter waves shard (the Pallas
+    # kernel and the PID traceback stay single-device)
+    ndev = 1
+    if dev is not None and not use_pallas:
+        ndev = max(1, min(cfg.n_devices, jax.device_count()))
 
     everything = np.arange(P)
     ungapped = None
@@ -337,7 +409,7 @@ def score_pairs(ids: np.ndarray, lens: np.ndarray, pairs: np.ndarray,
         _run_score_waves(ids, lens, pairs, everything, cfg, dev, ungapped,
                          stats, kind="ungapped",
                          wave_batch=cfg.prefilter_batch,
-                         use_pallas=use_pallas)
+                         use_pallas=use_pallas, ndev=ndev)
         kept = ungapped >= cfg.prefilter_min
         scores[:] = ungapped        # lower bound for the rejected pairs
         subset = np.flatnonzero(kept)
@@ -348,7 +420,7 @@ def score_pairs(ids: np.ndarray, lens: np.ndarray, pairs: np.ndarray,
         else:
             _run_score_waves(ids, lens, pairs, subset, cfg, dev, scores,
                              stats, kind="sw", wave_batch=cfg.wave_batch,
-                             use_pallas=use_pallas)
+                             use_pallas=use_pallas, ndev=ndev)
     return PairScores(scores=scores, pid=pid, aln_len=aln,
                       n_waves=stats.n_waves, n_shapes=len(stats.shapes),
                       ungapped=ungapped, kept=kept,

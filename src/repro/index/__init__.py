@@ -4,25 +4,33 @@ The paper's economic insight (§5.3) is that reference-database signature
 generation is paid once and amortized across query sets. This subsystem makes
 that a first-class artifact:
 
-* ``store``   — :class:`SignatureIndex`: immutable packed signatures +
+* ``store``     — :class:`SignatureIndex`: immutable packed signatures +
   per-band sorted bucket keys with CSR offsets, npz persistence keyed by a
   config fingerprint, incremental ``add()`` with deferred re-sort.
-* ``shard``   — :class:`ShardedIndex`: round-robin device placement over a
-  mesh; queries fan out with ``shard_map``, results gather with global ids.
-* ``service`` — :class:`QueryEngine`: micro-batched serving with fixed-shape
-  padding (jit-cache stability), bucket probing, exact Hamming filtering,
-  fixed-capacity top-k, overflow grow-and-retry, optional Smith-Waterman
-  re-rank, and latency/throughput stats.
-* ``stats``   — bucket-occupancy/entropy diagnostics (per-band histograms,
-  hash-scheme comparison).
+* ``partition`` — :class:`BucketPartition`: shard-owned stacked CSR slabs,
+  buckets routed by ``mix32(band_key) % n_shards`` (the MapReduce shuffle
+  as a data layout) — the one distribution primitive under the
+  single-device probe, the sharded serving ring, and the all-pairs
+  self-join.
+* ``shard``     — :class:`ShardedIndex`: bucket-sharded probe serving over
+  a mesh; query blocks rotate around the ring (``ppermute``) probing each
+  shard's local slab, bit-exact with the single-device probe.
+* ``service``   — :class:`QueryEngine`: micro-batched serving with
+  fixed-shape padding (jit-cache stability), bucket probing, exact Hamming
+  filtering, fixed-capacity top-k, overflow grow-and-retry, optional
+  Smith-Waterman re-rank, and latency/throughput stats.
+* ``stats``     — bucket-occupancy/entropy diagnostics (per-band
+  histograms, hash-scheme comparison).
 """
 from .store import IndexConfigMismatch, SignatureIndex, config_fingerprint
+from .partition import BucketPartition, bucket_owners
 from .shard import ShardedIndex
 from .service import QueryEngine, ServingConfig, topk_dense, topk_probe
 from .stats import BandStats, band_stats, compare_schemes, occupancy_report
 
 __all__ = [
     "SignatureIndex", "IndexConfigMismatch", "config_fingerprint",
+    "BucketPartition", "bucket_owners",
     "ShardedIndex",
     "QueryEngine", "ServingConfig", "topk_dense", "topk_probe",
     "BandStats", "band_stats", "compare_schemes", "occupancy_report",

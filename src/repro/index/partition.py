@@ -1,0 +1,200 @@
+"""Shard-owned CSR bucket partition — the MapReduce shuffle as a data layout.
+
+The paper scales because *buckets* are the unit of distribution: the Hadoop
+shuffle routes each band key to the reducer that owns it, and all work on a
+bucket (pair emission, probing) happens where the bucket lives. This module
+is that shuffle as a layer: every (band, key) bucket of a
+:class:`~repro.index.store.SignatureIndex` is assigned to shard
+
+    owner = mix32(band_key) % n_shards
+
+(:func:`repro.core.join.mix32` is a uint32 bijection, so ownership is
+uniform even for skewed raw keys), and each shard gets a **self-contained
+stacked-padded CSR slab** — exactly the layout ``_probe_csr_fused`` runs
+against, so a shard can probe (serving) or emit within-bucket pairs
+(self-join) entirely locally. Buckets are never split: the union of all
+shards' buckets is the original bucket table, which is what makes every
+consumer's exactness proof carry over unchanged.
+
+``n_shards=1`` produces the identical stacked arrays the single-device
+probe always used — the partition layer is the *only* stacking code path,
+so sharded and unsharded serving can never diverge structurally.
+
+Consumers:
+
+* :class:`repro.index.shard.ShardedIndex` — probe serving, query block
+  rotated around the mesh (``ppermute`` ring) over shard-local slabs;
+* :func:`repro.allpairs.selfjoin.lsh_self_join` — per-shard within-bucket
+  pair emission with host-side merge + cross-shard dedup;
+* :meth:`repro.index.store.SignatureIndex.probe` — the single-device fused
+  probe, which is just shard 0 of the 1-way partition.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.join import mix32
+
+
+def bucket_owners(keys, n_shards: int) -> np.ndarray:
+    """Owning shard of each bucket key: ``mix32(key) % n_shards`` (int32).
+
+    The mix is applied to the *stored* key, so ownership is uniform whether
+    the index bucketed raw band bits (``key_hash="none"``) or already-mixed
+    ones (``"splitmix"`` — mixing twice is still a bijection).
+    """
+    mixed = np.asarray(mix32(np.asarray(keys, np.uint32)))
+    return (mixed % np.uint32(max(n_shards, 1))).astype(np.int32)
+
+
+def _take_buckets(keys, offsets, ids, sel):
+    """Sub-CSR of the buckets at (ascending) positions ``sel``.
+
+    Keys stay sorted (sel is ascending over sorted keys); offsets restart at
+    0; ids are the concatenated member slices, order preserved.
+    """
+    keys = np.asarray(keys)
+    offsets = np.asarray(offsets).astype(np.int64)
+    ids = np.asarray(ids)
+    sizes = (offsets[1:] - offsets[:-1])[sel]
+    sub_offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    total = int(sizes.sum())
+    if total == 0:
+        return (keys[sel].astype(np.uint32), sub_offsets,
+                np.zeros(0, np.int32))
+    start = np.repeat(offsets[sel], sizes)
+    base = np.repeat(sub_offsets[:-1].astype(np.int64), sizes)
+    idx = start + (np.arange(total, dtype=np.int64) - base)
+    return (keys[sel].astype(np.uint32), sub_offsets,
+            ids[idx].astype(np.int32))
+
+
+class BucketPartition:
+    """``n_shards`` shard-owned slabs over per-band CSR bucket tables.
+
+    Built from the index's per-band ``(keys, offsets, ids)`` CSR arrays;
+    exposes both per-shard host CSRs (``shards[s][b]``) and the stacked
+    padded device slabs shard_map programs consume. Padding follows the
+    probe's inertness discipline: keys pad by repeating the last key
+    (sortedness preserved, probes still find the *first* occurrence),
+    offsets pad by repeating the end offset (padded key slots are empty
+    buckets), so padded slots can never contribute candidates or pairs.
+    """
+
+    def __init__(self, csr_per_band, n_shards: int, sigs=None):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = int(n_shards)
+        self.n_bands = len(csr_per_band)
+        # packed signatures of the indexed corpus; when given, each shard's
+        # slab also carries its bucket entries' signature rows, so probes
+        # never need the (N, nw) matrix replicated to every shard (the
+        # memory-scaling point of sharding in the first place)
+        self._sigs = None if sigs is None else np.asarray(sigs, np.uint32)
+        self.shards: list[list] = []
+        # exact within-bucket pair totals per (shard, band), in int64 — the
+        # emission capacity sizing must never wrap (selfjoin discipline)
+        self.pair_totals = np.zeros((self.n_shards, self.n_bands), np.int64)
+        owners = [bucket_owners(keys, self.n_shards)
+                  for keys, _, _ in csr_per_band]
+        for s in range(self.n_shards):
+            per_band = []
+            for b, (keys, offsets, ids) in enumerate(csr_per_band):
+                sel = np.flatnonzero(owners[b] == s)
+                sub = _take_buckets(keys, offsets, ids, sel)
+                sizes = np.diff(sub[1]).astype(np.int64)
+                self.pair_totals[s, b] = int((sizes * (sizes - 1) // 2).sum())
+                per_band.append(sub)
+            self.shards.append(per_band)
+        self._stack()
+        self._dev = None
+
+    # ------------------------------------------------------------ stacking
+    def _stack(self) -> None:
+        """Stack every (shard, band) sub-CSR padded to common sizes:
+        keys (S, nb, U) uint32, offsets (S, nb, U+1) int32,
+        ids (S, nb, max(E, 1)) int32."""
+        S, nb = self.n_shards, self.n_bands
+        U = max((len(k) for per in self.shards for k, _, _ in per), default=0)
+        E = max((len(i) for per in self.shards for _, _, i in per), default=0)
+        keys_s = np.zeros((S, nb, U), np.uint32)
+        offs_s = np.zeros((S, nb, U + 1), np.int32)
+        ids_s = np.zeros((S, nb, max(E, 1)), np.int32)
+        for s, per_band in enumerate(self.shards):
+            for b, (keys, offsets, ids) in enumerate(per_band):
+                u, e = len(keys), len(ids)
+                keys_s[s, b, :u] = keys
+                if u:
+                    keys_s[s, b, u:] = keys[-1]
+                offs_s[s, b, :u + 1] = offsets
+                offs_s[s, b, u + 1:] = offsets[u] if u else 0
+                ids_s[s, b, :e] = ids
+        self._stacked = (keys_s, offs_s, ids_s)
+        self._esig_np = None
+        self._esig_dev = None
+
+    # ------------------------------------------------------------ accessors
+    @property
+    def n_buckets(self) -> np.ndarray:
+        """(S,) bucket count owned by each shard (load-balance diagnostic)."""
+        return np.array([sum(len(k) for k, _, _ in per)
+                         for per in self.shards], np.int64)
+
+    @property
+    def n_entries(self) -> np.ndarray:
+        """(S,) bucket-entry count owned by each shard."""
+        return np.array([sum(len(i) for _, _, i in per)
+                         for per in self.shards], np.int64)
+
+    def host_slabs(self):
+        """The stacked numpy slabs (keys (S, nb, U), offsets (S, nb, U+1),
+        ids (S, nb, E)) — callers wanting a distributed layout
+        ``jax.device_put`` these with a ``NamedSharding`` directly, so no
+        single device ever materializes the full stack."""
+        return self._stacked
+
+    def host_entry_sigs(self) -> np.ndarray:
+        """Per-entry signature rows aligned with the ids slab:
+        (S, nb, E, nw) uint32 numpy — see :meth:`device_entry_sigs`.
+        Built lazily: only the serving ring pays for it."""
+        if self._sigs is None:
+            raise ValueError("partition built without sigs; entry "
+                             "signatures unavailable")
+        if self._esig_np is None:
+            _, _, ids_s = self._stacked
+            nw = self._sigs.shape[1]
+            if self._sigs.shape[0] == 0:    # empty index: all-pad slots
+                self._esig_np = np.zeros(ids_s.shape + (nw,), np.uint32)
+            else:
+                # padded/empty slots hold id 0; their rows are garbage that
+                # the probe's ok-mask discards before any distance survives
+                self._esig_np = self._sigs[ids_s]
+        return self._esig_np
+
+    def device_slabs(self):
+        """Stacked slabs as device arrays (uploaded once, cached):
+        (keys (S, nb, U), offsets (S, nb, U+1), ids (S, nb, E))."""
+        if self._dev is None:
+            self._dev = tuple(jnp.asarray(a) for a in self._stacked)
+        return self._dev
+
+    def device_entry_sigs(self):
+        """Per-entry signature rows aligned with the ids slab:
+        (S, nb, E, nw) uint32 device array — each shard's probe ring
+        Hamming-filters against THESE, never a replicated (N, nw) matrix.
+        Needs the partition built with ``sigs=`` (SignatureIndex does).
+        Built lazily: only the serving ring pays for it — the self-join
+        and the single-device probe never touch entry signatures."""
+        if self._sigs is None:
+            raise ValueError("partition built without sigs; entry "
+                             "signatures unavailable")
+        if self._esig_dev is None:
+            self._esig_dev = jnp.asarray(self.host_entry_sigs())
+        return self._esig_dev
+
+    def probe_arrays(self, shard: int):
+        """Shard ``shard``'s slab as the (nb, ...) arrays
+        ``_probe_csr_fused`` consumes."""
+        keys_s, offs_s, ids_s = self.device_slabs()
+        return keys_s[shard], offs_s[shard], ids_s[shard]

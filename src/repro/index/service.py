@@ -42,6 +42,25 @@ BIG = 1 << 30  # sentinel distance for masked slots (int32-safe)
 
 
 # ---------------------------------------------------------------- primitives
+def _probe_csr_positions(qkeys, csr_keys, csr_offsets, *, cap: int, E: int):
+    """Searchsorted core of every bucket probe: qkeys (B,) uint32 ->
+    (entry positions (B, cap) int32 clipped into [0, E), ok (B, cap) —
+    position is a real member of the matched bucket, size (B,) int32 —
+    the *true* matched-bucket size, which may exceed cap). Shared by the
+    id-returning probe below and the sharded ring's sig-gathering probe
+    (repro.index.shard), so the probe semantics can never diverge."""
+    U = csr_keys.shape[0]
+    pos = jnp.searchsorted(csr_keys, qkeys)
+    pos_c = jnp.clip(pos, 0, U - 1)
+    match = (pos < U) & (csr_keys[pos_c] == qkeys)
+    start = csr_offsets[pos_c]
+    end = jnp.where(match, csr_offsets[pos_c + 1], start)
+    size = (end - start).astype(jnp.int32)
+    idx = start[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    ok = idx < end[:, None]
+    return jnp.clip(idx, 0, max(E - 1, 0)), ok, size
+
+
 @functools.partial(jax.jit, static_argnames=("cap",))
 def _probe_csr(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
     """One band's bucket probe: searchsorted into the CSR unique keys.
@@ -55,15 +74,9 @@ def _probe_csr(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
     E = csr_ids.shape[0]
     if U == 0 or E == 0:
         return (jnp.full((B, cap), -1, jnp.int32), jnp.zeros(B, jnp.int32))
-    pos = jnp.searchsorted(csr_keys, qkeys)
-    pos_c = jnp.clip(pos, 0, U - 1)
-    match = (pos < U) & (csr_keys[pos_c] == qkeys)
-    start = csr_offsets[pos_c]
-    end = jnp.where(match, csr_offsets[pos_c + 1], start)
-    size = (end - start).astype(jnp.int32)
-    idx = start[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
-    ok = idx < end[:, None]
-    cand = jnp.where(ok, csr_ids[jnp.clip(idx, 0, E - 1)], -1)
+    idx, ok, size = _probe_csr_positions(qkeys, csr_keys, csr_offsets,
+                                         cap=cap, E=E)
+    cand = jnp.where(ok, csr_ids[idx], -1)
     return cand, size
 
 
@@ -71,10 +84,10 @@ def _probe_csr(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
 def _probe_csr_fused(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
     """All bands' bucket probes + cross-band dedup in ONE jitted program.
 
-    The per-band CSR arrays are stacked and padded to common sizes by
-    ``SignatureIndex`` (keys padded by repeating the last key, offsets by
-    repeating the end offset — padded entries are empty buckets, so they
-    match nothing; see store._stack_csr). Fusing removes the per-band
+    The per-band CSR arrays are stacked and padded to common sizes by the
+    bucket partition layer (keys padded by repeating the last key, offsets
+    by repeating the end offset — padded entries are empty buckets, so they
+    match nothing; see repro.index.partition). Fusing removes the per-band
     Python dispatch loop from the probe hot path — one device program per
     query batch instead of n_bands (ROADMAP "probe path on-device").
 
@@ -91,19 +104,15 @@ def _probe_csr_fused(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
     return jnp.transpose(cand, (1, 0, 2)).reshape(B, -1), size
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _topk_from_candidates(q_sigs, cand, ref_sigs, ref_valid, *, k: int):
-    """Exact-filter candidates and keep the k nearest per query.
-
-    cand (B, C) int32 with -1 padding (duplicates across bands allowed —
-    deduplicated here). Returns (ids (B, k) int32 with -1 padding,
-    dists (B, k) int32 with -1 padding).
-    """
-    B, C = cand.shape
-    safe = jnp.maximum(cand, 0)
-    dist = hamming_distance(q_sigs[:, None, :], ref_sigs[safe])   # (B, C)
-    ok = (cand >= 0) & ref_valid[safe]
-    # Dedup within each row: sort by candidate id, mask repeats.
+def _dedup_candidates(cand, dist, ok):
+    """Row-wise candidate dedup: sort slots by candidate id (invalid ids
+    last), mask repeated ids (duplicates carry the same exact distance, so
+    keeping the first is lossless). Returns (ids_sorted (B, C),
+    dvals (B, C) with BIG in masked slots). Sorting by id makes the
+    downstream ``top_k`` break distance ties toward the smaller id — the
+    ONE tie-break rule shared by the single-device probe and the sharded
+    ring merge (repro.index.shard), which is what makes them bit-exact."""
+    B = cand.shape[0]
     sort_key = jnp.where(ok, cand, jnp.int32(2**31 - 1))
     order = jnp.argsort(sort_key, axis=1)
     cs = jnp.take_along_axis(cand, order, axis=1)
@@ -112,7 +121,21 @@ def _topk_from_candidates(q_sigs, cand, ref_sigs, ref_valid, *, k: int):
     dup = jnp.concatenate(
         [jnp.zeros((B, 1), bool), cs[:, 1:] == cs[:, :-1]], axis=1)
     oks = oks & ~dup
-    dvals = jnp.where(oks, ds, BIG)
+    return cs, jnp.where(oks, ds, BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk_from_candidates(q_sigs, cand, ref_sigs, ref_valid, *, k: int):
+    """Exact-filter candidates and keep the k nearest per query.
+
+    cand (B, C) int32 with -1 padding (duplicates across bands allowed —
+    deduplicated here). Returns (ids (B, k) int32 with -1 padding,
+    dists (B, k) int32 with -1 padding).
+    """
+    safe = jnp.maximum(cand, 0)
+    dist = hamming_distance(q_sigs[:, None, :], ref_sigs[safe])   # (B, C)
+    ok = (cand >= 0) & ref_valid[safe]
+    cs, dvals = _dedup_candidates(cand, dist, ok)
     return _finalize_topk(dvals, cs, k)
 
 
@@ -290,20 +313,23 @@ class QueryEngine:
         q_valid = np.asarray(self.sl.feature_counts(pids, plens)) > 0
 
         k = self.cfg.k
+        truncated = False
         if self.sharded is not None:
-            nid, nd = self.sharded.topk(q_sigs, k=k)
+            nid, nd, self._probe_cap, truncated = self.sharded.topk(
+                q_sigs, k=k, cap=self._probe_cap,
+                max_cap=self.cfg.max_probe_cap)
         elif self._mode() == "dense":
             nid, nd = topk_dense(self.index, q_sigs, k=k)
         else:
             nid, nd, self._probe_cap, truncated = topk_probe(
                 self.index, q_sigs, k=k, cap=self._probe_cap,
                 max_cap=self.cfg.max_probe_cap)
-            if truncated:
-                warnings.warn(
-                    f"probe candidates truncated at max_probe_cap="
-                    f"{self.cfg.max_probe_cap}; top-k may miss neighbors — "
-                    f"raise ServingConfig.max_probe_cap", RuntimeWarning,
-                    stacklevel=2)
+        if truncated:
+            warnings.warn(
+                f"probe candidates truncated at max_probe_cap="
+                f"{self.cfg.max_probe_cap}; top-k may miss neighbors — "
+                f"raise ServingConfig.max_probe_cap", RuntimeWarning,
+                stacklevel=2)
         nid = np.array(nid)     # writable host copies
         nd = np.array(nd)
         nid[~q_valid] = -1
@@ -350,8 +376,10 @@ class QueryEngine:
         jitted gather+DP program (`align.smith_waterman.sw_gather_scores`) —
         the only H2D traffic per call is the query batch and the (M,) index
         vectors, never a per-pair host copy loop. The (query, slot) pair
-        list is padded to a fixed M (all-PAD rows score 0) so the jit cache
-        sees one shape per (batch, k) configuration.
+        list is padded to a fixed M (all-PAD rows score 0) and the query
+        length is quantized to the serving padding ladder
+        (``len_quantum``), so the gather+DP program compiles once per
+        ladder rung instead of once per raw batch width.
         """
         from ..align.smith_waterman import sw_gather_scores
         if self.ref_seqs is not self._ref_dev_src:
@@ -374,11 +402,17 @@ class QueryEngine:
         rv = np.full(M, -1, np.int32)
         qv[:len(qi)] = qi
         rv[:len(qi)] = rid
+        # quantize Lq to the serving ladder (raw batch widths would retrace
+        # the gather+DP program on every new width)
+        q = self.cfg.len_quantum
+        Lq = max(q, -(-ids.shape[1] // q) * q)
+        ids_q = np.full((ids.shape[0], Lq), PAD, np.int8)
+        ids_q[:, :ids.shape[1]] = ids
         scores = np.asarray(sw_gather_scores(
-            jnp.asarray(np.asarray(ids, np.int8)),
+            jnp.asarray(ids_q),
             jnp.asarray(np.asarray(lens, np.int32)),
             ref_ids_dev, ref_lens_dev, qv, rv,
-            Lq=ids.shape[1], Lr=int(ref_ids_dev.shape[1])))[:len(qi)]
+            Lq=Lq, Lr=int(ref_ids_dev.shape[1])))[:len(qi)]
         smat = np.full((B, K), -np.inf)
         smat[qi, ki] = scores
         order = np.argsort(-smat, axis=1, kind="stable")

@@ -1,34 +1,70 @@
-"""Device-sharded index placement: queries fan out, results gather globally.
+"""Bucket-sharded probe serving: shards own buckets, query blocks rotate.
 
-Placement is round-robin by reference id (global id g lives on shard
-``g % n_shards`` at local slot ``g // n_shards``), matching the
-``key % n_shards`` ownership convention of :mod:`repro.core.mapreduce`.
-Round-robin keeps every shard's load balanced regardless of insertion order.
+The MapReduce analogue made literal: each shard of the mesh owns the
+buckets that :func:`repro.index.partition.bucket_owners` routes to it
+(``mix32(band_key) % n_shards`` — the shuffle), holding them as a
+self-contained stacked-padded CSR slab *including its bucket entries'
+signature rows* — no shard ever holds the full (N, nw) signature matrix,
+so index memory scales down with the mesh. Serving probes run
+shard-local: the query batch is split into per-shard blocks that rotate
+around the mesh with ``ppermute`` (the ``ring_sweep`` discipline from
+:mod:`repro.core.mapreduce`), each hop probing the resident slab
+(searchsorted core shared with the single-device probe,
+``_probe_csr_positions``) and folding the matches into the block's
+carried top-k. After ``n_shards`` hops every block has visited every
+bucket owner and carries its global top-k home — no dense sweep, no
+global-id arithmetic (buckets store global ids directly), and per-hop
+communication is just the rotating query block + its k-row accumulator.
 
-Queries are replicated to every shard with ``shard_map``; each shard sweeps
-its resident signatures (XOR + popcount on the VPU, the same hot loop the
-Pallas kernel compiles on TPU) and returns its local top-k *with global
-ids*; the host merges the per-shard top-k lists into the final top-k — a
-classic scatter-gather serving tree. The placement tracks the backing
-:class:`SignatureIndex`: references appended with ``add()`` are re-placed
-automatically on the next ``topk`` (same deferred-rebuild discipline as the
-CSR buckets).
+Exactness: buckets are never split across shards, so the union of
+per-shard probes is exactly the single-device candidate set; the carried
+top-k merges under the total order (distance, id) via the shared
+``_dedup_candidates`` tie-break, so results are bit-exact with
+:func:`repro.index.service.topk_probe` for every ``n_shards`` — including
+tie-breaks — and overflow detection (true matched-bucket size vs cap) is
+the max over all (shard, hop) probes, the same grow-and-retry contract.
+
+The placement tracks the backing :class:`SignatureIndex`: references
+appended with ``add()`` are re-partitioned automatically on the next
+``topk`` (same deferred-rebuild discipline as the CSR buckets).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..core.hamming import hamming_distance
 from ..util import shard_map_compat
-from .service import BIG, _finalize_topk
+from .service import BIG, _dedup_candidates, _probe_csr_positions
 from .store import SignatureIndex
 
 
+def _merge_topk(best_id, best_d, cand, dist, k: int):
+    """Fold new candidates into a carried top-k under the total order
+    (distance, id): concat, dedup by id (``_dedup_candidates`` — a
+    candidate re-surfacing on a later hop has the same exact distance),
+    keep the best k. The shared sort-by-id dedup breaks distance ties
+    toward the smaller id, exactly like ``_topk_from_candidates``.
+
+    best_id/best_d (B, K) carried accumulator (-1 / BIG in empty slots);
+    cand/dist (B, C) this hop's candidates (dist == BIG where masked).
+    """
+    ids_all = jnp.concatenate([best_id, cand], axis=1)
+    d_all = jnp.concatenate([best_d, dist], axis=1)
+    ii, dvals = _dedup_candidates(ids_all, d_all, d_all < BIG)
+    neg, idx = jax.lax.top_k(-dvals, k)
+    nd = -neg
+    nid = jnp.take_along_axis(ii, idx, axis=1)
+    nid = jnp.where(nd < BIG, nid, -1)
+    nd = jnp.where(nd < BIG, nd, BIG)
+    return nid, nd
+
+
 class ShardedIndex:
-    """A :class:`SignatureIndex` laid out over a device mesh."""
+    """A :class:`SignatureIndex` whose *buckets* are laid out over a mesh."""
 
     def __init__(self, index: SignatureIndex, mesh=None,
                  *, axis_name: str = "data"):
@@ -37,34 +73,31 @@ class ShardedIndex:
         if mesh is None:
             n = jax.device_count()
             mesh = jax.make_mesh((n,), (axis_name,))
+        if axis_name not in mesh.axis_names:
+            raise ValueError(f"mesh has axes {mesh.axis_names}, expected "
+                             f"{axis_name!r}")
         self.mesh = mesh
         self.n_shards = mesh.shape[axis_name]
         self._snapshot_size = -1        # forces first placement
-        self._fn_cache = {}             # (B, kk) -> jitted fan-out program
+        self._fn_cache = {}             # (Bl, cap, k) -> jitted ring program
         self._place()
 
     def _place(self) -> None:
-        """(Re)distribute the index rows round-robin across shards."""
+        """(Re)partition the index's buckets across the mesh shards.
+
+        Slabs go straight from host to their owning devices with a
+        ``NamedSharding`` split on the shard axis — no single device ever
+        materializes the full stack, and the jitted ring (whose in_specs
+        expect exactly this layout) never reshards on the serving path."""
         index = self.index
-        index._ensure_built()
-        n = self.n_shards
-        N, nw = index.sigs.shape
-        Nl = max(-(-N // n), 1)         # local rows per shard (>=1 for SPMD)
-        sig_p = np.full((Nl * n, nw), 0xFFFFFFFF, np.uint32)
-        val_p = np.zeros(Nl * n, bool)
-        sig_p[:N] = index.sigs
-        val_p[:N] = index.valid
-        # Round-robin: padded row j*n + s -> shard s, local slot j. Reshape
-        # (Nl, n) -> transpose puts shard s's rows [s, s+n, s+2n, ...]
-        # contiguous; shard_map's P(axis) split then hands shard s exactly
-        # that block.
-        self._local_sigs = jnp.asarray(
-            sig_p.reshape(Nl, n, nw).transpose(1, 0, 2).reshape(n * Nl, nw))
-        self._local_valid = jnp.asarray(
-            val_p.reshape(Nl, n).T.reshape(n * Nl))
-        self.local_rows = Nl
-        self._snapshot_size = N
-        self._fn_cache.clear()          # shapes may have changed
+        part = index.partition(self.n_shards)
+        sharding = NamedSharding(self.mesh, P(self.axis_name))
+        self._slabs = tuple(jax.device_put(a, sharding)
+                            for a in part.host_slabs())
+        self._esigs = jax.device_put(part.host_entry_sigs(), sharding)
+        self._part = part
+        self._snapshot_size = index.size
+        self._fn_cache.clear()          # slab shapes may have changed
 
     def _refresh_if_stale(self) -> None:
         if self.index._dirty or self.index.size != self._snapshot_size:
@@ -74,47 +107,99 @@ class ShardedIndex:
     def size(self) -> int:
         return self.index.size
 
-    def _fan_out_fn(self, B: int, kk: int):
-        """Jitted shard_map program for a (B, kk) query shape (cached —
-        this is the serving hot path, so no per-call re-trace)."""
-        key = (B, kk)
+    def _ring_fn(self, Bl: int, cap: int, k: int):
+        """Jitted shard_map ring program for a (Bl per-shard) query block
+        shape (cached — serving hot path, no per-call re-trace)."""
+        key = (Bl, cap, k)
         fn = self._fn_cache.get(key)
         if fn is not None:
             return fn
         n, ax = self.n_shards, self.axis_name
+        perm = [(i, (i + 1) % n) for i in range(n)]
 
-        def shard_fn(qs, rs, rv):
-            s = jax.lax.axis_index(ax)
-            dist = hamming_distance(qs[:, None, :], rs[None, :, :])  # (B, Nl)
-            dist = jnp.where(rv[None, :], dist, BIG)
-            neg, idx = jax.lax.top_k(-dist, kk)
-            d = -neg
-            gid = idx.astype(jnp.int32) * n + s          # local -> global id
-            gid = jnp.where(d < BIG, gid, -1)
-            d = jnp.where(d < BIG, d, BIG)
-            return gid, d
+        def shard_fn(qk, qs, keys_s, offs_s, ids_s, esig_s):
+            # qk (Bl, nb), qs (Bl, nw) — this shard's starting query block;
+            # slabs arrive (1, nb, ...) after the P(ax) split
+            keys_l, offs_l = keys_s[0], offs_s[0]
+            ids_l, esig_l = ids_s[0], esig_s[0]
+            E = ids_l.shape[1]
+
+            def probe_band(qk_b, keys_b, offs_b, ids_b, esig_b, qs_c):
+                """One band's probe + local-sig Hamming filter."""
+                idx, ok, size = _probe_csr_positions(qk_b, keys_b, offs_b,
+                                                     cap=cap, E=E)
+                cand = jnp.where(ok, ids_b[idx], -1)
+                dist = hamming_distance(qs_c[:, None, :], esig_b[idx])
+                return cand, jnp.where(ok, dist, BIG), size
+
+            def hop(carry, _):
+                qk_c, qs_c, bid, bd, msz = carry
+                cand, dist, size = jax.vmap(
+                    probe_band, in_axes=(1, 0, 0, 0, 0, None))(
+                        qk_c, keys_l, offs_l, ids_l, esig_l, qs_c)
+                # (nb, Bl, cap) -> (Bl, nb*cap), the fused-probe layout
+                cand = jnp.transpose(cand, (1, 0, 2)).reshape(Bl, -1)
+                dist = jnp.transpose(dist, (1, 0, 2)).reshape(Bl, -1)
+                bid, bd = _merge_topk(bid, bd, cand, dist, k)
+                msz = jnp.maximum(msz, jnp.max(size))
+                # rotate the block and its accumulator one hop (ring_sweep
+                # discipline); after n hops it is home with its global top-k
+                qk_c = jax.lax.ppermute(qk_c, ax, perm)
+                qs_c = jax.lax.ppermute(qs_c, ax, perm)
+                bid = jax.lax.ppermute(bid, ax, perm)
+                bd = jax.lax.ppermute(bd, ax, perm)
+                return (qk_c, qs_c, bid, bd, msz), None
+
+            init = (qk, qs,
+                    jnp.full((Bl, k), -1, jnp.int32),
+                    jnp.full((Bl, k), BIG, jnp.int32),
+                    jnp.zeros((), jnp.int32))
+            (_, _, bid, bd, msz), _ = jax.lax.scan(hop, init, None, length=n)
+            return bid, bd, msz[None]
 
         fn = jax.jit(shard_map_compat(
             shard_fn, self.mesh,
-            in_specs=(P(), P(ax), P(ax)),
-            out_specs=(P(ax), P(ax)),
+            in_specs=(P(ax), P(ax), P(ax), P(ax), P(ax), P(ax)),
+            out_specs=(P(ax), P(ax), P(ax)),
         ))
         self._fn_cache[key] = fn
         return fn
 
-    def topk(self, q_sigs, *, k: int):
-        """Global top-k: (B, nw) query signatures -> ((B, k) global ids,
-        (B, k) dists), both -1-padded, merged across shards."""
+    def topk(self, q_sigs, *, k: int, cap: int = 32, max_cap: int = 1 << 14):
+        """Global top-k via shard-local bucket probes.
+
+        (B, nw) query signatures -> (ids (B, k), dists (B, k), final_cap,
+        truncated), both -1-padded — bit-exact with
+        :func:`~repro.index.service.topk_probe` (same candidates, same
+        tie-breaks, same grow-and-retry overflow contract).
+        """
         self._refresh_if_stale()
-        q_sigs = jnp.asarray(q_sigs)
-        B = q_sigs.shape[0]
+        q = np.asarray(q_sigs, np.uint32)
+        B = q.shape[0]
         n = self.n_shards
-        kk = min(k, self.local_rows)
-        fn = self._fan_out_fn(B, kk)
-        gids, dists = fn(q_sigs, self._local_sigs, self._local_valid)
-        # out axis 0 concatenates shards: (n*B, kk) -> (B, n*kk)
-        gids = jnp.transpose(gids.reshape(n, B, kk), (1, 0, 2)).reshape(B, -1)
-        dists = jnp.transpose(dists.reshape(n, B, kk), (1, 0, 2)).reshape(B, -1)
-        # merge: global top-k over the per-shard winners (shared tail with
-        # the single-device service paths)
-        return _finalize_topk(dists, gids, k)
+        keys_s, _, _ = self._slabs
+        if B == 0 or keys_s.shape[2] == 0:  # no queries / no buckets at all
+            return (np.full((B, k), -1, np.int32),
+                    np.full((B, k), -1, np.int32), cap, False)
+        qk = np.asarray(self.index.query_keys(q)).T     # (B, nb)
+        Bl = max(-(-B // n), 1)
+        # padding rows replicate query 0: real keys, so they can only
+        # re-match buckets query 0 already probed — the overflow max and
+        # the (cap, truncated) contract stay bit-exact with topk_probe
+        # (all-zero padding keys could match a real key-0 bucket that no
+        # actual query probes)
+        qk_p = np.tile(qk[:1], (Bl * n, 1))
+        qk_p[:B] = qk
+        qs_p = np.tile(q[:1], (Bl * n, 1))
+        qs_p[:B] = q
+        while True:
+            fn = self._ring_fn(Bl, cap, k)
+            bid, bd, msz = fn(qk_p, qs_p, *self._slabs, self._esigs)
+            truncated = int(np.max(np.asarray(msz))) > cap
+            if not truncated or cap >= max_cap:
+                break
+            cap = min(cap * 2, max_cap)     # grow-and-retry
+        nid = np.array(bid[:B])
+        nd = np.array(bd[:B])
+        nd[nd >= BIG] = -1
+        return nid, nd, cap, truncated

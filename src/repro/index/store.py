@@ -19,9 +19,15 @@ Structure (DESIGN.md §2 "HDFS -> on-device buffers + manifests"):
     queries probe with their raw signature; one sorted array, exact, no
     duplicate candidates. f <= 32.
 
+The stacked-padded slabs every probe/join consumer runs against are built
+by the bucket partition layer (:mod:`repro.index.partition`) via
+:meth:`SignatureIndex.partition` — the single-device probe is just shard 0
+of the 1-way partition.
+
 Persistence is a single ``.npz`` keyed by a *config fingerprint* (the LSH
-parameters that determine signature semantics). Loading an index against a
-different :class:`~repro.core.pipeline.LSHConfig` raises
+parameters that determine signature semantics; ``n_shards`` joins it when
+!= 1, and pre-sharding fingerprints stay valid). Loading an index against
+a different :class:`~repro.core.pipeline.LSHConfig` raises
 :class:`IndexConfigMismatch` — a stale index never silently serves wrong
 candidates.
 
@@ -55,7 +61,8 @@ class IndexConfigMismatch(RuntimeError):
 
 def config_fingerprint(cfg: LSHConfig, *, layout: str, bands: int,
                        interleave: bool = True,
-                       key_hash: str = "none") -> str:
+                       key_hash: str = "none",
+                       n_shards: int = 1) -> str:
     """Stable 16-hex-digit fingerprint of the index-relevant config."""
     payload = {
         "cfg": {f: getattr(cfg, f) for f in _FINGERPRINT_FIELDS},
@@ -65,6 +72,9 @@ def config_fingerprint(cfg: LSHConfig, *, layout: str, bands: int,
     # key_hash="none" is omitted so pre-key-hash fingerprints stay valid
     if key_hash != "none":
         payload["key_hash"] = key_hash
+    # n_shards=1 is omitted so pre-sharding fingerprints stay valid
+    if n_shards != 1:
+        payload["n_shards"] = n_shards
     blob = json.dumps(payload, sort_keys=True)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
@@ -87,15 +97,23 @@ class SignatureIndex:
 
     def __init__(self, cfg: LSHConfig, sigs: np.ndarray, valid: np.ndarray,
                  *, layout: str = "band", bands: int | None = None,
-                 interleave: bool = True, key_hash: str = "splitmix"):
+                 interleave: bool = True, key_hash: str = "splitmix",
+                 n_shards: int = 1):
         if layout not in ("band", "flip"):
             raise ValueError(f"unknown index layout {layout!r}")
         if layout == "flip" and cfg.f > 32:
             raise ValueError("flip layout needs f <= 32 (paper used f=32)")
         if key_hash not in ("splitmix", "none"):
             raise ValueError(f"unknown key_hash {key_hash!r}")
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.cfg = cfg
         self.layout = layout
+        # Intended bucket-shard count (the MapReduce reducer count). Purely
+        # a placement property — bucket contents are identical for every
+        # n_shards — but persisted (and fingerprinted when != 1) so a
+        # serving replica reloads the same partition it was built for.
+        self.n_shards = int(n_shards)
         # Interleaved banding (bit i -> band i % bands) spreads the
         # position-skewed signature-bit entropy evenly; see band_bit_groups.
         self.interleave = bool(interleave)
@@ -112,8 +130,7 @@ class SignatureIndex:
         assert self.sigs.shape == (self.valid.shape[0], cfg.f // 32)
         self._dirty = True          # buckets need (re)building
         self._csr_np = None         # list[(keys, offsets, ids)] numpy
-        self._csr_dev = None        # same, device arrays
-        self._csr_stacked = None    # (keys, offsets, ids) stacked over bands
+        self._partitions = {}       # n_shards -> BucketPartition (slabs)
         self._dev_sigs = None
         self._dev_valid = None
         self._pipeline = None
@@ -132,7 +149,8 @@ class SignatureIndex:
         return config_fingerprint(self.cfg, layout=self.layout,
                                    bands=self.bands,
                                    interleave=self.interleave,
-                                   key_hash=self.key_hash)
+                                   key_hash=self.key_hash,
+                                   n_shards=self.n_shards)
 
     @property
     def device_sigs(self) -> jnp.ndarray:
@@ -149,13 +167,15 @@ class SignatureIndex:
     def build(cls, cfg: LSHConfig, ref_ids, ref_lens, *,
               layout: str = "band", bands: int | None = None,
               interleave: bool = True,
-              key_hash: str = "splitmix") -> "SignatureIndex":
+              key_hash: str = "splitmix",
+              n_shards: int = 1) -> "SignatureIndex":
         """Run job 1 (signature generation + validity) over the reference set."""
         sl = ScalLoPS(cfg)
         sigs = np.asarray(sl.signatures(ref_ids, ref_lens))
         valid = np.asarray(sl.feature_counts(ref_ids, ref_lens)) > 0
         idx = cls(cfg, sigs, valid, layout=layout, bands=bands,
-                  interleave=interleave, key_hash=key_hash)
+                  interleave=interleave, key_hash=key_hash,
+                  n_shards=n_shards)
         idx._pipeline = sl
         return idx
 
@@ -191,41 +211,28 @@ class SignatureIndex:
                                   key_hash=self.key_hash))        # (V, bands)
         return [_sort_bucket(kb[:, b], valid_ids) for b in range(self.bands)]
 
-    def _stack_csr(self) -> None:
-        """Stack the per-band CSR arrays padded to common sizes, so the
-        probe runs as ONE jitted program over a (n_bands, ...) batch.
-
-        Padding is inert by construction: keys are padded by repeating the
-        last key (sortedness preserved; a query matching it still finds the
-        *first* occurrence, the real bucket) and offsets by repeating the
-        end offset (padded unique-key slots are empty buckets)."""
-        nb = len(self._csr_np)
-        U = max((len(k) for k, _, _ in self._csr_np), default=0)
-        E = max((len(i) for _, _, i in self._csr_np), default=0)
-        keys_s = np.zeros((nb, U), np.uint32)
-        offs_s = np.zeros((nb, U + 1), np.int32)
-        ids_s = np.zeros((nb, max(E, 1)), np.int32)
-        for b, (keys, offsets, ids) in enumerate(self._csr_np):
-            u, e = len(keys), len(ids)
-            keys_s[b, :u] = keys
-            if u:
-                keys_s[b, u:] = keys[-1]
-            offs_s[b, :u + 1] = offsets
-            offs_s[b, u + 1:] = offsets[u] if u else 0
-            ids_s[b, :e] = ids
-        self._csr_stacked = tuple(jnp.asarray(a)
-                                  for a in (keys_s, offs_s, ids_s))
-
     def _ensure_built(self) -> None:
-        if not self._dirty and self._csr_dev is not None:
+        if not self._dirty and self._csr_np is not None:
             return
         self._csr_np = self._build_csr()
-        self._csr_dev = [tuple(jnp.asarray(a) for a in csr)
-                         for csr in self._csr_np]
-        self._stack_csr()
+        self._partitions = {}       # slabs derive from the fresh CSR
         self._dev_sigs = jnp.asarray(self.sigs)
         self._dev_valid = jnp.asarray(self.valid)
         self._dirty = False
+
+    def partition(self, n_shards: int | None = None) -> "BucketPartition":
+        """Shard-owned stacked CSR slabs (:mod:`repro.index.partition`) —
+        the single stacking code path shared by the fused single-device
+        probe (``n_shards=1``), the sharded serving ring, and the sharded
+        self-join. Cached per shard count; invalidated on rebuild."""
+        from .partition import BucketPartition
+        self._ensure_built()
+        n = int(n_shards if n_shards is not None else self.n_shards)
+        part = self._partitions.get(n)
+        if part is None:
+            part = BucketPartition(self._csr_np, n, sigs=self.sigs)
+            self._partitions[n] = part
+        return part
 
     # ------------------------------------------------------------ probing
     def query_keys(self, q_sigs) -> jnp.ndarray:
@@ -253,7 +260,7 @@ class SignatureIndex:
         from .service import _probe_csr_fused  # jitted probe primitive
         self._ensure_built()
         qk = self.query_keys(q_sigs)
-        keys_s, offs_s, ids_s = self._csr_stacked
+        keys_s, offs_s, ids_s = self.partition(1).probe_arrays(0)
         if keys_s.shape[1] == 0:           # no buckets at all (empty index)
             B = qk.shape[1]
             return (jnp.full((B, self.n_bands * cap), -1, jnp.int32),
@@ -273,6 +280,7 @@ class SignatureIndex:
             "bands": self.bands,
             "interleave": self.interleave,
             "key_hash": self.key_hash,
+            "n_shards": self.n_shards,
             "n_refs": self.size,
         }
         payload = {
@@ -307,10 +315,13 @@ class SignatureIndex:
             interleave = bool(meta.get("interleave", True))
             # pre-key-hash indexes bucketed on raw band keys
             key_hash = meta.get("key_hash", "none")
+            # pre-sharding indexes are 1-way partitions (back-compat)
+            n_shards = int(meta.get("n_shards", 1))
             stored = meta["fingerprint"]
             recomputed = config_fingerprint(cfg, layout=layout, bands=bands,
                                             interleave=interleave,
-                                            key_hash=key_hash)
+                                            key_hash=key_hash,
+                                            n_shards=n_shards)
             if stored != recomputed:
                 raise IndexConfigMismatch(
                     f"fingerprint {stored} does not match stored config "
@@ -318,20 +329,21 @@ class SignatureIndex:
             if expected_cfg is not None:
                 want = config_fingerprint(expected_cfg, layout=layout,
                                           bands=bands, interleave=interleave,
-                                          key_hash=key_hash)
+                                          key_hash=key_hash,
+                                          n_shards=n_shards)
                 if want != stored:
                     raise IndexConfigMismatch(
                         f"index fingerprint {stored} != {want} for the "
                         f"requested config; rebuild the index")
             idx = cls(cfg, z["sigs"], z["valid"], layout=layout,
-                      bands=bands, interleave=interleave, key_hash=key_hash)
+                      bands=bands, interleave=interleave, key_hash=key_hash,
+                      n_shards=n_shards)
             csr = []
             for b in range(idx.n_bands):
                 csr.append((z[f"band{b}_keys"], z[f"band{b}_offsets"],
                             z[f"band{b}_ids"]))
         idx._csr_np = csr
-        idx._csr_dev = [tuple(jnp.asarray(a) for a in t) for t in csr]
-        idx._stack_csr()
+        idx._partitions = {}
         idx._dev_sigs = jnp.asarray(idx.sigs)
         idx._dev_valid = jnp.asarray(idx.valid)
         idx._dirty = False

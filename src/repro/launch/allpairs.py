@@ -57,6 +57,15 @@ def main(argv=None):
                          "(PR 2 behaviour, for comparison)")
     ap.add_argument("--min-pid", type=float, default=50.0,
                     help="percent-identity threshold for family edges")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="bucket shards: the self-join emits each shard's "
+                         "buckets' pairs on its own device (mix32(key) %% "
+                         "n_shards ownership). Score-only waves (--pallas "
+                         "off + --prefilter's ungapped phase, or score "
+                         "thresholding) additionally split over that many "
+                         "devices as one SPMD program; the PID traceback "
+                         "wave (the default scoring mode here) is "
+                         "host-bound and stays single-device")
     ap.add_argument("--tile", type=int, default=1024)
     ap.add_argument("--wave-batch", type=int, default=64)
     ap.add_argument("--pallas", action="store_true",
@@ -75,12 +84,27 @@ def main(argv=None):
 
     import os
 
+    if args.shards > 1 and "XLA_FLAGS" not in os.environ:
+        # must precede the first jax import (host platform device count)
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.shards}"
+
     import numpy as np
 
     from ..allpairs import AllPairsConfig, WaveConfig, all_pairs_search
     from ..core import LSHConfig
     from ..data import FamilyCorpusConfig, make_family_corpus
     from ..index import SignatureIndex, occupancy_report
+
+    import jax
+    if args.shards > 1 and jax.device_count() < args.shards:
+        # no silent fallback: the self-join would run its one-device vmap
+        # path and waves would clamp to one device
+        raise SystemExit(
+            f"--shards {args.shards} needs that many devices, have "
+            f"{jax.device_count()} (XLA_FLAGS was already set in the "
+            f"environment? add --xla_force_host_platform_device_count="
+            f"{args.shards} to it)")
 
     corpus = make_family_corpus(FamilyCorpusConfig(
         n_families=args.n_families, family_size=args.family_size,
@@ -99,10 +123,12 @@ def main(argv=None):
     cfg = AllPairsConfig(
         lsh=lsh, hamming_filter=not args.no_hamming_filter,
         min_pid=args.min_pid, min_score=args.min_score,
+        n_shards=args.shards,
         wave=WaveConfig(tile=args.tile, wave_batch=args.wave_batch,
                         use_pallas=args.pallas or None,
                         with_pid=not args.pallas,
                         device_gather=not args.host_gather,
+                        n_devices=args.shards,
                         prefilter=args.prefilter,
                         prefilter_min=args.prefilter_min,
                         xdrop=args.xdrop))

@@ -33,7 +33,11 @@ def main(argv=None):
     ap.add_argument("--index", default=None,
                     help="npz path for the persisted index (default: tmp)")
     ap.add_argument("--layout", default="band", choices=["band", "flip"])
-    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="bucket shards: each device owns the buckets "
+                         "mix32(band_key) %% n_shards routes to it (the "
+                         "MapReduce shuffle) and probes only those; query "
+                         "blocks rotate around the mesh via ppermute")
     ap.add_argument("--rerank", action="store_true",
                     help="Smith-Waterman re-rank of the top-k")
     args = ap.parse_args(argv)
@@ -60,7 +64,7 @@ def main(argv=None):
     # ---- build + persist (paid once per reference database)
     t0 = time.time()
     index = SignatureIndex.build(cfg, data["ref_ids"], data["ref_lens"],
-                                 layout=args.layout)
+                                 layout=args.layout, n_shards=args.shards)
     index._ensure_built()
     t_build = time.time() - t0
     path = args.index or os.path.join(tempfile.gettempdir(), "scallops.npz")
@@ -78,14 +82,27 @@ def main(argv=None):
 
     sharded = None
     if args.shards > 1:
-        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        from jax.sharding import Mesh
+        if jax.device_count() < args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} needs that many devices, have "
+                f"{jax.device_count()} (XLA_FLAGS was already set?)")
+        # mesh sized by --shards (== the index's persisted n_shards), not
+        # by whatever the process happens to expose
+        mesh = Mesh(np.array(jax.devices()[:args.shards]), ("data",))
         sharded = ShardedIndex(loaded, mesh)
-        print(f"[shard] round-robin over {sharded.n_shards} devices "
-              f"({sharded.local_rows} refs/shard)")
+        part = sharded._part
+        print(f"[shard] {int(part.n_buckets.sum())} buckets over "
+              f"{sharded.n_shards} devices (per-shard buckets "
+              f"{part.n_buckets.tolist()}, entries {part.n_entries.tolist()})")
 
     scfg = ServingConfig(k=args.k, max_batch=args.batch, rerank=args.rerank)
     engine = QueryEngine(loaded, scfg, sharded=sharded,
                          ref_seqs=(data["ref_ids"], data["ref_lens"]))
+    mode = "sharded-probe" if sharded is not None else engine._mode()
+    print(f"[mode]  {mode} serving (probe candidates are exact within "
+          f"Hamming d={args.d}; the dense path ranks ALL refs — raise --d "
+          f"for deeper top-k recall under probe/sharded serving)")
     # warm-up batch compiles the fixed-shape serving path
     engine.query_batch(data["query_ids"][:args.batch],
                        data["query_lens"][:args.batch])

@@ -134,6 +134,20 @@ def test_wave_length_one_sequences():
     assert scored.pid[1] == 0.0
 
 
+def test_sw_int16_guard_long_sequences():
+    """The gapped wave's int16 carries are guarded at 11*L < 2^14: a pair
+    above the guard falls back to int32 and stays bit-exact with the
+    (always-int32) matrix path; one below it runs int16 and agrees too."""
+    rng = np.random.default_rng(9)
+    for L in (180, 1600):       # int16 regime / int32 fallback
+        q = rng.integers(0, 20, L).astype(np.int8)
+        r = rng.integers(0, 20, L + 16).astype(np.int8)
+        _, _, want = percent_identity(q, r)    # int32 DP matrix path
+        assert sw_score(q, r) == want
+        np.testing.assert_array_equal(
+            sw_align_batch(q[None, :], r[None, :]), [want])
+
+
 def test_wave_all_pad_rows():
     """All-PAD rows (wave padding) score 0 / PID 0 and never poison real
     rows in the same wave."""

@@ -210,6 +210,21 @@ def test_engine_search_pairs_grows_capacity(data, index):
     assert int(res.count) == len(pairs_to_set(res.pairs))
 
 
+def test_engine_rerank_lq_quantized_no_retrace(data, index):
+    """Two batches whose raw widths share a ladder rung must reuse ONE
+    compiled gather+DP program (Lq is quantized to len_quantum)."""
+    from repro.align.smith_waterman import sw_gather_scores
+    eng = QueryEngine(index, ServingConfig(k=3, rerank=True),
+                      ref_seqs=(data["ref_ids"], data["ref_lens"]))
+    qi, ql = data["query_ids"], data["query_lens"]
+    eng.query_batch(qi[:4, :70], np.minimum(ql[:4], 70))
+    n1 = sw_gather_scores._cache_size()
+    eng.query_batch(qi[:4, :90], np.minimum(ql[:4], 90))   # same 128 rung
+    assert sw_gather_scores._cache_size() == n1
+    eng.query_batch(qi[:4, :150], np.minimum(ql[:4], 150))  # new 192 rung
+    assert sw_gather_scores._cache_size() == n1 + 1
+
+
 def test_engine_rerank_reorders_by_sw(data, index):
     eng = QueryEngine(index, ServingConfig(k=3, rerank=True),
                       ref_seqs=(data["ref_ids"], data["ref_lens"]))
@@ -226,22 +241,48 @@ def test_engine_rerank_reorders_by_sw(data, index):
 
 
 # ---------------------------------------------------------------- shard
-def test_sharded_single_device_matches_dense(index, q_sigs):
+def test_sharded_single_device_matches_probe(index, q_sigs):
+    """The bucket-sharded ring at n_shards=1 is bit-exact with topk_probe
+    (same candidates, same tie-breaks, same overflow contract)."""
     sh = ShardedIndex(index)           # 1 CPU device in the main process
-    nid, nd = sh.topk(q_sigs, k=5)
-    _, want = topk_dense(index, q_sigs, k=5)
-    np.testing.assert_array_equal(np.asarray(nd), np.asarray(want))
+    nid, nd, cap, tr = sh.topk(q_sigs, k=5, cap=256)
+    want_id, want_d, want_cap, want_tr = topk_probe(index, q_sigs, k=5,
+                                                    cap=256)
+    np.testing.assert_array_equal(nid, np.asarray(want_id))
+    np.testing.assert_array_equal(nd, np.asarray(want_d))
+    assert (cap, tr) == (want_cap, want_tr)
+
+
+def test_sharded_grow_and_retry(index, q_sigs):
+    """A tiny cap must grow until no matched bucket truncates, landing on
+    the same results as a comfortably large cap."""
+    sh = ShardedIndex(index)
+    nid, nd, cap, tr = sh.topk(q_sigs, k=5, cap=1)
+    assert cap > 1 and not tr
+    big_id, big_d, *_ = sh.topk(q_sigs, k=5, cap=256)
+    np.testing.assert_array_equal(nid, big_id)
+    np.testing.assert_array_equal(nd, big_d)
+
+
+def test_sharded_engine_path_matches_probe_engine(data, index):
+    """QueryEngine served through a ShardedIndex == the probe engine."""
+    probe_eng = QueryEngine(index, ServingConfig(k=5, mode="probe"))
+    a_id, a_d = probe_eng.query_batch(data["query_ids"], data["query_lens"])
+    sh_eng = QueryEngine(index, ServingConfig(k=5), sharded=ShardedIndex(index))
+    b_id, b_d = sh_eng.query_batch(data["query_ids"], data["query_lens"])
+    np.testing.assert_array_equal(a_id, b_id)
+    np.testing.assert_array_equal(a_d, b_d)
 
 
 @pytest.mark.slow
-def test_sharded_multi_device_matches_dense():
+def test_sharded_multi_device_matches_probe():
     """4 host devices in a subprocess (XLA flag must precede jax import)."""
     code = """
 import numpy as np
 from repro.core import LSHConfig, ScalLoPS
 from repro.data import SyntheticProteinConfig, make_protein_sets
 from repro.index import ShardedIndex, SignatureIndex
-from repro.index.service import topk_dense
+from repro.index.service import topk_probe
 
 data = make_protein_sets(SyntheticProteinConfig(
     n_refs=50, n_homolog_queries=8, n_decoy_queries=8,
@@ -251,9 +292,10 @@ idx = SignatureIndex.build(cfg, data["ref_ids"], data["ref_lens"])
 q = ScalLoPS(cfg).signatures(data["query_ids"], data["query_lens"])
 sh = ShardedIndex(idx)
 assert sh.n_shards == 4
-nid, nd = sh.topk(q, k=5)
-_, want = topk_dense(idx, q, k=5)
-np.testing.assert_array_equal(np.asarray(nd), np.asarray(want))
+nid, nd, cap, tr = sh.topk(q, k=5, cap=256)
+want_id, want_d, *_ = topk_probe(idx, q, k=5, cap=256)
+np.testing.assert_array_equal(nid, np.asarray(want_id))
+np.testing.assert_array_equal(nd, np.asarray(want_d))
 print("OK")
 """
     env = dict(os.environ,
