@@ -1,0 +1,216 @@
+"""Indexing lifecycle benchmark — segmented add()+refresh vs full rebuild.
+
+The acceptance metric of the append-only segment lifecycle (PR 5): growing
+a served index by a delta must beat rebuilding it, on both axes —
+
+* **add() throughput**: sealing a segment (signatures + buckets for the
+  NEW rows only) + the serving replica's ``refresh()`` (delta partition +
+  delta slab upload) + one served batch, vs the from-scratch path
+  (recompute every signature, rebuild every bucket, re-place every slab,
+  serve) and vs the PR 4-era mutation path (keep signatures, but re-bucket
+  and re-place the whole table);
+* **refresh latency**: ``ShardedIndex.refresh()`` alone vs a full
+  ``_place()`` of the merged table.
+
+Both paths must produce bit-exact top-k results (asserted). Emits
+``BENCH_index.json`` for the nightly CI artifact trail.
+
+  PYTHONPATH=src python -m benchmarks.indexing --smoke        # CI
+  PYTHONPATH=src python -m benchmarks.indexing --n-base 8192 --n-delta 512
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _run(args):
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import LSHConfig, ScalLoPS
+    from repro.data import SyntheticProteinConfig, make_protein_sets
+    from repro.index import ShardedIndex, SignatureIndex
+
+    S = args.shards
+    assert jax.device_count() >= S, (
+        f"need {S} devices for the serving ring, got {jax.devices()}")
+    mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
+    csv = print
+    csv("bench,n_base,n_delta,metric,value")
+    nb, nd = args.n_base, args.n_delta
+    data = make_protein_sets(SyntheticProteinConfig(
+        n_refs=nb + nd, n_homolog_queries=args.n_queries // 2,
+        n_decoy_queries=args.n_queries - args.n_queries // 2,
+        ref_len_mean=150, ref_len_std=25, sub_rates=(0.05, 0.12), seed=7))
+    ids, lens = data["ref_ids"], data["ref_lens"]
+    cfg = LSHConfig(k=3, T=13, f=32, d=1)
+    sl = ScalLoPS(cfg)
+    q_sigs = sl.signatures(data["query_ids"], data["query_lens"])
+
+    def job1(i0, i1):
+        """Job 1 over rows [i0:i1) — the signature work every mutation
+        path pays for the rows it (re)computes."""
+        s = np.asarray(sl.signatures(ids[i0:i1], lens[i0:i1]))
+        v = np.asarray(sl.feature_counts(ids[i0:i1], lens[i0:i1])) > 0
+        return s, v
+
+    # ONE warmed pipeline serves every path (the signature program jits per
+    # ScalLoPS instance; sharing it keeps compile time out of the
+    # steady-state comparison for all contenders equally)
+    sigs_full, valid_full = job1(0, nb + nd)
+    job1(nb, nb + nd)                       # warm the delta batch shape
+    sigs_base, valid_base = sigs_full[:nb], valid_full[:nb]
+
+    def fresh_base():
+        idx = SignatureIndex(cfg, sigs_base, valid_base)
+        idx._pipeline = sl                  # add() reuses the warm program
+        sh = ShardedIndex(idx, mesh)
+        sh.topk(q_sigs, k=8, cap=64)        # warm: compile + base placement
+        return idx, sh
+
+    t_seg, t_refresh, t_save_delta, t_serve_delta = [], [], [], []
+    seg_result = None
+    for _ in range(args.reps):
+        idx, sh = fresh_base()
+        t0 = time.perf_counter()            # the ingest: new-row signatures
+        idx.add(ids[nb:], lens[nb:])        # + segment seal + delta refresh
+        sh.refresh()
+        t_seg.append(time.perf_counter() - t0)
+        assert sh._delta is not None, "delta must ride along, not re-place"
+        seg_result = sh.topk(q_sigs, k=8, cap=64)
+        t0 = time.perf_counter()            # steady-state serve through the
+        sh.topk(q_sigs, k=8, cap=64)        # base+delta ring
+        t_serve_delta.append(time.perf_counter() - t0)
+        # refresh() alone (fresh replica, same grown index)
+        idx2, sh2 = fresh_base()
+        idx2.add(ids[nb:], lens[nb:])
+        idx2.seal()
+        t0 = time.perf_counter()
+        sh2.refresh()
+        t_refresh.append(time.perf_counter() - t0)
+
+    # O(delta) persistence: append one segment vs rewrite everything
+    import tempfile
+    d = tempfile.mkdtemp(prefix="bench_idx_")
+    idx, _ = fresh_base()
+    idx.save(os.path.join(d, "idx"))
+    idx.add(ids[nb:], lens[nb:])
+    t0 = time.perf_counter()
+    n_written = idx.save(os.path.join(d, "idx"))
+    t_save_delta.append(time.perf_counter() - t0)
+    assert n_written == 1, "append-only save must write only the delta"
+
+    # ---- rebuild paths ---------------------------------------------------
+    t_rebuild, t_pr4, t_place, t_save_full, t_serve_base = [], [], [], [], []
+    rebuild_result = None
+    for _ in range(args.reps):
+        t0 = time.perf_counter()            # from-scratch: EVERY signature
+        s, v = job1(0, nb + nd)             # recomputed + full bucket sort
+        full = SignatureIndex(cfg, s, v)
+        full.seal()
+        sh_full = ShardedIndex(full, mesh)  # full placement
+        t_rebuild.append(time.perf_counter() - t0)
+        rebuild_result = sh_full.topk(q_sigs, k=8, cap=64)
+        t0 = time.perf_counter()            # steady-state serve, base-only
+        sh_full.topk(q_sigs, k=8, cap=64)   # ring (the delta ring's
+        t_serve_base.append(time.perf_counter() - t0)   # comparator)
+        # PR 4-era add(): new-row signatures appended, but then the WHOLE
+        # table re-bucketed and re-placed (the invalidate-and-rebuild path
+        # this PR deleted)
+        t0 = time.perf_counter()
+        ds, dv = job1(nb, nb + nd)
+        pr4 = SignatureIndex(cfg, np.concatenate([sigs_base, ds]),
+                             np.concatenate([valid_base, dv]))
+        pr4.seal()
+        ShardedIndex(pr4, mesh)             # full re-bucket + full re-place
+        t_pr4.append(time.perf_counter() - t0)
+        # full placement alone (the refresh comparator)
+        full2 = SignatureIndex(cfg, s, v)
+        full2.seal()
+        t0 = time.perf_counter()
+        ShardedIndex(full2, mesh)
+        t_place.append(time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    full.save(os.path.join(d, "full"))
+    t_save_full.append(time.perf_counter() - t0)
+
+    # ---- bit-exactness + report -----------------------------------------
+    np.testing.assert_array_equal(seg_result[0], rebuild_result[0])
+    np.testing.assert_array_equal(seg_result[1], rebuild_result[1])
+    csv(f"indexing,{nb},{nd},bitexact,1")
+
+    def best(ts):
+        return min(ts)
+
+    results = {
+        "bench": "indexing", "n_base": nb, "n_delta": nd, "n_shards": S,
+        "segmented_add_refresh_s": round(best(t_seg), 4),
+        "rebuild_s": round(best(t_rebuild), 4),
+        "pr4_add_s": round(best(t_pr4), 4),
+        "refresh_s": round(best(t_refresh), 4),
+        "place_s": round(best(t_place), 4),
+        "save_delta_s": round(best(t_save_delta), 4),
+        "save_full_s": round(best(t_save_full), 4),
+        "serve_batch_s": {      # steady-state serving cost per placement
+            "base_ring": round(best(t_serve_base), 4),
+            "delta_ring": round(best(t_serve_delta), 4),
+        },
+        "add_rows_per_s": {
+            "segmented": round(nd / best(t_seg), 1),
+            "rebuild": round(nd / best(t_rebuild), 1),
+            "pr4_add": round(nd / best(t_pr4), 1),
+        },
+        "speedup": {
+            "vs_rebuild": round(best(t_rebuild) / best(t_seg), 2),
+            "vs_pr4_add": round(best(t_pr4) / best(t_seg), 2),
+            "refresh_vs_place": round(best(t_place) / best(t_refresh), 2),
+        },
+        "bitexact": True,
+    }
+    for k in ("segmented_add_refresh_s", "rebuild_s", "pr4_add_s",
+              "refresh_s", "place_s", "save_delta_s", "save_full_s"):
+        csv(f"indexing,{nb},{nd},{k},{results[k]}")
+    for k, v in results["speedup"].items():
+        csv(f"indexing,{nb},{nd},speedup_{k},{v}")
+
+    with open(args.json, "w") as fh:
+        json.dump(results, fh, indent=2)
+    csv(f"indexing,{nb},{nd},json_written,{args.json}")
+
+    assert results["speedup"]["vs_rebuild"] > 1.0, (
+        f"segmented add()+refresh must beat the full rebuild "
+        f"(got {results['speedup']['vs_rebuild']}x at n_base={nb}, "
+        f"n_delta={nd})")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus for CI (writes BENCH_index.json)")
+    ap.add_argument("--n-base", type=int, default=None)
+    ap.add_argument("--n-delta", type=int, default=None)
+    ap.add_argument("--n-queries", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--json", default="BENCH_index.json")
+    args = ap.parse_args(argv)
+    args.n_base = args.n_base or (1024 if args.smoke else 4096)
+    args.n_delta = args.n_delta or (128 if args.smoke else 512)
+
+    if "XLA_FLAGS" not in os.environ:
+        # must precede the first jax import (host platform device count)
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.shards}"
+        if "jax" in sys.modules:
+            raise RuntimeError("jax imported before XLA_FLAGS was set; "
+                               "run benchmarks.indexing as the entry point")
+    _run(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,8 +31,9 @@ print(f"index: {index.size} refs, layout={index.layout}, "
 # --- incremental growth: add a reference after the initial build ----------
 extra = ["MTEYKLVVVGAGGVGKSALTIQLIQNHFVDEYDPTIEDSYRKQVVIDGETCLLDILDTAGQ"]
 e_ids, e_lens = encode_batch(extra, max_len=ref_ids.shape[1])
-index.add(e_ids, e_lens)          # re-sort is deferred to the next probe
-print(f"after add(): {index.size} refs (buckets re-sort lazily)")
+index.add(e_ids, e_lens)    # seals an append-only segment (lazily, on the
+print(f"after add(): {index.size} refs "         # next probe/refresh/save)
+      f"(epoch {index.epoch}: resident buckets untouched)")
 
 # --- serve: micro-batched top-k with optional SW re-rank ------------------
 all_ids = np.concatenate([ref_ids, e_ids])

@@ -21,6 +21,14 @@ index:
   (jnp row-wave or the Pallas tile kernel).
 * ``graph``   — :func:`cluster_families`: PID/score-thresholded edges,
   union-find components, families largest-first.
+
+Growth is incremental end to end: :func:`all_pairs_ingest` appends new
+sequences to the index (append-only segments), delta-joins only the pairs
+touching the new rows (:func:`lsh_delta_join` — resident-vs-resident pairs
+are never re-enumerated), scores them through the same wave pipeline, and
+unions the surviving edges into a persistent disjoint-set
+(:class:`~repro.allpairs.graph.FamilyForest`) — families equal a
+from-scratch recluster of the grown corpus.
 """
 from __future__ import annotations
 
@@ -30,8 +38,10 @@ import numpy as np
 
 from ..core.pipeline import LSHConfig
 from ..index.store import SignatureIndex
-from .graph import FamilyResult, cluster_families, union_find
-from .selfjoin import SelfJoinResult, brute_force_collisions, lsh_self_join
+from .graph import (FamilyForest, FamilyResult, cluster_families,
+                    families_from_labels, threshold_edges, union_find)
+from .selfjoin import (SelfJoinResult, brute_force_collisions,
+                       lsh_delta_join, lsh_self_join)
 from .tiles import PairScores, WaveConfig, score_pairs, wave_plan
 
 
@@ -97,9 +107,84 @@ def all_pairs_search(ids, lens, cfg: AllPairsConfig | None = None,
                           index=index)
 
 
+def _edge_mask(scored: PairScores, cfg: AllPairsConfig, pairs) -> np.ndarray:
+    """The one edge-survival rule, shared by batch search and ingest."""
+    if cfg.wave.with_pid:
+        return threshold_edges(pairs, scored.pid, min_pid=cfg.min_pid)
+    return threshold_edges(pairs, None, scores=scored.scores,
+                           min_score=cfg.min_score)
+
+
+def forest_from_result(res: AllPairsResult) -> FamilyForest:
+    """Seed a persistent forest from a batch run's surviving edges — the
+    handoff point from :func:`all_pairs_search` to incremental ingest."""
+    forest = FamilyForest(res.index.size)
+    forest.union_edges(res.pairs[res.families.edge_mask])
+    return forest
+
+
+@dataclass(frozen=True)
+class IngestResult:
+    """One incremental ingest: the delta candidate pairs, their scores, and
+    the grown corpus's family labels from the persistent forest."""
+    join: SelfJoinResult         # DELTA pairs only (>= 1 row is new)
+    scored: PairScores           # aligned with join.pairs
+    edge_mask: np.ndarray        # which delta pairs survived the threshold
+    labels: np.ndarray           # (N,) labels over the GROWN corpus
+    forest: FamilyForest         # the updated persistent disjoint-set
+
+    @property
+    def families(self) -> list[np.ndarray]:
+        return families_from_labels(self.labels)
+
+
+def all_pairs_ingest(ids, lens, base_size: int,
+                     cfg: AllPairsConfig | None = None, *,
+                     index: SignatureIndex,
+                     forest: FamilyForest) -> IngestResult:
+    """Grow the corpus incrementally: rows ``[base_size:]`` of ``ids/lens``
+    are new; everything before is the resident corpus ``index`` and
+    ``forest`` already cover.
+
+    Appends the new rows to the index (append-only segment) unless the
+    caller already did, delta-joins only the pairs touching new rows,
+    scores them through the standard wave pipeline, and unions the
+    surviving edges into ``forest``. The resulting labels are EXACTLY what
+    a from-scratch :func:`all_pairs_search` over the grown corpus produces
+    (asserted in tests/test_lifecycle.py) — at delta cost, the paper's
+    "data grows faster than compute" economics applied to clustering.
+    """
+    cfg = cfg or AllPairsConfig()
+    ids = np.asarray(ids, np.int8)
+    lens = np.asarray(lens, np.int32)
+    # validate BEFORE mutating: a stale forest must not leave the index
+    # grown (and out of sync with the caller's labels) on the error path
+    if forest.n not in (base_size, len(lens)):
+        raise ValueError(f"forest covers {forest.n} nodes; expected "
+                         f"{base_size} or {len(lens)}")
+    if index.size == base_size:
+        index.add(ids[base_size:], lens[base_size:])
+    elif index.size != len(lens):
+        raise ValueError(
+            f"index covers {index.size} sequences; expected the resident "
+            f"{base_size} (add() pending) or the grown {len(lens)}")
+    join = lsh_delta_join(index, base_size=base_size,
+                          d=cfg.lsh.d if cfg.hamming_filter else None,
+                          max_pairs=cfg.max_pairs)
+    scored = score_pairs(ids, lens, join.pairs, cfg.wave)
+    mask = _edge_mask(scored, cfg, join.pairs)
+    forest.grow(index.size)
+    forest.union_edges(join.pairs[mask])
+    return IngestResult(join=join, scored=scored, edge_mask=mask,
+                        labels=forest.labels(), forest=forest)
+
+
 __all__ = [
     "AllPairsConfig", "AllPairsResult", "all_pairs_search",
-    "SelfJoinResult", "lsh_self_join", "brute_force_collisions",
+    "IngestResult", "all_pairs_ingest", "forest_from_result",
+    "SelfJoinResult", "lsh_self_join", "lsh_delta_join",
+    "brute_force_collisions",
     "WaveConfig", "PairScores", "score_pairs", "wave_plan",
-    "FamilyResult", "cluster_families", "union_find",
+    "FamilyResult", "FamilyForest", "cluster_families", "threshold_edges",
+    "families_from_labels", "union_find",
 ]

@@ -5,43 +5,110 @@ families are its connected components after thresholding (the classic
 single-linkage clustering used by PASTIS-style many-to-many pipelines: an
 edge survives if its alignment is strong enough, and transitive closure
 groups distant relatives through intermediates).
+
+The disjoint-set forest is **persistent** (:class:`FamilyForest`): it
+lives beside the index manifest, grows with the corpus
+(:meth:`FamilyForest.grow`), and unions each ingest's surviving delta
+edges into the standing components — labels are canonicalized to the
+component's smallest member id, so the incremental forest is EXACTLY the
+from-scratch :func:`union_find` over the concatenated edge set (union
+order never changes components, and the canonical label is order-free).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 
 import numpy as np
 
 
-def union_find(n: int, edges: np.ndarray) -> np.ndarray:
-    """Connected-component labels of n nodes under (m, 2) edges.
+class FamilyForest:
+    """Persistent disjoint-set over a growing corpus.
 
     Path-halving + union by size, vectorized-ish host loop (edges are few
-    after thresholding). Labels are the component's smallest member id, so
-    they are stable under edge order.
+    after thresholding). ``labels()`` canonicalizes each component to its
+    smallest member id — stable under edge order AND under the
+    incremental-vs-batch split, which is what makes the persisted forest
+    interchangeable with a from-scratch recluster.
     """
-    parent = np.arange(n, dtype=np.int64)
-    size = np.ones(n, dtype=np.int64)
 
-    def find(x: int) -> int:
+    def __init__(self, n: int = 0):
+        self.parent = np.arange(n, dtype=np.int64)
+        self._size = np.ones(n, dtype=np.int64)
+
+    @property
+    def n(self) -> int:
+        return len(self.parent)
+
+    def grow(self, n: int) -> None:
+        """Extend the forest to ``n`` nodes (new nodes start as singleton
+        components — the ingest path calls this before unioning delta
+        edges). Shrinking is refused: nodes never leave the corpus."""
+        n0 = self.n
+        if n < n0:
+            raise ValueError(f"forest holds {n0} nodes; cannot shrink "
+                             f"to {n}")
+        if n == n0:
+            return
+        self.parent = np.concatenate(
+            [self.parent, np.arange(n0, n, dtype=np.int64)])
+        self._size = np.concatenate(
+            [self._size, np.ones(n - n0, dtype=np.int64)])
+
+    def find(self, x: int) -> int:
+        parent = self.parent
         while parent[x] != x:
             parent[x] = parent[parent[x]]   # path halving
             x = parent[x]
-        return x
+        return int(x)
 
-    for a, b in np.asarray(edges, np.int64):
-        ra, rb = find(int(a)), find(int(b))
-        if ra == rb:
-            continue
-        if size[ra] < size[rb]:
-            ra, rb = rb, ra
-        parent[rb] = ra
-        size[ra] += size[rb]
-    # canonical label: smallest member id of each component
-    roots = np.fromiter((find(i) for i in range(n)), np.int64, count=n)
-    smallest = np.full(n, n, dtype=np.int64)
-    np.minimum.at(smallest, roots, np.arange(n, dtype=np.int64))
-    return smallest[roots].astype(np.int32)
+    def union_edges(self, edges: np.ndarray) -> None:
+        """Union (m, 2) edges into the standing components."""
+        for a, b in np.asarray(edges, np.int64).reshape(-1, 2):
+            ra, rb = self.find(int(a)), self.find(int(b))
+            if ra == rb:
+                continue
+            if self._size[ra] < self._size[rb]:
+                ra, rb = rb, ra
+            self.parent[rb] = ra
+            self._size[ra] += self._size[rb]
+
+    def labels(self) -> np.ndarray:
+        """(n,) int32 component label per node — the component's smallest
+        member id (order-free canonical form)."""
+        n = self.n
+        roots = np.fromiter((self.find(i) for i in range(n)), np.int64,
+                            count=n)
+        smallest = np.full(n, n, dtype=np.int64)
+        np.minimum.at(smallest, roots, np.arange(n, dtype=np.int64))
+        return smallest[roots].astype(np.int32)
+
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str | os.PathLike) -> None:
+        """Persist the forest (conventionally ``families.npz`` beside the
+        index manifest — the ingest CLI does exactly that)."""
+        np.savez_compressed(path, parent=self.parent, size=self._size)
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "FamilyForest":
+        with np.load(path) as z:
+            forest = cls(0)
+            forest.parent = np.asarray(z["parent"], np.int64).copy()
+            forest._size = np.asarray(z["size"], np.int64).copy()
+        return forest
+
+
+def union_find(n: int, edges: np.ndarray) -> np.ndarray:
+    """Connected-component labels of n nodes under (m, 2) edges.
+
+    The from-scratch convenience wrapper over :class:`FamilyForest`;
+    labels are the component's smallest member id, so they are stable
+    under edge order (and equal to an incrementally grown forest fed the
+    same edges in any split).
+    """
+    forest = FamilyForest(n)
+    forest.union_edges(edges)
+    return forest.labels()
 
 
 @dataclass(frozen=True)
@@ -55,6 +122,32 @@ class FamilyResult:
         return len(self.families)
 
 
+def threshold_edges(pairs: np.ndarray, pid: np.ndarray | None = None,
+                    *, min_pid: float = 50.0,
+                    scores: np.ndarray | None = None,
+                    min_score: int | None = None) -> np.ndarray:
+    """(P,) bool mask of edges passing the PID and/or SW-score floors
+    (NaN PID never passes) — shared by the batch clusterer and the
+    incremental ingest, so an edge survives identically in both."""
+    mask = np.ones(len(pairs), bool)
+    if pid is not None:
+        with np.errstate(invalid="ignore"):
+            mask &= np.nan_to_num(np.asarray(pid), nan=-1.0) >= min_pid
+    if min_score is not None:
+        if scores is None:
+            raise ValueError("min_score needs scores")
+        mask &= np.asarray(scores) >= min_score
+    return mask
+
+
+def families_from_labels(labels: np.ndarray) -> list[np.ndarray]:
+    """Multi-member components of a label vector, largest first."""
+    uniq, counts = np.unique(labels, return_counts=True)
+    fams = [np.flatnonzero(labels == u) for u in uniq[counts >= 2]]
+    fams.sort(key=len, reverse=True)
+    return fams
+
+
 def cluster_families(n: int, pairs: np.ndarray, pid: np.ndarray | None = None,
                      *, min_pid: float = 50.0,
                      scores: np.ndarray | None = None,
@@ -66,16 +159,8 @@ def cluster_families(n: int, pairs: np.ndarray, pid: np.ndarray | None = None,
     connected components with >= 2 members, largest first.
     """
     pairs = np.asarray(pairs)
-    mask = np.ones(len(pairs), bool)
-    if pid is not None:
-        with np.errstate(invalid="ignore"):
-            mask &= np.nan_to_num(np.asarray(pid), nan=-1.0) >= min_pid
-    if min_score is not None:
-        if scores is None:
-            raise ValueError("min_score needs scores")
-        mask &= np.asarray(scores) >= min_score
+    mask = threshold_edges(pairs, pid, min_pid=min_pid, scores=scores,
+                           min_score=min_score)
     labels = union_find(n, pairs[mask])
-    uniq, counts = np.unique(labels, return_counts=True)
-    fams = [np.flatnonzero(labels == u) for u in uniq[counts >= 2]]
-    fams.sort(key=len, reverse=True)
-    return FamilyResult(labels=labels, families=fams, edge_mask=mask)
+    return FamilyResult(labels=labels, families=families_from_labels(labels),
+                        edge_mask=mask)

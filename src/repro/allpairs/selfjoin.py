@@ -21,6 +21,22 @@ across shards, so the union of per-shard emissions is EXACTLY the
 single-device pair set — the result arrays are bit-identical for every
 ``n_shards``.
 
+Capacity is **skew-bounded**: each shard's emission buffer is sized at its
+OWN per-(shard, band) within-bucket pair total (quantized to a power of
+two to bound recompiles), so one degenerate bucket inflates one shard's
+buffer, not every shard's. Uniform demand keeps the single SPMD
+``shard_map`` program (one dispatch, the PR 4 lesson); skewed demand falls
+back to per-shard emission with a ragged host merge — the downstream
+dedup lexsorts, so the pair arrays are identical either way.
+
+Incremental growth joins incrementally too: :func:`lsh_delta_join` emits
+only the pairs that touch rows appended after ``base_size`` — each new
+segment's within-bucket pairs plus its cross pairs against every resident
+segment's matching buckets — so ingesting a segment never re-enumerates
+the resident corpus. The union of the old pair set and the delta is
+EXACTLY the from-scratch self-join over the grown corpus (any collision
+either has both rows resident, or its later row lives in a new segment).
+
 Emission reuses the fixed-capacity buffer discipline of ``core/join.py``
 (rows past the count are -1; ``overflowed`` means rows were truncated), and
 :func:`lsh_self_join` wraps it in the same grow-and-retry loop as the
@@ -39,8 +55,9 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.hamming import hamming_distance
 from ..core.join import compact_pairs, dedup_pairs
+from ..index.partition import BucketPartition, pad_slabs_pow2
 from ..index.store import SignatureIndex
-from ..util import shard_map_compat
+from ..util import next_pow2, shard_map_compat
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
@@ -85,6 +102,58 @@ def _emit_slab_pairs(offs_s, ids_s, *, cap: int):
         lambda o, i: _emit_bucket_pairs(o, i, cap=cap))(offs_s, ids_s)
 
 
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _emit_cross_pairs(dkeys, doffs, dids, rkeys, roffs, rids, *, cap: int):
+    """Cross pairs between one band's *delta* buckets and the matching
+    *resident* buckets (the delta-join primitive).
+
+    Each delta bucket entry pairs with every member of the resident bucket
+    sharing its key, so entry p owns c[p] = |resident bucket| pairs; the
+    same cumsum slot mapping as ``_emit_bucket_pairs`` turns that into a
+    fixed (cap, 2) buffer, -1 past the true count. Stacked-slab padding is
+    inert on both sides: padded delta entry slots sit past ``doffs[-1]``
+    (own zero pairs), padded resident keys repeat the last key with empty
+    offsets (match nothing). The caller sizes cap >= the true demand,
+    computed host-side in int64 — emission can never truncate.
+    """
+    Ud, Ed = dkeys.shape[0], dids.shape[0]
+    Ur, Er = rkeys.shape[0], rids.shape[0]
+    pos = jnp.arange(Ed, dtype=jnp.int32)
+    u = jnp.searchsorted(doffs, pos, side="right").astype(jnp.int32) - 1
+    u = jnp.clip(u, 0, max(Ud - 1, 0))
+    key = dkeys[u]
+    rpos = jnp.searchsorted(rkeys, key).astype(jnp.int32)
+    rpos_c = jnp.clip(rpos, 0, max(Ur - 1, 0))
+    match = (rpos < Ur) & (rkeys[rpos_c] == key)
+    rstart = roffs[rpos_c]
+    rend = jnp.where(match, roffs[jnp.clip(rpos_c + 1, 0, Ur)], rstart)
+    real = pos < doffs[-1]              # past-the-end delta slots own nothing
+    cnt = jnp.where(real & match, rend - rstart, 0)
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(cnt)])
+    total = cum[-1]
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    p = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32) - 1
+    p = jnp.clip(p, 0, max(Ed - 1, 0))
+    partner = rids[jnp.clip(rstart[p] + (slots - cum[p]), 0,
+                            max(Er - 1, 0))]
+    a = dids[p]
+    valid = slots < total
+    lo = jnp.minimum(a, partner)
+    hi = jnp.maximum(a, partner)
+    return jnp.stack([jnp.where(valid, lo, -1),
+                      jnp.where(valid, hi, -1)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _emit_cross_slab(dkeys_s, doffs_s, dids_s, rkeys_s, roffs_s, rids_s,
+                     *, cap: int):
+    """Band-stacked cross emission: (nb, ...) delta + resident slabs ->
+    (nb, cap, 2) int32."""
+    return jax.vmap(lambda a, b, c, d, e, f: _emit_cross_pairs(
+        a, b, c, d, e, f, cap=cap))(dkeys_s, doffs_s, dids_s,
+                                    rkeys_s, roffs_s, rids_s)
+
+
 @functools.lru_cache(maxsize=16)
 def _default_mesh(n: int, axis_name: str):
     """One mesh per shard count (a fresh Mesh per call would defeat the
@@ -93,10 +162,14 @@ def _default_mesh(n: int, axis_name: str):
 
 
 @functools.lru_cache(maxsize=64)
-def _emit_sharded_fn(mesh, axis_name: str, cap: int):
-    """Cached jitted shard_map emission program (keyed by mesh + capacity —
-    Mesh hashes by device set, so repeated self-joins reuse the program)."""
+def _emit_sharded_cached(devices: tuple, axis_name: str, cap: int):
+    """The jitted shard_map emission program, cached by the DEVICE TUPLE —
+    never by a Mesh object. Device objects are per-process singletons, so
+    two freshly constructed (equal) meshes resolve to the same program;
+    keying by Mesh relied on Mesh equality semantics and a fresh Mesh per
+    call could silently recompile (the PR 5 regression test pins this)."""
     ax = axis_name
+    mesh = Mesh(np.array(devices), (ax,))
 
     def shard_fn(offs, ids):
         return _emit_slab_pairs(offs[0], ids[0], cap=cap)
@@ -105,27 +178,70 @@ def _emit_sharded_fn(mesh, axis_name: str, cap: int):
         shard_fn, mesh, in_specs=(P(ax), P(ax)), out_specs=P(ax)))
 
 
-def _emit_partition(part, cap: int, mesh, axis_name: str):
-    """Emit every shard's within-bucket pairs over the partition slabs.
+def _emit_sharded_fn(mesh, axis_name: str, cap: int):
+    """Resolve a mesh to the cached SPMD emission program (identity-stable
+    across equal meshes — see :func:`_emit_sharded_cached`)."""
+    return _emit_sharded_cached(tuple(mesh.devices.flat), axis_name, cap)
 
-    Returns (S*nb, cap, 2) candidate buffers. With a mesh of
-    ``part.n_shards`` devices each shard emits on its own device
-    (``shard_map``); otherwise the same program runs as a vmap over the
-    shard axis — identical math, one device.
+
+def _shard_caps(part: BucketPartition) -> np.ndarray:
+    """(S,) int64 emission capacity per shard: its own max per-(shard,
+    band) within-bucket pair total, quantized to the next power of two
+    (bounds both recompiles and worst-case over-allocation at 2x true
+    demand). Skew-bounding: a degenerate bucket inflates only its owning
+    shard's cap."""
+    if part.pair_totals.size == 0:
+        return np.zeros(part.n_shards, np.int64)
+    per_shard = part.pair_totals.max(axis=1)
+    return np.array([next_pow2(int(c)) for c in per_shard], np.int64)
+
+
+def _emit_partition(part: BucketPartition, caps: np.ndarray, mesh,
+                    axis_name: str) -> np.ndarray:
+    """Emit every shard's within-bucket pairs over the partition slabs;
+    returns the merged (M, 2) candidate rows (-1 rows allowed — the
+    downstream dedup drops them).
+
+    Uniform demand (all nonzero shard caps equal): ONE program — the
+    ``shard_map`` SPMD emission on a mesh of ``part.n_shards`` devices, or
+    a vmap over the shard axis on one device. Skewed demand: per-shard
+    emission at each shard's own cap (placed on its owning mesh device
+    when a mesh is given) with a ragged host merge, so buffer memory
+    follows per-shard demand instead of the global max.
     """
-    if mesh is not None:
-        # host -> owning devices directly (NamedSharding split on the shard
-        # axis): device 0 never concentrates the stack, and the emission
-        # program's in_specs see their expected layout without resharding
-        sharding = NamedSharding(mesh, P(axis_name))
-        _, offs_np, ids_np = part.host_slabs()
-        offs_s = jax.device_put(offs_np, sharding)
-        ids_s = jax.device_put(ids_np, sharding)
-        return _emit_sharded_fn(mesh, axis_name, cap)(offs_s, ids_s)
-    _, offs_s, ids_s = part.device_slabs()
-    out = jax.vmap(
-        lambda o, i: _emit_slab_pairs(o, i, cap=cap))(offs_s, ids_s)
-    return out.reshape(-1, cap, 2)
+    live = caps[caps > 0]
+    uniform = live.size == 0 or int(live.min()) == int(live.max())
+    if uniform:
+        cap = int(caps.max())
+        if mesh is not None:
+            # host -> owning devices directly (NamedSharding split on the
+            # shard axis): device 0 never concentrates the stack, and the
+            # emission program's in_specs see their layout w/o resharding
+            sharding = NamedSharding(mesh, P(axis_name))
+            _, offs_np, ids_np = part.host_slabs()
+            offs_s = jax.device_put(offs_np, sharding)
+            ids_s = jax.device_put(ids_np, sharding)
+            out = _emit_sharded_fn(mesh, axis_name, cap)(offs_s, ids_s)
+            return np.asarray(out).reshape(-1, 2)
+        _, offs_s, ids_s = part.device_slabs()
+        out = jax.vmap(
+            lambda o, i: _emit_slab_pairs(o, i, cap=cap))(offs_s, ids_s)
+        return np.asarray(out).reshape(-1, 2)
+    _, offs_np, ids_np = part.host_slabs()
+    devices = list(mesh.devices.flat) if mesh is not None else None
+    bufs = []
+    for s in range(part.n_shards):
+        if caps[s] == 0:
+            continue                    # this shard's buckets are singletons
+        offs, ids = offs_np[s], ids_np[s]
+        if devices is not None:         # emit on the shard's own device
+            offs = jax.device_put(offs, devices[s])
+            ids = jax.device_put(ids, devices[s])
+        bufs.append(_emit_slab_pairs(offs, ids, cap=int(caps[s])))
+    # ragged host merge: per-shard buffers differ in cap, so the merge is
+    # a host concat (the cross-shard dedup downstream lexsorts anyway)
+    return np.concatenate([np.asarray(b).reshape(-1, 2) for b in bufs],
+                          axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("max_pairs", "d"))
@@ -164,6 +280,29 @@ def _pairs_to_csr(pairs: np.ndarray, n: int) -> SelfJoinResult:
                           n_candidates=len(pairs))
 
 
+def _grow_overflow(scope: str, max_grow: int):
+    raise RuntimeError(
+        f"{scope} exceeded max_grow={max_grow} pairs; the corpus "
+        f"has a degenerate bucket (see repro.index.stats) — raise "
+        f"max_grow or increase bands/d selectivity")
+
+
+def _dedup_and_pack(cand: np.ndarray, index: SignatureIndex,
+                    d: int | None, cap: int, max_grow: int,
+                    scope: str) -> SelfJoinResult:
+    """Shared tail of both joins: cross-band/-shard dedup + optional exact
+    Hamming filter under the grow-and-retry capacity discipline."""
+    while True:
+        pairs, count = _dedup_filter(cand, index.device_sigs,
+                                     max_pairs=cap, d=d)
+        if int(count) <= cap:
+            p = np.asarray(pairs[:int(count)])
+            return _pairs_to_csr(p, index.size)
+        if cap >= max_grow:         # dedup union overran the buffer
+            _grow_overflow(scope, max_grow)
+        cap = min(cap * 2, max_grow)    # grow-and-retry
+
+
 def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
                   max_pairs: int = 1 << 16,
                   max_grow: int = 1 << 24,
@@ -180,27 +319,24 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
     device in parallel; the pair set (and the result arrays) are
     bit-identical for every ``n_shards``.
 
-    Capacity discipline: per-(shard, band) emission capacity is sized
-    EXACTLY from host-side int64 bucket totals (the device-side int32 count
-    would wrap for a degenerate ~66k-member bucket and truncate silently);
-    the deduplicated cross-band union still grow-and-retries. Either demand
-    beyond ``max_grow`` raises — never a silent cap.
+    Capacity discipline: per-shard emission capacity is sized from host-side
+    int64 bucket totals (the device-side int32 count would wrap for a
+    degenerate ~66k-member bucket and truncate silently), each shard at its
+    OWN demand (:func:`_shard_caps` — skew-bounded); the deduplicated
+    cross-band union still grow-and-retries. Either demand beyond
+    ``max_grow`` raises — never a silent cap.
     """
     n = int(n_shards) if n_shards is not None else index.n_shards
     part = index.partition(n)
-    # exact per-(shard, band) pair totals in int64
+    # the overflow check judges TRUE demand (the quantized caps below only
+    # size buffers — quantization must never turn a legal corpus into an
+    # error for non-pow2 max_grow values)
     need = int(part.pair_totals.max()) if part.pair_totals.size else 0
-
-    def _raise():
-        raise RuntimeError(
-            f"self-join exceeded max_grow={max_grow} pairs; the corpus "
-            f"has a degenerate bucket (see repro.index.stats) — raise "
-            f"max_grow or increase bands/d selectivity")
-
     if need > max_grow:
-        _raise()
+        _grow_overflow("self-join", max_grow)
     if need == 0:       # every bucket is a singleton: no collisions at all
         return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
+    caps = _shard_caps(part)
     if n > 1 and mesh is None and jax.device_count() >= n:
         mesh = _default_mesh(n, axis_name)
     if mesh is not None and (axis_name not in mesh.axis_names
@@ -212,20 +348,115 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
             f"axis {axis_name!r} (one per partition shard)")
     if n == 1:
         mesh = None     # a 1-ring shard_map would only add dispatch cost
-    # Emission runs ONCE at the exact per-(shard, band) capacity (it can
-    # never truncate); only the deduplicated cross-shard union below grows,
-    # so a retry re-runs just the dedup/compact step, never the emission.
-    cand = _emit_partition(part, need, mesh, axis_name).reshape(-1, 2)
-    cap = max(max_pairs, need)
-    while True:
-        pairs, count = _dedup_filter(cand, index.device_sigs,
-                                     max_pairs=cap, d=d)
-        if int(count) <= cap:
-            p = np.asarray(pairs[:int(count)])
-            return _pairs_to_csr(p, index.size)
-        if cap >= max_grow:         # dedup union overran the buffer
-            _raise()
-        cap = min(cap * 2, max_grow)    # grow-and-retry
+    # Emission runs ONCE at per-shard exact-or-2x capacity (it can never
+    # truncate); only the deduplicated cross-shard union below grows, so a
+    # retry re-runs just the dedup/compact step, never the emission.
+    cand = _emit_partition(part, caps, mesh, axis_name)
+    cap = max(max_pairs, int(caps.max()))
+    return _dedup_and_pack(cand, index, d, cap, max_grow, "self-join")
+
+
+def _segment_stack(seg):
+    """One sealed segment's delta-join arrays, CACHED ON THE SEGMENT
+    (sealed = immutable, so they are built once per segment lifetime, not
+    once per ingest — resident segments stay cheap across ``--incremental``
+    rounds): the 1-way :class:`BucketPartition` (band-stacked slabs + exact
+    per-band pair totals, the single stacking code path) and its
+    pow2-quantized host slabs (:func:`~repro.index.partition.pad_slabs_pow2`
+    — shapes repeat across ingests, keeping the jitted emission programs
+    cache-hot)."""
+    cached = getattr(seg, "_join_stack", None)
+    if cached is None:
+        part = BucketPartition(seg.csr, 1)
+        keys_s, offs_s, ids_s = (np.asarray(a) for a in part.host_slabs())
+        slabs = pad_slabs_pow2(keys_s[0], offs_s[0], ids_s[0])
+        cached = (part, slabs)
+        seg._join_stack = cached
+    return cached
+
+
+def _cross_totals(dseg, rseg) -> np.ndarray:
+    """Exact int64 cross-pair totals per band between a delta segment's
+    buckets and a resident segment's matching buckets (host-side — the
+    capacity sizing must never wrap)."""
+    out = np.zeros(len(dseg.csr), np.int64)
+    for b, ((dk, do, _), (rk, ro, _)) in enumerate(zip(dseg.csr, rseg.csr)):
+        if len(dk) == 0 or len(rk) == 0:
+            continue
+        dn = np.diff(do).astype(np.int64)
+        pos = np.searchsorted(rk, dk)
+        pos_c = np.clip(pos, 0, len(rk) - 1)
+        match = (pos < len(rk)) & (rk[pos_c] == dk)
+        rn = np.where(match,
+                      (np.asarray(ro)[pos_c + 1] - np.asarray(ro)[pos_c]
+                       ).astype(np.int64), 0)
+        out[b] = int((dn * rn).sum())
+    return out
+
+
+def lsh_delta_join(index: SignatureIndex, *, base_size: int,
+                   d: int | None = None,
+                   max_pairs: int = 1 << 16,
+                   max_grow: int = 1 << 24) -> SelfJoinResult:
+    """Incremental self-join: only the pairs touching rows >= ``base_size``.
+
+    ``base_size`` must be a segment boundary (the corpus size before the
+    ``add()`` calls being ingested). For each new segment the join emits
+    its within-bucket pairs plus its cross pairs against the matching
+    buckets of every earlier segment — resident-vs-resident pairs are
+    never re-enumerated, so ingest cost scales with the delta's bucket
+    footprint, not the corpus. The result unions with the pre-ingest pair
+    set to EXACTLY the from-scratch :func:`lsh_self_join` over the grown
+    corpus (same dedup, same optional Hamming filter, same sort order);
+    tests/test_lifecycle.py asserts the equality.
+    """
+    index.seal()
+    segs = index.segments
+    boundaries = [s.base for s in segs] + [index.size]
+    if base_size not in boundaries:
+        raise ValueError(
+            f"base_size {base_size} is not a segment boundary "
+            f"{boundaries}; delta joins ingest whole segments")
+    if base_size == index.size:     # nothing new
+        return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
+    k = boundaries.index(base_size)
+
+    def part(i) -> BucketPartition:
+        return _segment_stack(segs[i])[0]
+
+    def slabs(i):
+        # pow2-quantized shapes + pow2 caps keep the jitted emission
+        # programs cache-hot across successive ingests (exact shapes/caps
+        # would retrace per segment — the recompile trap this PR fixes
+        # everywhere else)
+        return _segment_stack(segs[i])[1]
+
+    bufs = []
+    for s in range(k, len(segs)):
+        need_w = int(part(s).pair_totals[0].max(initial=0))
+        if need_w > max_grow:
+            _grow_overflow("delta join", max_grow)
+        if need_w > 0:
+            _, doffs, dids = slabs(s)
+            bufs.append(_emit_slab_pairs(doffs, dids,
+                                         cap=next_pow2(need_w)))
+        for r in range(s):          # every earlier segment is resident
+            totals = _cross_totals(segs[s], segs[r])
+            need_c = int(totals.max(initial=0))
+            if need_c > max_grow:
+                _grow_overflow("delta join", max_grow)
+            if need_c == 0:
+                continue
+            dk, do, di = slabs(s)
+            rk, ro, ri = slabs(r)
+            bufs.append(_emit_cross_slab(dk, do, di, rk, ro, ri,
+                                         cap=next_pow2(need_c)))
+    if not bufs:
+        return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
+    # ragged host merge (buffers differ in cap); dedup lexsorts downstream
+    cand = np.concatenate([np.asarray(b).reshape(-1, 2) for b in bufs],
+                          axis=0)
+    return _dedup_and_pack(cand, index, d, max_pairs, max_grow, "delta join")
 
 
 def brute_force_collisions(index: SignatureIndex) -> set[tuple[int, int]]:

@@ -4,9 +4,13 @@ The paper's economic insight (§5.3) is that reference-database signature
 generation is paid once and amortized across query sets. This subsystem makes
 that a first-class artifact:
 
-* ``store``     — :class:`SignatureIndex`: immutable packed signatures +
-  per-band sorted bucket keys with CSR offsets, npz persistence keyed by a
-  config fingerprint, incremental ``add()`` with deferred re-sort.
+* ``store``     — :class:`SignatureIndex`: packed signatures + per-band
+  sorted bucket keys with CSR offsets, persistence keyed by a config
+  fingerprint (segment directory or legacy monolithic npz), append-only
+  ``add()`` and an explicit ``compact()``.
+* ``segments``  — :class:`Segment`: the unit of incremental growth
+  (sealed per-ingest CSR over global ids), stable linear merge into the
+  full bucket table, manifest + per-segment persistence (O(delta) saves).
 * ``partition`` — :class:`BucketPartition`: shard-owned stacked CSR slabs,
   buckets routed by ``mix32(band_key) % n_shards`` (the MapReduce shuffle
   as a data layout) — the one distribution primitive under the
@@ -23,6 +27,7 @@ that a first-class artifact:
   histograms, hash-scheme comparison).
 """
 from .store import IndexConfigMismatch, SignatureIndex, config_fingerprint
+from .segments import Segment, merge_band_csrs
 from .partition import BucketPartition, bucket_owners
 from .shard import ShardedIndex
 from .service import QueryEngine, ServingConfig, topk_dense, topk_probe
@@ -30,6 +35,7 @@ from .stats import BandStats, band_stats, compare_schemes, occupancy_report
 
 __all__ = [
     "SignatureIndex", "IndexConfigMismatch", "config_fingerprint",
+    "Segment", "merge_band_csrs",
     "BucketPartition", "bucket_owners",
     "ShardedIndex",
     "QueryEngine", "ServingConfig", "topk_dense", "topk_probe",

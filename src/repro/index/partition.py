@@ -35,6 +35,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.join import mix32
+from ..util import next_pow2
+
+
+def pad_slabs_pow2(keys, offs, ids, esig=None):
+    """Pad stacked CSR slabs' bucket (U) and entry (E) axes to powers of
+    two — the ONE copy of the quantization discipline shared by the
+    serving delta slabs (:meth:`ShardedIndex._put`) and the delta-join
+    emission (:func:`repro.allpairs.selfjoin.lsh_delta_join`), so
+    successive ingests repeat program shapes and stay jit-cache-hot.
+
+    Operates on the trailing axes (works for (nb, U) and (S, nb, U)
+    stacks alike) and follows the probe's inertness rules: keys repeat the
+    last key (sorted; can only match empty buckets), offsets repeat the
+    end (padded slots own zero entries/pairs), ids — and entry-signature
+    rows when given — pad zeros (masked before anything survives).
+    """
+    U, E = keys.shape[-1], ids.shape[-1]
+    Uq, Eq = next_pow2(max(U, 1)), next_pow2(max(E, 1))
+    if Uq > U:
+        keys = np.concatenate(
+            [keys, np.repeat(keys[..., -1:], Uq - U, axis=-1)], axis=-1)
+        offs = np.concatenate(
+            [offs, np.repeat(offs[..., -1:], Uq - U, axis=-1)], axis=-1)
+    if Eq > E:
+        ids = np.concatenate(
+            [ids, np.zeros(ids.shape[:-1] + (Eq - E,), ids.dtype)],
+            axis=-1)
+        if esig is not None:
+            pad = np.zeros(esig.shape[:-2] + (Eq - E, esig.shape[-1]),
+                           esig.dtype)
+            esig = np.concatenate([esig, pad], axis=-2)
+    return (keys, offs, ids) if esig is None else (keys, offs, ids, esig)
 
 
 def bucket_owners(keys, n_shards: int) -> np.ndarray:

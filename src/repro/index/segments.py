@@ -1,0 +1,282 @@
+"""Append-only index segments — the unit of incremental growth.
+
+The paper's premise is that the corpus grows faster than compute, yet a
+batch-built index answers ``add()`` by re-sorting the world. This module
+makes growth first-class: every ingest seals a **segment** — its own
+packed signature rows plus its own per-band CSR buckets over *global*
+ids — and every other layer consumes segments:
+
+* the merged bucket table of the whole index is a **stable linear merge**
+  of the segment CSRs (:func:`merge_band_csrs`), bit-exact with a
+  from-scratch build (both orders group equal keys by ascending id);
+* the serving partition ingests a *delta* partition of just the new
+  segments (``repro.index.shard.ShardedIndex.refresh``) — owners never
+  change (``mix32(key) % n_shards`` is id-free), so a new segment only
+  grows the owning shards' slabs;
+* the all-pairs self-join emits only new-vs-resident pairs from the
+  touched buckets (``repro.allpairs.selfjoin.lsh_delta_join``).
+
+Persistence is a **manifest + per-segment files** (the map-side
+incremental shuffle made durable): ``save_segmented`` appends only the
+segment files that are not on disk yet, so persisting an ingest is
+O(delta); an explicit compaction (``SignatureIndex.compact``) merges the
+segments back into one (the reduce step). The monolithic ``.npz`` of
+PR 1–4 keeps loading through the same entry point as a single sealed
+segment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Segment:
+    """One sealed, immutable slice of the index.
+
+    ``base`` is the global id of row 0; ``csr`` holds one
+    ``(keys, offsets, ids)`` sorted bucket table per band with **global**
+    ids, so segments concatenate without any id arithmetic downstream.
+    """
+    base: int
+    sigs: np.ndarray                    # (n, f//32) uint32
+    valid: np.ndarray                   # (n,) bool
+    csr: list                           # per band: (keys, offsets, ids)
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.sigs.shape[0])
+
+    @property
+    def n_entries(self) -> int:
+        return sum(len(ids) for _, _, ids in self.csr)
+
+
+def sort_bucket(keys: np.ndarray, ids: np.ndarray):
+    """Group (key, id) entries into CSR: (unique keys, offsets, sorted ids).
+
+    The stable sort is the bit-exactness anchor of the whole lifecycle:
+    ids enter in ascending order, so every bucket's members come out in
+    ascending id order — which is also what a stable merge of per-segment
+    buckets (ascending, disjoint id ranges) produces.
+    """
+    order = np.argsort(keys, kind="stable")
+    ks, sids = keys[order], ids[order]
+    uk, first = np.unique(ks, return_index=True)
+    offsets = np.concatenate([first, [len(ks)]]).astype(np.int32)
+    return uk.astype(np.uint32), offsets, sids.astype(np.int32)
+
+
+def _empty_csr():
+    return sort_bucket(np.zeros(0, np.uint32), np.zeros(0, np.int32))
+
+
+def build_segment(sigs, valid, base: int, *, layout: str, f: int, d: int,
+                  bands: int, interleave: bool, key_hash: str) -> Segment:
+    """Seal a segment: bucket its rows under the index's banding config.
+
+    Only the NEW rows pay signature->key work — resident segments are
+    never touched (the append-only contract).
+    """
+    from ..core.join import band_keys, flip_masks
+
+    sigs = np.ascontiguousarray(np.asarray(sigs, np.uint32))
+    valid = np.asarray(valid, bool).reshape(-1)
+    local_ids = np.nonzero(valid)[0].astype(np.int64)
+    gids = (local_ids + base).astype(np.int32)
+    if layout == "flip":
+        if len(gids) == 0:
+            return Segment(base, sigs, valid, [_empty_csr()])
+        masks = flip_masks(f, d)[:, 0]                      # (M,) uint32
+        keys = (sigs[local_ids, 0][:, None] ^ masks[None, :]).ravel()
+        ids = np.repeat(gids, masks.shape[0])
+        return Segment(base, sigs, valid, [sort_bucket(keys, ids)])
+    if len(gids) == 0:
+        return Segment(base, sigs, valid,
+                       [_empty_csr() for _ in range(bands)])
+    kb = np.asarray(band_keys(jnp.asarray(sigs[local_ids]), f, bands,
+                              interleave=interleave,
+                              key_hash=key_hash))           # (V, bands)
+    return Segment(base, sigs, valid,
+                   [sort_bucket(kb[:, b], gids) for b in range(bands)])
+
+
+def merge_band_csrs(csr_lists: list[list]) -> list:
+    """Merge per-segment per-band CSRs into one bucket table per band.
+
+    Segments arrive in base order with disjoint ascending id ranges, and
+    each segment's buckets hold ascending ids, so the stable sort groups
+    equal keys with ids ascending — exactly the table a from-scratch
+    build over the concatenated corpus produces (bit-exact, including
+    bucket member order). Linear in total entries up to the sort; no
+    signature or band-key recompute ever happens here.
+    """
+    if len(csr_lists) == 1:
+        return csr_lists[0]
+    n_bands = len(csr_lists[0])
+    out = []
+    for b in range(n_bands):
+        keys = np.concatenate(
+            [np.repeat(c[b][0], np.diff(c[b][1])) for c in csr_lists])
+        ids = np.concatenate([c[b][2] for c in csr_lists])
+        out.append(sort_bucket(keys, ids))
+    return out
+
+
+# ---------------------------------------------------------------- manifest IO
+MANIFEST_VERSION = 1
+MANIFEST_NAME = "manifest.json"
+
+
+def _segment_filename(gen: int, i: int) -> str:
+    return f"seg-g{gen:03d}-{i:05d}.npz"
+
+
+def manifest_path(path) -> str:
+    p = str(path)
+    return p if p.endswith(MANIFEST_NAME) else os.path.join(p, MANIFEST_NAME)
+
+
+def is_segmented(path) -> bool:
+    """True when ``path`` names a segment directory / manifest (the
+    monolithic legacy ``.npz`` loads through the other branch)."""
+    p = str(path)
+    return (p.endswith(MANIFEST_NAME) or os.path.isdir(p)
+            or not p.endswith(".npz"))
+
+
+def segment_checksum(seg: Segment) -> str:
+    """Content hash of a segment (signatures + validity + every band's
+    CSR). Shape metadata alone cannot distinguish two same-config indexes
+    over different same-sized corpora — the checksum is what lets the
+    append-only save prove the on-disk prefix really IS this index's
+    prefix, and the loader prove the files were not swapped/corrupted."""
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(seg.sigs).tobytes())
+    h.update(np.ascontiguousarray(seg.valid).tobytes())
+    for keys, offsets, ids in seg.csr:
+        h.update(np.ascontiguousarray(keys).tobytes())
+        h.update(np.ascontiguousarray(offsets).tobytes())
+        h.update(np.ascontiguousarray(ids).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _segment_entry(gen: int, i: int, seg: Segment) -> dict:
+    return {"file": _segment_filename(gen, i), "base": int(seg.base),
+            "n_rows": seg.n_rows, "n_entries": seg.n_entries,
+            "sha": segment_checksum(seg)}
+
+
+def save_segmented(path, meta: dict, segments: list[Segment],
+                   n_bands: int) -> int:
+    """Write manifest + per-segment npz files; returns how many segment
+    files were (re)written.
+
+    Append-only: when the directory already holds a manifest with the
+    same fingerprint whose segment list is a prefix of ours, only the NEW
+    segments hit disk — persisting an ingest costs O(delta), never
+    O(corpus). Any mismatch (different fingerprint, diverged prefix, or
+    a compaction that shrank the list) rewrites everything under a NEW
+    write generation (filenames are generation-prefixed, so rewrites
+    never touch the files the current manifest points at — a crash
+    mid-rewrite leaves the old manifest + old files fully loadable) and
+    drops the stale generation's files only after the new manifest has
+    landed atomically.
+    """
+    mpath = manifest_path(path)
+    root = os.path.dirname(mpath)
+    os.makedirs(root, exist_ok=True)
+    start = 0
+    gen = 0
+    old_files = []
+    old = None
+    if os.path.exists(mpath):
+        try:
+            with open(mpath) as fh:
+                old = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            old = None
+    if old is not None:
+        old_entries = old.get("segments", [])
+        old_files = [e["file"] for e in old_entries]
+        gen = int(old.get("write_gen", 0))
+        entries = [_segment_entry(gen, i, s)
+                   for i, s in enumerate(segments)]
+        same_cfg = old.get("fingerprint") == meta["fingerprint"]
+        prefix = (len(old_entries) <= len(entries)
+                  and all(o == n for o, n in zip(old_entries, entries)))
+        if same_cfg and prefix:
+            start = len(old_entries)    # append within the old generation
+        else:
+            gen += 1                    # full rewrite: fresh filenames
+    entries = [_segment_entry(gen, i, s) for i, s in enumerate(segments)]
+    written = 0
+    for i in range(start, len(entries)):
+        seg = segments[i]
+        payload = {"sigs": seg.sigs, "valid": seg.valid,
+                   "base": np.int64(seg.base)}
+        for b in range(n_bands):
+            keys, offsets, ids = seg.csr[b]
+            payload[f"band{b}_keys"] = keys
+            payload[f"band{b}_offsets"] = offsets
+            payload[f"band{b}_ids"] = ids
+        np.savez_compressed(os.path.join(root, entries[i]["file"]), **payload)
+        written += 1
+    manifest = dict(meta)
+    manifest["manifest_version"] = MANIFEST_VERSION
+    manifest["write_gen"] = gen
+    manifest["segments"] = entries
+    tmp = mpath + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(manifest, fh, sort_keys=True, indent=1)
+    os.replace(tmp, mpath)              # manifest lands atomically, last
+    keep = {e["file"] for e in entries}
+    for f in old_files:                 # a rewrite dropped the old gen
+        if f not in keep and os.path.exists(os.path.join(root, f)):
+            os.unlink(os.path.join(root, f))
+    return written
+
+
+def load_segmented(path) -> tuple[dict, list[Segment]]:
+    """Read manifest + every segment file; returns (meta, segments)."""
+    mpath = manifest_path(path)
+    root = os.path.dirname(mpath)
+    with open(mpath) as fh:
+        manifest = json.load(fh)
+    if manifest.get("manifest_version") != MANIFEST_VERSION:
+        raise ValueError(
+            f"manifest version {manifest.get('manifest_version')} != "
+            f"{MANIFEST_VERSION}")
+    n_bands = 1 if manifest["layout"] == "flip" else int(manifest["bands"])
+    segments = []
+    total = 0
+    for e in manifest["segments"]:
+        with np.load(os.path.join(root, e["file"])) as z:
+            csr = [(z[f"band{b}_keys"], z[f"band{b}_offsets"],
+                    z[f"band{b}_ids"]) for b in range(n_bands)]
+            seg = Segment(int(z["base"]), z["sigs"],
+                          np.asarray(z["valid"], bool), csr)
+        if seg.n_rows != e["n_rows"]:
+            raise ValueError(f"segment {e['file']} holds {seg.n_rows} rows, "
+                             f"manifest says {e['n_rows']}")
+        if "sha" in e and segment_checksum(seg) != e["sha"]:
+            raise ValueError(
+                f"segment {e['file']} content hash does not match the "
+                f"manifest — swapped or corrupt segment file")
+        if seg.base != total or int(e["base"]) != total:
+            # segments concatenate in manifest order and their CSR ids
+            # embed the stored base — any disagreement (reordered entries,
+            # corrupt base) would silently map global ids to the WRONG
+            # signature rows, so fail loudly instead
+            raise ValueError(
+                f"segment {e['file']} claims base {seg.base} "
+                f"(manifest {e['base']}) but {total} rows precede it — "
+                f"manifest reordered or corrupt")
+        total += seg.n_rows
+        segments.append(seg)
+    return manifest, segments

@@ -421,12 +421,16 @@ class QueryEngine:
 
     # ------------------------------------------------------------ stats
     def stats(self) -> dict:
-        """Latency/throughput summary over every batch served so far."""
+        """Latency/throughput summary over every batch served so far.
+        ``index_epoch`` is the backing index's segment counter — it moves
+        when the engine serves across a live refresh (``index.add`` landed
+        between batches) without the engine being rebuilt."""
         lat = np.asarray(self._stats.latencies)
         nq = int(np.sum(self._stats.batch_sizes))
         if len(lat) == 0:
             return dict(n_queries=0, n_batches=0, qps=0.0,
-                        p50_ms=0.0, p95_ms=0.0, mean_ms=0.0)
+                        p50_ms=0.0, p95_ms=0.0, mean_ms=0.0,
+                        index_epoch=self.index.epoch)
         return dict(
             n_queries=nq,
             n_batches=len(lat),
@@ -434,4 +438,5 @@ class QueryEngine:
             p50_ms=float(np.percentile(lat, 50) * 1e3),
             p95_ms=float(np.percentile(lat, 95) * 1e3),
             mean_ms=float(lat.mean() * 1e3),
+            index_epoch=self.index.epoch,
         )

@@ -16,6 +16,18 @@ bucket owner and carries its global top-k home — no dense sweep, no
 global-id arithmetic (buckets store global ids directly), and per-hop
 communication is just the rotating query block + its k-row accumulator.
 
+Growth is a **delta refresh**, not a re-place: references appended with
+``index.add()`` arrive as sealed segments, and because
+``mix32(key) % n_shards`` never changes a bucket's owner, :meth:`refresh`
+partitions just the new segments and uploads them as a second, small
+*delta slab* per shard. Each ring hop probes base + delta and sums the
+matched-bucket sizes, so the grow-and-retry overflow contract sees the
+same true bucket sizes as a merged table — results are **bit-exact with a
+compacted rebuild** (asserted in tests/test_lifecycle.py). When the delta
+outgrows the base (or after ``index.compact()``), :meth:`compact`
+re-places everything into one base slab; probe results are identical
+before and after.
+
 Exactness: buckets are never split across shards, so the union of
 per-shard probes is exactly the single-device candidate set; the carried
 top-k merges under the total order (distance, id) via the shared
@@ -23,21 +35,23 @@ top-k merges under the total order (distance, id) via the shared
 :func:`repro.index.service.topk_probe` for every ``n_shards`` — including
 tie-breaks — and overflow detection (true matched-bucket size vs cap) is
 the max over all (shard, hop) probes, the same grow-and-retry contract.
-
-The placement tracks the backing :class:`SignatureIndex`: references
-appended with ``add()`` are re-partitioned automatically on the next
-``topk`` (same deferred-rebuild discipline as the CSR buckets).
+Both layouts partition identically — the flip layout's single expanded
+table is just ``n_bands == 1`` (tested under sharding in
+tests/test_sharding.py).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
+from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..core.hamming import hamming_distance
 from ..util import shard_map_compat
+from .partition import pad_slabs_pow2
 from .service import BIG, _dedup_candidates, _probe_csr_positions
 from .store import SignatureIndex
 
@@ -63,6 +77,82 @@ def _merge_topk(best_id, best_d, cand, dist, k: int):
     return nid, nd
 
 
+@functools.lru_cache(maxsize=128)
+def _ring_program(devices: tuple, axis_name: str, Bl: int, cap: int, k: int,
+                  has_delta: bool):
+    """The jitted shard_map ring program, cached at MODULE level by the
+    device tuple (never a Mesh object or a replica instance) — the same
+    keying lesson as the self-join's emission cache: equal meshes and
+    every replica over them share one compiled program, so constructing a
+    new ShardedIndex (or refreshing one) never silently recompiles a ring
+    it has already paid for. The ``has_delta`` variant probes the base and
+    delta slabs each hop and sums their matched-bucket sizes (the
+    merged-table overflow contract)."""
+    ax = axis_name
+    mesh = Mesh(np.array(devices), (ax,))
+    n = len(devices)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def probe_slab(qk_c, qs_c, keys_l, offs_l, ids_l, esig_l):
+        """All bands' probe + local-sig Hamming filter on one slab:
+        -> cand/dist (nb, Bl, cap), size (nb, Bl)."""
+        E = ids_l.shape[1]
+
+        def probe_band(qk_b, keys_b, offs_b, ids_b, esig_b):
+            idx, ok, size = _probe_csr_positions(qk_b, keys_b, offs_b,
+                                                 cap=cap, E=E)
+            cand = jnp.where(ok, ids_b[idx], -1)
+            dist = hamming_distance(qs_c[:, None, :], esig_b[idx])
+            return cand, jnp.where(ok, dist, BIG), size
+
+        return jax.vmap(probe_band, in_axes=(1, 0, 0, 0, 0))(
+            qk_c, keys_l, offs_l, ids_l, esig_l)
+
+    def shard_fn(qk, qs, *slabs):
+        # qk (Bl, nb), qs (Bl, nw) — this shard's starting query block;
+        # slabs arrive (1, nb, ...) after the P(ax) split: base
+        # (keys, offs, ids, esig) then, when present, the delta four
+        base = tuple(a[0] for a in slabs[:4])
+        delta = tuple(a[0] for a in slabs[4:8]) if has_delta else None
+
+        def hop(carry, _):
+            qk_c, qs_c, bid, bd, msz = carry
+            cand, dist, size = probe_slab(qk_c, qs_c, *base)
+            if delta is not None:
+                c2, d2, s2 = probe_slab(qk_c, qs_c, *delta)
+                # a bucket split across base+delta is ONE bucket of the
+                # merged table: candidates union, true size is the sum
+                cand = jnp.concatenate([cand, c2], axis=2)
+                dist = jnp.concatenate([dist, d2], axis=2)
+                size = size + s2
+            # (nb, Bl, C) -> (Bl, nb*C), the fused-probe layout
+            cand = jnp.transpose(cand, (1, 0, 2)).reshape(Bl, -1)
+            dist = jnp.transpose(dist, (1, 0, 2)).reshape(Bl, -1)
+            bid, bd = _merge_topk(bid, bd, cand, dist, k)
+            msz = jnp.maximum(msz, jnp.max(size))
+            # rotate the block and its accumulator one hop (ring_sweep
+            # discipline); after n hops it is home with its global top-k
+            qk_c = jax.lax.ppermute(qk_c, ax, perm)
+            qs_c = jax.lax.ppermute(qs_c, ax, perm)
+            bid = jax.lax.ppermute(bid, ax, perm)
+            bd = jax.lax.ppermute(bd, ax, perm)
+            return (qk_c, qs_c, bid, bd, msz), None
+
+        init = (qk, qs,
+                jnp.full((Bl, k), -1, jnp.int32),
+                jnp.full((Bl, k), BIG, jnp.int32),
+                jnp.zeros((), jnp.int32))
+        (_, _, bid, bd, msz), _ = jax.lax.scan(hop, init, None, length=n)
+        return bid, bd, msz[None]
+
+    n_args = 10 if has_delta else 6
+    return jax.jit(shard_map_compat(
+        shard_fn, mesh,
+        in_specs=tuple(P(ax) for _ in range(n_args)),
+        out_specs=(P(ax), P(ax), P(ax)),
+    ))
+
+
 class ShardedIndex:
     """A :class:`SignatureIndex` whose *buckets* are laid out over a mesh."""
 
@@ -78,92 +168,104 @@ class ShardedIndex:
                              f"{axis_name!r}")
         self.mesh = mesh
         self.n_shards = mesh.shape[axis_name]
-        self._snapshot_size = -1        # forces first placement
-        self._fn_cache = {}             # (Bl, cap, k) -> jitted ring program
         self._place()
 
-    def _place(self) -> None:
-        """(Re)partition the index's buckets across the mesh shards.
-
-        Slabs go straight from host to their owning devices with a
+    # ------------------------------------------------------------ placement
+    def _put(self, part, quantize: bool = False):
+        """Slabs go straight from host to their owning devices with a
         ``NamedSharding`` split on the shard axis — no single device ever
         materializes the full stack, and the jitted ring (whose in_specs
-        expect exactly this layout) never reshards on the serving path."""
-        index = self.index
-        part = index.partition(self.n_shards)
+        expect exactly this layout) never reshards on the serving path.
+
+        ``quantize`` pads the bucket (U) and entry (E) axes to powers of
+        two (:func:`repro.index.partition.pad_slabs_pow2` — the shared
+        inert-padding discipline) — used for DELTA slabs so successive
+        refreshes repeat slab shapes and the delta ring program stays
+        jit-cache-hot until the delta genuinely doubles."""
+        keys, offs, ids = part.host_slabs()
+        esig = part.host_entry_sigs()
+        if quantize:
+            keys, offs, ids, esig = pad_slabs_pow2(keys, offs, ids, esig)
         sharding = NamedSharding(self.mesh, P(self.axis_name))
-        self._slabs = tuple(jax.device_put(a, sharding)
-                            for a in part.host_slabs())
-        self._esigs = jax.device_put(part.host_entry_sigs(), sharding)
+        slabs = tuple(jax.device_put(a, sharding)
+                      for a in (keys, offs, ids))
+        esigs = jax.device_put(esig, sharding)
+        return slabs, esigs
+
+    def _place(self) -> None:
+        """Full (re)placement: every segment merged into the base slabs.
+        Paid at construction, after ``index.compact()``, and when the
+        delta outgrows the base — never on a routine refresh."""
+        index = self.index
+        index.seal()
+        part = index.partition(self.n_shards)
+        self._slabs, self._esigs = self._put(part)
         self._part = part
-        self._snapshot_size = index.size
-        self._fn_cache.clear()          # slab shapes may have changed
+        self._delta = None          # (slabs, esigs) of segments past base
+        self._delta_part = None
+        self._gen = index.generation
+        self._base_epoch = index.epoch
+        self._delta_epoch = index.epoch
+
+    def refresh(self) -> None:
+        """Ingest segment deltas without a full reload.
+
+        Bucket owners never change (``mix32(key) % n_shards`` is id-free),
+        so segments sealed since the base placement partition on their own
+        and ride along as per-shard delta slabs; upload cost is O(delta).
+        Falls back to a full re-place when the index was compacted
+        (generation bump), the base is empty, or the delta has outgrown
+        the base (at which point merging is cheaper than carrying both).
+        """
+        index = self.index
+        index.seal()
+        if index.generation != self._gen:
+            self._place()           # compaction collapsed our base segments
+            return
+        if index.epoch == self._delta_epoch:
+            return                  # nothing new
+        base_keys = self._slabs[0]
+        if base_keys.shape[2] == 0:     # empty base: just re-place
+            self._place()
+            return
+        dpart = self.index.delta_partition(self.n_shards, self._base_epoch)
+        if int(dpart.n_entries.sum()) >= int(self._part.n_entries.sum()):
+            self._place()           # delta outgrew base: compact placement
+            return
+        if int(dpart.n_buckets.sum()) == 0:    # only invalid rows arrived
+            self._delta_epoch = index.epoch
+            return
+        self._delta = None          # drop the old delta before realloc
+        delta_slabs, delta_esigs = self._put(dpart, quantize=True)
+        self._delta = (delta_slabs, delta_esigs)
+        self._delta_part = dpart
+        self._delta_epoch = index.epoch
+
+    def compact(self) -> None:
+        """Fold the delta slabs back into one base placement (serving-side
+        compaction; probe results are identical before and after)."""
+        self._place()
 
     def _refresh_if_stale(self) -> None:
-        if self.index._dirty or self.index.size != self._snapshot_size:
-            self._place()
+        if (self.index.generation, self.index.epoch) != \
+                (self._gen, self._delta_epoch):
+            self.refresh()
 
     @property
     def size(self) -> int:
         return self.index.size
 
-    def _ring_fn(self, Bl: int, cap: int, k: int):
-        """Jitted shard_map ring program for a (Bl per-shard) query block
-        shape (cached — serving hot path, no per-call re-trace)."""
-        key = (Bl, cap, k)
-        fn = self._fn_cache.get(key)
-        if fn is not None:
-            return fn
-        n, ax = self.n_shards, self.axis_name
-        perm = [(i, (i + 1) % n) for i in range(n)]
+    @property
+    def epoch(self) -> tuple[int, int]:
+        """(base_epoch, delta_epoch) segment counters this replica serves."""
+        return (self._base_epoch, self._delta_epoch)
 
-        def shard_fn(qk, qs, keys_s, offs_s, ids_s, esig_s):
-            # qk (Bl, nb), qs (Bl, nw) — this shard's starting query block;
-            # slabs arrive (1, nb, ...) after the P(ax) split
-            keys_l, offs_l = keys_s[0], offs_s[0]
-            ids_l, esig_l = ids_s[0], esig_s[0]
-            E = ids_l.shape[1]
-
-            def probe_band(qk_b, keys_b, offs_b, ids_b, esig_b, qs_c):
-                """One band's probe + local-sig Hamming filter."""
-                idx, ok, size = _probe_csr_positions(qk_b, keys_b, offs_b,
-                                                     cap=cap, E=E)
-                cand = jnp.where(ok, ids_b[idx], -1)
-                dist = hamming_distance(qs_c[:, None, :], esig_b[idx])
-                return cand, jnp.where(ok, dist, BIG), size
-
-            def hop(carry, _):
-                qk_c, qs_c, bid, bd, msz = carry
-                cand, dist, size = jax.vmap(
-                    probe_band, in_axes=(1, 0, 0, 0, 0, None))(
-                        qk_c, keys_l, offs_l, ids_l, esig_l, qs_c)
-                # (nb, Bl, cap) -> (Bl, nb*cap), the fused-probe layout
-                cand = jnp.transpose(cand, (1, 0, 2)).reshape(Bl, -1)
-                dist = jnp.transpose(dist, (1, 0, 2)).reshape(Bl, -1)
-                bid, bd = _merge_topk(bid, bd, cand, dist, k)
-                msz = jnp.maximum(msz, jnp.max(size))
-                # rotate the block and its accumulator one hop (ring_sweep
-                # discipline); after n hops it is home with its global top-k
-                qk_c = jax.lax.ppermute(qk_c, ax, perm)
-                qs_c = jax.lax.ppermute(qs_c, ax, perm)
-                bid = jax.lax.ppermute(bid, ax, perm)
-                bd = jax.lax.ppermute(bd, ax, perm)
-                return (qk_c, qs_c, bid, bd, msz), None
-
-            init = (qk, qs,
-                    jnp.full((Bl, k), -1, jnp.int32),
-                    jnp.full((Bl, k), BIG, jnp.int32),
-                    jnp.zeros((), jnp.int32))
-            (_, _, bid, bd, msz), _ = jax.lax.scan(hop, init, None, length=n)
-            return bid, bd, msz[None]
-
-        fn = jax.jit(shard_map_compat(
-            shard_fn, self.mesh,
-            in_specs=(P(ax), P(ax), P(ax), P(ax), P(ax), P(ax)),
-            out_specs=(P(ax), P(ax), P(ax)),
-        ))
-        self._fn_cache[key] = fn
-        return fn
+    # ------------------------------------------------------------ ring
+    def _ring_fn(self, Bl: int, cap: int, k: int, has_delta: bool):
+        """Resolve this replica's mesh to the module-cached ring program
+        (serving hot path, no per-call or per-replica re-trace)."""
+        return _ring_program(tuple(self.mesh.devices.flat), self.axis_name,
+                             Bl, cap, k, has_delta)
 
     def topk(self, q_sigs, *, k: int, cap: int = 32, max_cap: int = 1 << 14):
         """Global top-k via shard-local bucket probes.
@@ -171,14 +273,17 @@ class ShardedIndex:
         (B, nw) query signatures -> (ids (B, k), dists (B, k), final_cap,
         truncated), both -1-padded — bit-exact with
         :func:`~repro.index.service.topk_probe` (same candidates, same
-        tie-breaks, same grow-and-retry overflow contract).
+        tie-breaks, same grow-and-retry overflow contract), whether the
+        placement is one base slab or base + delta (live refresh).
         """
         self._refresh_if_stale()
         q = np.asarray(q_sigs, np.uint32)
         B = q.shape[0]
         n = self.n_shards
-        keys_s, _, _ = self._slabs
-        if B == 0 or keys_s.shape[2] == 0:  # no queries / no buckets at all
+        n_buckets = self._slabs[0].shape[2]
+        if self._delta is not None:
+            n_buckets += self._delta[0][0].shape[2]
+        if B == 0 or n_buckets == 0:    # no queries / no buckets at all
             return (np.full((B, k), -1, np.int32),
                     np.full((B, k), -1, np.int32), cap, False)
         qk = np.asarray(self.index.query_keys(q)).T     # (B, nb)
@@ -193,8 +298,11 @@ class ShardedIndex:
         qs_p = np.tile(q[:1], (Bl * n, 1))
         qs_p[:B] = q
         while True:
-            fn = self._ring_fn(Bl, cap, k)
-            bid, bd, msz = fn(qk_p, qs_p, *self._slabs, self._esigs)
+            fn = self._ring_fn(Bl, cap, k, self._delta is not None)
+            args = (qk_p, qs_p, *self._slabs, self._esigs)
+            if self._delta is not None:
+                args = args + (*self._delta[0], self._delta[1])
+            bid, bd, msz = fn(*args)
             truncated = int(np.max(np.asarray(msz))) > cap
             if not truncated or cap >= max_cap:
                 break

@@ -1,4 +1,4 @@
-"""Immutable signature index over a reference database (build once, query many).
+"""Signature index over a reference database — built once, grown forever.
 
 Structure (DESIGN.md §2 "HDFS -> on-device buffers + manifests"):
 
@@ -19,20 +19,29 @@ Structure (DESIGN.md §2 "HDFS -> on-device buffers + manifests"):
     queries probe with their raw signature; one sorted array, exact, no
     duplicate candidates. f <= 32.
 
+Growth is **append-only** (:mod:`repro.index.segments`): every ``add()``
+seals a new segment (its own CSR buckets over global ids) and resident
+segments are never re-bucketed. The merged bucket table consumers probe
+against is a stable linear merge of the segment tables — bit-exact with a
+from-scratch build — materialized lazily and only for consumers that need
+the whole table (the single-device probe, a full partition, a legacy
+save); the serving ring ingests segment *deltas* instead
+(:meth:`repro.index.shard.ShardedIndex.refresh`). ``compact()`` is the
+explicit reduce step: it folds every segment into one.
+
 The stacked-padded slabs every probe/join consumer runs against are built
 by the bucket partition layer (:mod:`repro.index.partition`) via
 :meth:`SignatureIndex.partition` — the single-device probe is just shard 0
 of the 1-way partition.
 
-Persistence is a single ``.npz`` keyed by a *config fingerprint* (the LSH
-parameters that determine signature semantics; ``n_shards`` joins it when
-!= 1, and pre-sharding fingerprints stay valid). Loading an index against
-a different :class:`~repro.core.pipeline.LSHConfig` raises
-:class:`IndexConfigMismatch` — a stale index never silently serves wrong
-candidates.
-
-``add()`` appends new references cheaply (signatures only) and defers the
-bucket re-sort until the next probe/save (amortized growth).
+Persistence is fingerprint-versioned (the LSH parameters that determine
+signature semantics; ``n_shards`` joins it when != 1, and pre-sharding
+fingerprints stay valid) in two containers: a **segment directory**
+(manifest + per-segment npz, appends cost O(delta)) or the legacy
+monolithic ``.npz`` (paths ending in ``.npz``; what PR 1–4 wrote, still
+read and written for compatibility). Loading an index against a different
+:class:`~repro.core.pipeline.LSHConfig` raises :class:`IndexConfigMismatch`
+— a stale index never silently serves wrong candidates.
 """
 from __future__ import annotations
 
@@ -44,8 +53,10 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.join import band_keys, flip_masks
 from ..core.pipeline import LSHConfig, ScalLoPS
+from ..core.join import band_keys
+from . import segments as seglib
+from .segments import Segment
 
 FORMAT_VERSION = 1
 
@@ -79,20 +90,12 @@ def config_fingerprint(cfg: LSHConfig, *, layout: str, bands: int,
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
-def _sort_bucket(keys: np.ndarray, ids: np.ndarray):
-    """Group (key, id) entries into CSR: (unique keys, offsets, sorted ids)."""
-    order = np.argsort(keys, kind="stable")
-    ks, sids = keys[order], ids[order]
-    uk, first = np.unique(ks, return_index=True)
-    offsets = np.concatenate([first, [len(ks)]]).astype(np.int32)
-    return uk.astype(np.uint32), offsets, sids.astype(np.int32)
-
-
 class SignatureIndex:
-    """Build-once reference index over packed LSH signatures.
+    """Segmented reference index over packed LSH signatures.
 
-    Use :meth:`build` (from sequences) or :meth:`load` (from disk); query via
-    :meth:`probe` / the serving layer (:mod:`repro.index.service`).
+    Use :meth:`build` (from sequences) or :meth:`load` (from disk); query
+    via :meth:`probe` / the serving layer (:mod:`repro.index.service`);
+    grow via :meth:`add` (seals an append-only segment).
     """
 
     def __init__(self, cfg: LSHConfig, sigs: np.ndarray, valid: np.ndarray,
@@ -128,8 +131,15 @@ class SignatureIndex:
         self.sigs = np.ascontiguousarray(np.asarray(sigs, np.uint32))
         self.valid = np.asarray(valid, bool).reshape(-1).copy()
         assert self.sigs.shape == (self.valid.shape[0], cfg.f // 32)
-        self._dirty = True          # buckets need (re)building
-        self._csr_np = None         # list[(keys, offsets, ids)] numpy
+        # -------- append-only lifecycle state
+        self.segments: list[Segment] = []   # sealed (CSR built)
+        self._pending: list[tuple] = []     # (sigs, valid, base) to seal
+        if self.size:
+            self._pending.append((self.sigs, self.valid, 0))
+        self.generation = 0         # bumps on compact() (forest of segments
+                                    # collapsed — delta consumers re-place)
+        self._merged_stale = True   # merged CSR needs a (re)merge
+        self._csr_np = None         # merged per-band CSR (lazy)
         self._partitions = {}       # n_shards -> BucketPartition (slabs)
         self._dev_sigs = None
         self._dev_valid = None
@@ -145,6 +155,18 @@ class SignatureIndex:
         return 1 if self.layout == "flip" else self.bands
 
     @property
+    def epoch(self) -> int:
+        """Segment count (sealed + pending) — the serving layers' staleness
+        counter: a replica that last saw epoch e ingests segments[e:]."""
+        return len(self.segments) + len(self._pending)
+
+    @property
+    def lifecycle(self) -> tuple[int, int]:
+        """(generation, epoch) — changes iff a delta refresh or a full
+        re-place is due."""
+        return (self.generation, self.epoch)
+
+    @property
     def fingerprint(self) -> str:
         return config_fingerprint(self.cfg, layout=self.layout,
                                    bands=self.bands,
@@ -154,12 +176,14 @@ class SignatureIndex:
 
     @property
     def device_sigs(self) -> jnp.ndarray:
-        self._ensure_built()
+        if self._dev_sigs is None or self._dev_sigs.shape[0] != self.size:
+            self._dev_sigs = jnp.asarray(self.sigs)
+            self._dev_valid = jnp.asarray(self.valid)
         return self._dev_sigs
 
     @property
     def device_valid(self) -> jnp.ndarray:
-        self._ensure_built()
+        self.device_sigs
         return self._dev_valid
 
     # ------------------------------------------------------------ build
@@ -180,51 +204,69 @@ class SignatureIndex:
         return idx
 
     def add(self, ref_ids, ref_lens) -> None:
-        """Incremental growth: append signatures now, re-sort buckets lazily
-        on the next probe/save (deferred, amortized)."""
+        """Incremental growth: signatures for the NEW rows only, appended as
+        a pending segment and sealed (bucketed) lazily on the next
+        probe/refresh/save. Resident segments are never re-bucketed; the
+        merged table re-merges lazily for consumers that need it."""
         if self._pipeline is None:
             self._pipeline = ScalLoPS(self.cfg)
         sl = self._pipeline
         new_sigs = np.asarray(sl.signatures(ref_ids, ref_lens))
         new_valid = np.asarray(sl.feature_counts(ref_ids, ref_lens)) > 0
+        if new_sigs.shape[0] == 0:
+            return
+        base = self.size
         self.sigs = np.concatenate([self.sigs, new_sigs], axis=0)
         self.valid = np.concatenate([self.valid, new_valid], axis=0)
-        self._dirty = True
+        self._pending.append((new_sigs, new_valid, base))
+        self._merged_stale = True
+        self._partitions = {}       # full partitions derive from the merge
 
-    def _build_csr(self) -> list:
-        valid_ids = np.nonzero(self.valid)[0].astype(np.int32)
-        if self.layout == "flip":
-            masks = flip_masks(self.cfg.f, self.cfg.d)[:, 0]      # (M,) uint32
-            if len(valid_ids) == 0:
-                return [_sort_bucket(np.zeros(0, np.uint32),
-                                     np.zeros(0, np.int32))]
-            keys = (self.sigs[valid_ids, 0][:, None]
-                    ^ masks[None, :]).ravel()
-            ids = np.repeat(valid_ids, masks.shape[0])
-            return [_sort_bucket(keys, ids)]
-        if len(valid_ids) == 0:
-            return [_sort_bucket(np.zeros(0, np.uint32), np.zeros(0, np.int32))
-                    for _ in range(self.bands)]
-        kb = np.asarray(band_keys(jnp.asarray(self.sigs[valid_ids]),
-                                  self.cfg.f, self.bands,
-                                  interleave=self.interleave,
-                                  key_hash=self.key_hash))        # (V, bands)
-        return [_sort_bucket(kb[:, b], valid_ids) for b in range(self.bands)]
+    def seal(self) -> None:
+        """Seal pending rows into segments (bucket the new rows). Cheap
+        relative to a rebuild: O(new rows), resident segments untouched."""
+        while self._pending:
+            sigs, valid, base = self._pending.pop(0)
+            self.segments.append(seglib.build_segment(
+                sigs, valid, base, layout=self.layout, f=self.cfg.f,
+                d=self.cfg.d, bands=self.bands, interleave=self.interleave,
+                key_hash=self.key_hash))
 
     def _ensure_built(self) -> None:
-        if not self._dirty and self._csr_np is not None:
+        """Seal pending segments and materialize the merged bucket table."""
+        self.seal()
+        if not self._merged_stale and self._csr_np is not None:
             return
-        self._csr_np = self._build_csr()
-        self._partitions = {}       # slabs derive from the fresh CSR
-        self._dev_sigs = jnp.asarray(self.sigs)
-        self._dev_valid = jnp.asarray(self.valid)
-        self._dirty = False
+        if self.segments:
+            self._csr_np = seglib.merge_band_csrs(
+                [s.csr for s in self.segments])
+        else:
+            self._csr_np = [seglib._empty_csr() for _ in range(self.n_bands)]
+        self._partitions = {}       # slabs derive from the fresh merge
+        self._merged_stale = False
+
+    def compact(self) -> None:
+        """Fold every segment into one (the explicit reduce step).
+
+        Probe results are identical before and after — compaction changes
+        the storage shape, never the bucket table. Bumps ``generation`` so
+        delta consumers (:class:`ShardedIndex`) re-place instead of
+        stacking deltas on a base that no longer exists. Already-compact
+        indexes (one sealed segment, nothing pending) are a no-op — no
+        generation bump, so serving replicas skip the full re-place."""
+        self.seal()
+        if len(self.segments) == 1:
+            return
+        self._ensure_built()
+        self.segments = [Segment(0, self.sigs, self.valid, self._csr_np)]
+        self._pending = []
+        self.generation += 1
 
     def partition(self, n_shards: int | None = None) -> "BucketPartition":
         """Shard-owned stacked CSR slabs (:mod:`repro.index.partition`) —
         the single stacking code path shared by the fused single-device
         probe (``n_shards=1``), the sharded serving ring, and the sharded
-        self-join. Cached per shard count; invalidated on rebuild."""
+        self-join. Cached per shard count; invalidated on add/compact."""
         from .partition import BucketPartition
         self._ensure_built()
         n = int(n_shards if n_shards is not None else self.n_shards)
@@ -233,6 +275,19 @@ class SignatureIndex:
             part = BucketPartition(self._csr_np, n, sigs=self.sigs)
             self._partitions[n] = part
         return part
+
+    def delta_partition(self, n_shards: int, from_epoch: int):
+        """Partition of just the segments sealed at/after ``from_epoch`` —
+        what a serving replica ingests on refresh. Never touches the
+        merged table; cost is O(delta entries)."""
+        from .partition import BucketPartition
+        self.seal()
+        segs = self.segments[from_epoch:]
+        if segs:
+            csr = seglib.merge_band_csrs([s.csr for s in segs])
+        else:
+            csr = [seglib._empty_csr() for _ in range(self.n_bands)]
+        return BucketPartition(csr, n_shards, sigs=self.sigs)
 
     # ------------------------------------------------------------ probing
     def query_keys(self, q_sigs) -> jnp.ndarray:
@@ -269,10 +324,8 @@ class SignatureIndex:
         return cand, jnp.max(sizes) > cap
 
     # ------------------------------------------------------------ persistence
-    def save(self, path: str | os.PathLike) -> None:
-        """Persist signatures + CSR buckets + config to one npz file."""
-        self._ensure_built()
-        meta = {
+    def _meta(self) -> dict:
+        return {
             "format": FORMAT_VERSION,
             "fingerprint": self.fingerprint,
             "cfg": dataclasses.asdict(self.cfg),
@@ -283,68 +336,114 @@ class SignatureIndex:
             "n_shards": self.n_shards,
             "n_refs": self.size,
         }
-        payload = {
-            "meta_json": np.frombuffer(
-                json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8),
-            "sigs": self.sigs,
-            "valid": self.valid,
-        }
-        for b, (keys, offsets, ids) in enumerate(self._csr_np):
-            payload[f"band{b}_keys"] = keys
-            payload[f"band{b}_offsets"] = offsets
-            payload[f"band{b}_ids"] = ids
-        np.savez_compressed(path, **payload)
+
+    def save(self, path: str | os.PathLike) -> int:
+        """Persist the index; returns the number of segment files written.
+
+        Paths ending in ``.npz`` write the legacy monolithic container
+        (merged table, one file — what PR 1–4 produced). Any other path is
+        a segment directory: manifest + per-segment files, and repeated
+        saves append only the segments not on disk yet (O(delta) — the
+        point of the append-only lifecycle).
+        """
+        if not seglib.is_segmented(path):
+            self._ensure_built()
+            payload = {
+                "meta_json": np.frombuffer(
+                    json.dumps(self._meta(), sort_keys=True).encode(),
+                    dtype=np.uint8),
+                "sigs": self.sigs,
+                "valid": self.valid,
+            }
+            for b, (keys, offsets, ids) in enumerate(self._csr_np):
+                payload[f"band{b}_keys"] = keys
+                payload[f"band{b}_offsets"] = offsets
+                payload[f"band{b}_ids"] = ids
+            np.savez_compressed(path, **payload)
+            return 1
+        self.seal()                 # segments only — no merge needed
+        return seglib.save_segmented(path, self._meta(), self.segments,
+                                     self.n_bands)
+
+    @classmethod
+    def _check_meta(cls, meta: dict, expected_cfg: LSHConfig | None):
+        """Shared fingerprint verification for both containers; returns the
+        constructor kwargs."""
+        cfg = LSHConfig(**meta["cfg"])
+        layout, bands = meta["layout"], int(meta["bands"])
+        interleave = bool(meta.get("interleave", True))
+        # pre-key-hash indexes (PR 1/2) bucketed on raw band keys
+        key_hash = meta.get("key_hash", "none")
+        # pre-sharding indexes (PR 1-3) are 1-way partitions
+        n_shards = int(meta.get("n_shards", 1))
+        stored = meta["fingerprint"]
+        recomputed = config_fingerprint(cfg, layout=layout, bands=bands,
+                                        interleave=interleave,
+                                        key_hash=key_hash,
+                                        n_shards=n_shards)
+        if stored != recomputed:
+            raise IndexConfigMismatch(
+                f"fingerprint {stored} does not match stored config "
+                f"(expected {recomputed}) — corrupt or stale index")
+        if expected_cfg is not None:
+            want = config_fingerprint(expected_cfg, layout=layout,
+                                      bands=bands, interleave=interleave,
+                                      key_hash=key_hash,
+                                      n_shards=n_shards)
+            if want != stored:
+                raise IndexConfigMismatch(
+                    f"index fingerprint {stored} != {want} for the "
+                    f"requested config; rebuild the index")
+        return cfg, dict(layout=layout, bands=bands, interleave=interleave,
+                         key_hash=key_hash, n_shards=n_shards)
 
     @classmethod
     def load(cls, path: str | os.PathLike,
              expected_cfg: LSHConfig | None = None) -> "SignatureIndex":
         """Load a persisted index; fails loudly on config mismatch.
 
+        One entry point for both containers: segment directories load
+        their manifest + segment files; ``.npz`` paths load the PR 1–4
+        monolithic format as a single sealed segment (back-compat — the
+        pre-key-hash and pre-sharding metadata defaults apply).
+
         If ``expected_cfg`` is given, its fingerprint must match the stored
         one — a stale index built under different LSH parameters raises
         :class:`IndexConfigMismatch` instead of silently serving wrong
         buckets.
         """
+        if seglib.is_segmented(path) and os.path.exists(
+                seglib.manifest_path(path)):
+            meta, segments = seglib.load_segmented(path)
+            if meta.get("format") != FORMAT_VERSION:
+                raise IndexConfigMismatch(
+                    f"index format {meta.get('format')} != {FORMAT_VERSION}")
+            cfg, kw = cls._check_meta(meta, expected_cfg)
+            if segments:
+                sigs = np.concatenate([s.sigs for s in segments], axis=0)
+                valid = np.concatenate([s.valid for s in segments], axis=0)
+            else:
+                sigs = np.zeros((0, cfg.f // 32), np.uint32)
+                valid = np.zeros((0,), bool)
+            idx = cls(cfg, sigs, valid, **kw)
+            idx._pending = []
+            idx.segments = segments
+            return idx
         with np.load(path) as z:
             meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
             if meta.get("format") != FORMAT_VERSION:
                 raise IndexConfigMismatch(
                     f"index format {meta.get('format')} != {FORMAT_VERSION}")
-            cfg = LSHConfig(**meta["cfg"])
-            layout, bands = meta["layout"], int(meta["bands"])
-            interleave = bool(meta.get("interleave", True))
-            # pre-key-hash indexes bucketed on raw band keys
-            key_hash = meta.get("key_hash", "none")
-            # pre-sharding indexes are 1-way partitions (back-compat)
-            n_shards = int(meta.get("n_shards", 1))
-            stored = meta["fingerprint"]
-            recomputed = config_fingerprint(cfg, layout=layout, bands=bands,
-                                            interleave=interleave,
-                                            key_hash=key_hash,
-                                            n_shards=n_shards)
-            if stored != recomputed:
-                raise IndexConfigMismatch(
-                    f"fingerprint {stored} does not match stored config "
-                    f"(expected {recomputed}) — corrupt or stale index")
-            if expected_cfg is not None:
-                want = config_fingerprint(expected_cfg, layout=layout,
-                                          bands=bands, interleave=interleave,
-                                          key_hash=key_hash,
-                                          n_shards=n_shards)
-                if want != stored:
-                    raise IndexConfigMismatch(
-                        f"index fingerprint {stored} != {want} for the "
-                        f"requested config; rebuild the index")
-            idx = cls(cfg, z["sigs"], z["valid"], layout=layout,
-                      bands=bands, interleave=interleave, key_hash=key_hash,
-                      n_shards=n_shards)
+            cfg, kw = cls._check_meta(meta, expected_cfg)
+            idx = cls(cfg, z["sigs"], z["valid"], **kw)
             csr = []
             for b in range(idx.n_bands):
                 csr.append((z[f"band{b}_keys"], z[f"band{b}_offsets"],
                             z[f"band{b}_ids"]))
+        # the monolithic table IS one sealed segment (ids are global,
+        # base 0) — no re-bucketing, and the merged view is it
+        idx._pending = []
+        idx.segments = [Segment(0, idx.sigs, idx.valid, csr)]
         idx._csr_np = csr
-        idx._partitions = {}
-        idx._dev_sigs = jnp.asarray(idx.sigs)
-        idx._dev_valid = jnp.asarray(idx.valid)
-        idx._dirty = False
+        idx._merged_stale = False
         return idx

@@ -2,12 +2,21 @@
 
   PYTHONPATH=src python -m repro.launch.allpairs \
       --n-families 64 --family-size 4 --n-singletons 256 --d 1 \
-      --min-pid 50 [--out /tmp/families.npz] [--pallas] [--stats]
+      --min-pid 50 [--out /tmp/families.npz] [--pallas] [--stats] \
+      [--incremental 128]
 
 Builds (or loads, --index) the corpus SignatureIndex, runs the LSH
 self-join, scores the candidate pairs with device-resident tiled
 Smith-Waterman waves (fused gather + ungapped X-drop prefilter + async
 drain ring), and clusters the thresholded similarity graph into families.
+
+``--incremental N`` holds the last N sequences out of the batch run and
+ingests them afterwards through the append-only lifecycle: the index
+grows by a sealed segment, the DELTA self-join emits only new-vs-resident
+pairs from the touched buckets, only those pairs are scored, and the
+surviving edges union into the persistent disjoint-set forest — families
+equal a from-scratch recluster at delta cost. With a directory --index
+the forest persists beside the manifest as ``families.npz``.
 
 Band keys are splitmix-mixed before bucketing (the serving default,
 exactness-preserving); the signature scheme itself stays ``java`` here
@@ -75,7 +84,14 @@ def main(argv=None):
     ap.add_argument("--min-score", type=int, default=60,
                     help="SW score threshold used with --pallas")
     ap.add_argument("--index", default=None,
-                    help="reuse/persist the corpus index at this npz path")
+                    help="reuse/persist the corpus index here (.npz = "
+                         "legacy monolithic; otherwise a segment directory "
+                         "with O(delta) appends)")
+    ap.add_argument("--incremental", type=int, default=0, metavar="N",
+                    help="hold the last N sequences out of the batch run "
+                         "and ingest them afterwards via the delta "
+                         "self-join + persistent family forest (families "
+                         "equal the from-scratch recluster, at delta cost)")
     ap.add_argument("--out", default=None,
                     help="write edges + labels npz here")
     ap.add_argument("--stats", action="store_true",
@@ -91,7 +107,8 @@ def main(argv=None):
 
     import numpy as np
 
-    from ..allpairs import AllPairsConfig, WaveConfig, all_pairs_search
+    from ..allpairs import (AllPairsConfig, WaveConfig, all_pairs_ingest,
+                            all_pairs_search, forest_from_result)
     from ..core import LSHConfig
     from ..data import FamilyCorpusConfig, make_family_corpus
     from ..index import SignatureIndex, occupancy_report
@@ -132,6 +149,57 @@ def main(argv=None):
                         prefilter=args.prefilter,
                         prefilter_min=args.prefilter_min,
                         xdrop=args.xdrop))
+
+    # ---- incremental mode: batch the resident corpus, ingest the rest
+    if args.incremental:
+        base = n - args.incremental
+        if base <= 0:
+            raise SystemExit(f"--incremental {args.incremental} leaves no "
+                             f"resident corpus (total {n} seqs)")
+        if index is not None and index.size != base:
+            print(f"[index] loaded index covers {index.size} != resident "
+                  f"{base} seqs; rebuilding")
+            index = None
+        t0 = time.time()
+        res = all_pairs_search(ids[:base], lens[:base], cfg, index=index)
+        t_batch = time.time() - t0
+        forest = forest_from_result(res)
+        t0 = time.time()
+        ing = all_pairs_ingest(ids, lens, base, cfg, index=res.index,
+                               forest=forest)
+        t_ingest = time.time() - t0
+        print(f"[batch]  {base} seqs -> {res.join.n_candidates} pairs, "
+              f"{res.families.n_families} families ({t_batch:.2f}s)")
+        print(f"[ingest] +{args.incremental} seqs -> "
+              f"{ing.join.n_candidates} DELTA pairs "
+              f"(epoch {res.index.epoch}), "
+              f"{int(ing.edge_mask.sum())} edges survived "
+              f"({t_ingest:.2f}s vs {t_batch:.2f}s batch — the "
+              f"resident corpus was never re-joined or re-scored)")
+        fams = ing.families
+        pure = sum(1 for fam in fams if len(set(labels[fam])) == 1)
+        largest = max((len(f) for f in fams), default=0)
+        print(f"[truth]  {pure}/{len(fams)} families over the grown corpus "
+              f"are pure; largest={largest}")
+        if args.index:
+            n_seg = res.index.save(args.index)
+            msg = f"[index]  persisted to {args.index} ({n_seg} file(s))"
+            if not str(args.index).endswith(".npz"):
+                fpath = os.path.join(args.index, "families.npz")
+                forest.save(fpath)      # the forest lives beside the manifest
+                msg += f" + forest {fpath}"
+            print(msg)
+        if args.out:
+            pairs = np.concatenate([res.pairs, ing.join.pairs], axis=0)
+            scores = np.concatenate([res.scored.scores, ing.scored.scores])
+            payload = dict(pairs=pairs, scores=scores,
+                           labels=ing.labels, truth=labels)
+            if res.scored.pid is not None and ing.scored.pid is not None:
+                payload["pid"] = np.concatenate([res.scored.pid,
+                                                 ing.scored.pid])
+            np.savez_compressed(args.out, **payload)
+            print(f"[out]    wrote {args.out}")
+        return
 
     t0 = time.time()
     res = all_pairs_search(ids, lens, cfg, index=index)

@@ -1,12 +1,18 @@
-"""Serving driver for indexed protein search: build -> persist -> load -> serve.
+"""Serving driver for indexed protein search: build -> persist -> load ->
+serve -> grow -> compact.
 
 The index analogue of ``repro.launch.serve``'s LM path: pays the reference
 database cost once (paper §5.3), persists the artifact, then serves query
-micro-batches with latency/throughput stats.
+micro-batches with latency/throughput stats. Growth is append-only: an
+``--index`` path WITHOUT ``.npz`` is a segment directory (manifest +
+per-segment files) where ``--add-fasta`` appends O(delta) segment files
+and a live serving replica ingests the delta without a full reload;
+``--compact`` folds the segments back into one.
 
   PYTHONPATH=src python -m repro.launch.search_serve \
       --n-refs 2048 --n-queries 256 --batch 32 --k 5 --d 1 \
-      --index /tmp/scallops.npz [--shards 4] [--rerank] [--layout flip]
+      --index /tmp/scallops_idx [--shards 4] [--rerank] [--layout flip] \
+      [--add-fasta new_refs.fasta] [--compact]
 """
 from __future__ import annotations
 
@@ -31,13 +37,28 @@ def main(argv=None):
                          "54-60%% for the Java hash — index.stats); pass "
                          "java for paper-fidelity runs")
     ap.add_argument("--index", default=None,
-                    help="npz path for the persisted index (default: tmp)")
+                    help="persisted index path (default: tmp). Paths ending "
+                         "in .npz write the monolithic legacy container; "
+                         "anything else is a SEGMENT DIRECTORY — manifest + "
+                         "per-segment files, where repeated saves append "
+                         "only the new segments (O(delta) persistence)")
     ap.add_argument("--layout", default="band", choices=["band", "flip"])
     ap.add_argument("--shards", type=int, default=1,
                     help="bucket shards: each device owns the buckets "
                          "mix32(band_key) %% n_shards routes to it (the "
                          "MapReduce shuffle) and probes only those; query "
-                         "blocks rotate around the mesh via ppermute")
+                         "blocks rotate around the mesh via ppermute. "
+                         "Works for both layouts (flip = one expanded band)")
+    ap.add_argument("--add-fasta", default=None, metavar="FASTA",
+                    help="after the first serving pass, append these "
+                         "sequences as a sealed index segment and keep "
+                         "serving: the sharded replica ingests the delta "
+                         "slab via refresh() (no full reload) and a "
+                         "directory --index persists just the new segment")
+    ap.add_argument("--compact", action="store_true",
+                    help="fold all segments into one after serving "
+                         "(results identical before/after; a directory "
+                         "--index is rewritten as a single segment)")
     ap.add_argument("--rerank", action="store_true",
                     help="Smith-Waterman re-rank of the top-k")
     args = ap.parse_args(argv)
@@ -51,6 +72,7 @@ def main(argv=None):
     import jax
 
     from ..core import LSHConfig
+    from ..core.alphabet import PAD
     from ..data import SyntheticProteinConfig, make_protein_sets
     from ..index import QueryEngine, ServingConfig, ShardedIndex, SignatureIndex
 
@@ -67,18 +89,26 @@ def main(argv=None):
                                  layout=args.layout, n_shards=args.shards)
     index._ensure_built()
     t_build = time.time() - t0
-    path = args.index or os.path.join(tempfile.gettempdir(), "scallops.npz")
+    tmp_dir = None
+    if args.index:
+        path = args.index
+    else:
+        tmp_dir = tempfile.mkdtemp(prefix="scallops_idx_")
+        path = os.path.join(tmp_dir, "idx")
     t0 = time.time()
-    index.save(path)
+    n_written = index.save(path)
     t_save = time.time() - t0
+    container = "monolithic npz" if str(path).endswith(".npz") \
+        else f"segment dir ({n_written} segment file(s))"
     print(f"[build] {index.size} refs -> {index.n_bands}-band {args.layout} "
-          f"index in {t_build:.2f}s (save {t_save:.2f}s, "
-          f"{os.path.getsize(path)/1e6:.1f} MB, fp={index.fingerprint})")
+          f"index in {t_build:.2f}s (save {t_save:.2f}s, {container}, "
+          f"fp={index.fingerprint})")
 
     # ---- load (fingerprint-verified) + serve
     t0 = time.time()
     loaded = SignatureIndex.load(path, expected_cfg=cfg)
-    print(f"[load]  verified fingerprint in {time.time()-t0:.2f}s")
+    print(f"[load]  verified fingerprint in {time.time()-t0:.2f}s "
+          f"(epoch={loaded.epoch})")
 
     sharded = None
     if args.shards > 1:
@@ -96,9 +126,9 @@ def main(argv=None):
               f"{sharded.n_shards} devices (per-shard buckets "
               f"{part.n_buckets.tolist()}, entries {part.n_entries.tolist()})")
 
+    ref_seqs = (data["ref_ids"], data["ref_lens"])
     scfg = ServingConfig(k=args.k, max_batch=args.batch, rerank=args.rerank)
-    engine = QueryEngine(loaded, scfg, sharded=sharded,
-                         ref_seqs=(data["ref_ids"], data["ref_lens"]))
+    engine = QueryEngine(loaded, scfg, sharded=sharded, ref_seqs=ref_seqs)
     mode = "sharded-probe" if sharded is not None else engine._mode()
     print(f"[mode]  {mode} serving (probe candidates are exact within "
           f"Hamming d={args.d}; the dense path ranks ALL refs — raise --d "
@@ -106,6 +136,34 @@ def main(argv=None):
     # warm-up batch compiles the fixed-shape serving path
     engine.query_batch(data["query_ids"][:args.batch],
                        data["query_lens"][:args.batch])
+
+    # ---- grow the live index (append-only segment + delta refresh)
+    if args.add_fasta:
+        from ..data.fasta import load_fasta_encoded
+        names, new_ids, new_lens = load_fasta_encoded(args.add_fasta)
+        t0 = time.time()
+        loaded.add(new_ids, new_lens)
+        n_written = loaded.save(path)       # appends ONLY the new segment
+        t_add = time.time() - t0
+        if args.rerank:                     # re-rank gather needs the rows
+            L = max(ref_seqs[0].shape[1], new_ids.shape[1])
+            grown = np.full((loaded.size, L), PAD, np.int8)
+            grown[:len(ref_seqs[1]), :ref_seqs[0].shape[1]] = ref_seqs[0]
+            grown[len(ref_seqs[1]):, :new_ids.shape[1]] = new_ids
+            engine.ref_seqs = (grown, np.concatenate(
+                [np.asarray(ref_seqs[1], np.int32),
+                 np.asarray(new_lens, np.int32)]))
+        print(f"[add]   +{len(new_lens)} refs from {args.add_fasta} -> "
+              f"epoch {loaded.epoch} ({n_written} segment file(s) appended, "
+              f"{t_add:.2f}s); serving replica will ingest the delta on "
+              f"its next batch (no reload)")
+        t0 = time.time()
+        engine.query_batch(data["query_ids"][:args.batch],
+                           data["query_lens"][:args.batch])
+        if sharded is not None:
+            print(f"[add]   delta refresh + first batch {time.time()-t0:.2f}s "
+                  f"(replica epochs base={sharded.epoch[0]} "
+                  f"delta={sharded.epoch[1]})")
     engine._stats.batch_sizes.clear()
     engine._stats.latencies.clear()
 
@@ -124,11 +182,32 @@ def main(argv=None):
     print(f"[serve] {s['n_queries']} queries in {wall:.2f}s — "
           f"{s['qps']:.0f} q/s, p50={s['p50_ms']:.1f}ms "
           f"p95={s['p95_ms']:.1f}ms (batch={args.batch}, k={args.k}"
-          f"{', rerank' if args.rerank else ''})")
+          f"{', rerank' if args.rerank else ''}, "
+          f"epoch={s['index_epoch']})")
     print(f"[quality] planted homologs in top-{args.k}: "
           f"{hits}/{n_hom} ({hits/max(n_hom,1):.0%})")
+
+    # ---- explicit compaction (the reduce step; results must not move)
+    if args.compact:
+        before = engine.query_batch(qids[:args.batch], qlens[:args.batch])
+        t0 = time.time()
+        loaded.compact()
+        n_written = loaded.save(path)
+        if sharded is not None:
+            sharded.compact()
+        after = engine.query_batch(qids[:args.batch], qlens[:args.batch])
+        same = (np.array_equal(before[0], after[0])
+                and np.array_equal(before[1], after[1]))
+        print(f"[compact] {time.time()-t0:.2f}s -> epoch {loaded.epoch} "
+              f"({n_written} file(s) rewritten); probe results "
+              f"{'identical' if same else 'DIVERGED (BUG)'} across "
+              f"compaction")
+        if not same:
+            raise SystemExit(1)
+
     if args.index is None:
-        os.unlink(path)
+        import shutil
+        shutil.rmtree(tmp_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

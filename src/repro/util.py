@@ -4,6 +4,13 @@ from __future__ import annotations
 import jax
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x; 0 stays 0 (callers wanting a nonzero
+    floor clamp first — buffer/capacity quantization shared by the
+    self-join emission caps and the serving delta slabs)."""
+    return 1 << (int(x) - 1).bit_length() if x > 0 else 0
+
+
 def shard_map_compat(f, mesh, in_specs, out_specs):
     """shard_map across jax versions (check_rep -> check_vma rename)."""
     try:

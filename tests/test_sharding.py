@@ -112,6 +112,64 @@ def test_selfjoin_uses_index_default_shards(data):
                                   lsh_self_join(idx1).pairs)
 
 
+# -------------------------------------------------------- skew-bounded caps
+def test_selfjoin_skew_bounded_caps(data):
+    """One degenerate bucket no longer inflates every shard's emission
+    buffer: per-shard caps follow per-shard demand (ragged host merge),
+    and the pair arrays are unchanged."""
+    from repro.allpairs.selfjoin import _shard_caps
+    # 40 copies of one sequence -> one degenerate bucket on one shard
+    ids = np.concatenate([data["ref_ids"][:1].repeat(40, axis=0),
+                          data["ref_ids"]], axis=0)
+    lens = np.concatenate([data["ref_lens"][:1].repeat(40),
+                           data["ref_lens"]])
+    idx = SignatureIndex.build(CFG, ids, lens)
+    base = lsh_self_join(idx)
+    for n in (2, 4):
+        caps = _shard_caps(idx.partition(n))
+        # skewed demand: the degenerate shard's cap dominates, the others
+        # stay at their own (much smaller) demand
+        assert len(set(caps.tolist())) > 1, caps
+        assert int(caps.sum()) < n * int(caps.max())
+        got = lsh_self_join(idx, n_shards=n)
+        np.testing.assert_array_equal(base.pairs, got.pairs)
+        np.testing.assert_array_equal(base.indptr, got.indptr)
+    # a non-pow2 max_grow between the true demand and its quantized buffer
+    # size must not raise: overflow is judged on TRUE demand, quantization
+    # only sizes buffers
+    need = int(idx.partition(1).pair_totals.max())
+    from repro.util import next_pow2
+    assert next_pow2(need) > need + 1       # the quantized cap exceeds it
+    lsh_self_join(idx, max_grow=need + 1)
+
+
+def test_shard_caps_quantized_pow2(data):
+    from repro.allpairs.selfjoin import _shard_caps
+    from repro.util import next_pow2
+    assert [next_pow2(x) for x in (0, 1, 2, 3, 65)] == [0, 1, 2, 4, 128]
+    caps = _shard_caps(SignatureIndex.build(
+        CFG, data["ref_ids"], data["ref_lens"]).partition(4))
+    assert all(c == 0 or c == next_pow2(c) for c in caps.tolist())
+
+
+# ------------------------------------------------------- jit-cache keying
+def test_emit_program_cache_survives_fresh_mesh(data):
+    """Regression (ROADMAP PR 4 trap): the sharded emission program is
+    cached by DEVICE TUPLE, so constructing a new-but-equal Mesh per call
+    resolves to the identical jitted program — no silent recompile."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.allpairs.selfjoin import (_emit_sharded_cached,
+                                         _emit_sharded_fn)
+    m1 = Mesh(np.array(jax.devices()[:1]), ("data",))
+    m2 = Mesh(np.array(jax.devices()[:1]), ("data",))
+    size0 = _emit_sharded_cached.cache_info().currsize
+    f1 = _emit_sharded_fn(m1, "data", 16)
+    f2 = _emit_sharded_fn(m2, "data", 16)
+    assert f1 is f2
+    assert _emit_sharded_cached.cache_info().currsize == size0 + 1
+
+
 # ---------------------------------------------------------------- persistence
 def test_sharded_index_roundtrip_and_fingerprint(tmp_path, data, q_sigs):
     idx = SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"],
@@ -178,15 +236,16 @@ for n in (2, 4):
     np.testing.assert_array_equal(base.pairs, got.pairs)
 print("SELFJOIN-EXACT")
 
-# --- add() re-placement: grow the index, sharded results still match the
-# single-device probe over the grown corpus
+# --- add(): grow the index; the replica ingests the DELTA slab (no full
+# re-place) and still matches the single-device probe over the grown corpus
 extra = make_protein_sets(SyntheticProteinConfig(
     n_refs=40, n_homolog_queries=1, n_decoy_queries=1,
     ref_len_mean=90, ref_len_std=12, sub_rates=(0.05,), seed=43))
 sh4 = ShardedIndex(idx)            # snapshots the 150-ref partition
 nid0, *_ = sh4.topk(q, k=6, cap=64)
 idx.add(extra["ref_ids"], extra["ref_lens"])
-nid, nd, *_ = sh4.topk(q, k=6, cap=64)      # must re-place, not re-serve
+nid, nd, *_ = sh4.topk(q, k=6, cap=64)      # delta refresh, not a reload
+assert sh4._delta is not None, "expected base+delta slabs after add()"
 want_id2, want_d2, *_ = topk_probe(idx, q, k=6, cap=64)
 np.testing.assert_array_equal(nid, np.asarray(want_id2))
 np.testing.assert_array_equal(nd, np.asarray(want_d2))
@@ -194,6 +253,41 @@ got = lsh_self_join(idx, n_shards=4)
 np.testing.assert_array_equal(lsh_self_join(idx, n_shards=1).pairs,
                               got.pairs)
 print("ADD-EXACT")
+
+# --- flip layout under sharding: the expanded table partitions the same
+# way (n_bands == 1); ring probe bit-exact for every n_shards
+idxf = SignatureIndex.build(cfg, data["ref_ids"], data["ref_lens"],
+                            layout="flip")
+wf = topk_probe(idxf, q, k=6, cap=64)
+for n in (1, 2, 4):
+    shf = ShardedIndex(idxf, Mesh(np.array(jax.devices()[:n]), ("data",)))
+    gf = shf.topk(q, k=6, cap=64)
+    np.testing.assert_array_equal(gf[0], np.asarray(wf[0]))
+    np.testing.assert_array_equal(gf[1], np.asarray(wf[1]))
+    assert (gf[2], gf[3]) == (wf[2], wf[3])
+print("FLIP-EXACT")
+
+# --- fresh-Mesh recompile trap: two self-joins through two freshly
+# constructed (equal) meshes must reuse ONE cached emission program.
+# A uniform-demand corpus (identical rows -> one live bucket, one live
+# cap) pins the SPMD shard_map path; skewed corpora take the ragged
+# per-shard path, which never builds a mesh program at all.
+from repro.allpairs.selfjoin import _emit_sharded_cached, _emit_sharded_fn
+uni = SignatureIndex.build(cfg, np.repeat(data["ref_ids"][:1], 24, axis=0),
+                           np.repeat(data["ref_lens"][:1], 24))
+_emit_sharded_cached.cache_clear()
+m1 = Mesh(np.array(jax.devices()[:4]), ("data",))
+j1 = lsh_self_join(uni, n_shards=4, mesh=m1)
+info = _emit_sharded_cached.cache_info()
+assert info.currsize == 1, info         # the SPMD path actually ran
+m2 = Mesh(np.array(jax.devices()[:4]), ("data",))
+j2 = lsh_self_join(uni, n_shards=4, mesh=m2)
+info = _emit_sharded_cached.cache_info()
+assert info.currsize == 1 and info.hits >= 1, info
+np.testing.assert_array_equal(j1.pairs, j2.pairs)
+assert _emit_sharded_fn(m1, "data", 32) is _emit_sharded_fn(
+    Mesh(np.array(jax.devices()[:4]), ("data",)), "data", 32)
+print("CACHE-STABLE")
 
 # --- save -> load round-trip of a sharded index, served sharded
 import tempfile, os
@@ -238,5 +332,6 @@ def test_sharded_paths_forced_four_devices():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr
     for marker in ("PROBE-EXACT", "SELFJOIN-EXACT", "ADD-EXACT",
+                   "FLIP-EXACT", "CACHE-STABLE",
                    "ROUNDTRIP-EXACT", "WAVES-EXACT"):
         assert marker in out.stdout, (marker, out.stdout, out.stderr)
