@@ -1,0 +1,281 @@
+"""Closed-loop SLO benchmark for the async serving tier (repro.serve).
+
+Sweeps **offered QPS** with open-loop arrivals (requests submitted on a
+fixed schedule regardless of completions — the load model a real front
+door sees) through an :class:`~repro.serve.AsyncEngine` over a
+:class:`~repro.serve.ReplicaFleet`, and finds the **latency knee**: the
+highest offered rate the tier still absorbs (achieved >= 90% of offered).
+Below the knee p95 is flat; past it the queue grows without bound and
+latency is just queueing delay.
+
+Acceptance criteria (asserted in ``--smoke``, not just reported):
+
+* async throughput at the knee must be >= the synchronous batch-1
+  baseline — micro-batching via the padding ladder has to *buy*
+  something, or the tier is pure overhead;
+* a live ingest + major compaction mid-sweep must complete with ZERO
+  failed or blocked requests (rolling refresh keeps serving live);
+* the async path must be bit-exact with the synchronous probe path
+  (mode="probe") on a fixed query batch.
+
+Emits ``BENCH_serve.json`` (sync baseline, per-point sweep stats, knee,
+live-ingest accounting) which the nightly CI job uploads alongside the
+other BENCH artifacts.
+
+  PYTHONPATH=src python -m benchmarks.serve_slo --smoke        # CI
+  PYTHONPATH=src python -m benchmarks.serve_slo --n-refs 4096 \
+      --shards 4 --replicas 2
+
+(XLA_FLAGS is set before the first jax import; pass --shards to change
+the forced host device count.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _percentiles(lat_s):
+    import numpy as np
+    if not lat_s:
+        return dict(p50_ms=0.0, p95_ms=0.0, p99_ms=0.0, mean_ms=0.0)
+    a = np.asarray(lat_s, np.float64) * 1e3
+    return dict(p50_ms=float(np.percentile(a, 50)),
+                p95_ms=float(np.percentile(a, 95)),
+                p99_ms=float(np.percentile(a, 99)),
+                mean_ms=float(a.mean()))
+
+
+def _warm_rungs(backend, qids, qlens, scfg):
+    """Compile every (batch-rung, length-quantum) serving shape the sweep
+    can land on — a real tier pre-warms its ladder; without this, the
+    open-loop points measure XLA compiles instead of serving."""
+    import numpy as np
+    quanta = {}
+    for j, L in enumerate(np.asarray(qlens)):
+        q = int(-(-int(L) // scfg.len_quantum) * scfg.len_quantum)
+        if q not in quanta or L > qlens[quanta[q]]:
+            quanta[q] = j
+    rungs = [b for b in scfg.batch_ladder if b <= scfg.max_batch]
+    for b in rungs:
+        for j in quanta.values():
+            # slice to the true length: the padded width (what the jit
+            # cache keys on) is quantized from the ARRAY width
+            row = qids[j:j + 1, :int(qlens[j])]
+            backend.query_batch(np.repeat(row, b, axis=0),
+                                np.repeat(qlens[j:j + 1], b))
+    return len(rungs) * len(quanta)
+
+
+def _open_loop_point(eng, qids, qlens, offered_qps, n_requests,
+                     on_submit=None):
+    """Submit ``n_requests`` on a fixed open-loop schedule at
+    ``offered_qps``; returns (achieved_qps, latency percentiles, n_shed).
+    ``on_submit(i)`` fires before request i (hook for mid-sweep ingest).
+    """
+    period = 1.0 / offered_qps
+    nq = len(qlens)
+    t_start = time.monotonic()
+    recs = []
+    for i in range(n_requests):
+        if on_submit is not None:
+            on_submit(i)
+        target = t_start + i * period
+        now = time.monotonic()
+        if target > now:
+            time.sleep(target - now)
+        j = i % nq
+        t_sub = time.monotonic()
+        fut = eng.submit(qids[j][:qlens[j]])
+        done = {}
+        fut.add_done_callback(
+            lambda f, d=done: d.setdefault("t", time.monotonic()))
+        recs.append((t_sub, fut, done))
+    results = [f.result(timeout=300) for _, f, _ in recs]
+    t_end = max(d["t"] for _, _, d in recs)
+    lat = [d["t"] - t_sub for (t_sub, _, d), r in zip(recs, results) if r.ok]
+    n_ok = sum(1 for r in results if r.ok)
+    n_shed = len(results) - n_ok
+    achieved = n_ok / max(t_end - t_start, 1e-9)
+    return achieved, _percentiles(lat), n_shed, results
+
+
+def _run(args):
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import LSHConfig
+    from repro.data import SyntheticProteinConfig, make_protein_sets
+    from repro.index import (QueryEngine, ServingConfig, ShardedIndex,
+                             SignatureIndex)
+    from repro.serve import AsyncEngine, ReplicaFleet
+
+    S = args.shards
+    assert jax.device_count() >= S, (
+        f"need {S} devices, got {jax.devices()}")
+    csv = print
+    csv("bench,metric,value")
+
+    data = make_protein_sets(SyntheticProteinConfig(
+        n_refs=args.n_refs, n_homolog_queries=args.n_queries // 4,
+        n_decoy_queries=args.n_queries - args.n_queries // 4,
+        ref_len_mean=150, ref_len_std=30, sub_rates=(0.05, 0.15), seed=13))
+    qids, qlens = data["query_ids"], data["query_lens"]
+    cfg = LSHConfig(k=3, T=13, f=32, d=1)
+    index = SignatureIndex.build(cfg, data["ref_ids"], data["ref_lens"])
+    index._ensure_built()
+    mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
+    # probe mode on BOTH sides: the fleet always serves the sharded probe
+    # ring, so the parity baseline must not silently take the dense path
+    scfg = ServingConfig(k=args.k, max_batch=args.batch, mode="probe")
+
+    results = {"bench": "serve_slo", "n_refs": args.n_refs,
+               "n_queries_per_point": args.n_per_point,
+               "shards": S, "replicas": args.replicas,
+               "batch": args.batch, "max_wait_ms": args.max_wait_ms,
+               "devices": jax.device_count()}
+
+    # ---- synchronous batch-1 baseline (no micro-batching to hide behind)
+    sync_sh = ShardedIndex(index, mesh)
+    sync_eng = QueryEngine(index, scfg, sharded=sync_sh)
+    t_warm0 = time.monotonic()
+    n_warm = _warm_rungs(sync_eng, qids, qlens, scfg)
+    t0 = time.monotonic()
+    n_sync = min(len(qlens), args.n_per_point)
+    for i in range(n_sync):
+        sync_eng.query_batch(qids[i:i + 1], qlens[i:i + 1])
+    sync_qps = n_sync / (time.monotonic() - t0)
+    csv(f"serve_slo,sync_batch1_qps,{sync_qps:.1f}")
+    results["sync_batch1_qps"] = round(sync_qps, 2)
+
+    # ---- the async tier under an offered-QPS sweep ----------------------
+    fleet = ReplicaFleet(index, scfg, n_replicas=args.replicas, mesh=mesh)
+    eng = AsyncEngine(fleet, max_wait_ms=args.max_wait_ms)
+    # the module-level device-tuple program cache means the sync warmup
+    # above already compiled every ring; this pass warms the fleet's
+    # per-replica host paths (signatures etc.) without new compiles
+    _warm_rungs(fleet, qids, qlens, scfg)
+    csv(f"serve_slo,warm_shapes,{n_warm} "
+        f"({time.monotonic() - t_warm0:.1f}s)")
+
+    sweep = []
+    knee = None
+    for mult in args.multipliers:
+        offered = sync_qps * mult
+        achieved, pct, n_shed, _ = _open_loop_point(
+            eng, qids, qlens, offered, args.n_per_point)
+        point = dict(offered_qps=round(offered, 2),
+                     achieved_qps=round(achieved, 2),
+                     shed=n_shed, **{k: round(v, 2) for k, v in pct.items()})
+        sweep.append(point)
+        csv(f"serve_slo,offered={offered:.1f},achieved={achieved:.1f} "
+            f"p50={pct['p50_ms']:.1f}ms p95={pct['p95_ms']:.1f}ms "
+            f"p99={pct['p99_ms']:.1f}ms shed={n_shed}")
+        if achieved >= 0.9 * offered:
+            knee = point            # highest offered the tier absorbs
+    results["sweep"] = sweep
+    results["knee"] = knee
+    assert knee is not None, (
+        "the tier absorbed NO offered rate (achieved < 0.9x offered "
+        "everywhere) — dispatch is broken or the sweep floor is too high")
+    csv(f"serve_slo,knee_offered_qps,{knee['offered_qps']}")
+    csv(f"serve_slo,knee_achieved_qps,{knee['achieved_qps']}")
+
+    # ---- live ingest + major compaction mid-stream ----------------------
+    # re-run the knee point with an ingest fired a third of the way in and
+    # a major compaction two thirds in; every request must complete
+    rng = np.random.default_rng(7)
+    from repro.core.alphabet import ALPHABET_SIZE, PAD
+    new_lens = rng.integers(100, 180, size=32).astype(np.int32)
+    new_ids = np.full((32, int(new_lens.max())), PAD, np.int8)
+    for r, L in enumerate(new_lens):
+        new_ids[r, :L] = rng.integers(0, ALPHABET_SIZE, size=L,
+                                      dtype=np.int8)
+    hooks = {}
+
+    def on_submit(i):
+        if i == args.n_per_point // 3 and "ingest" not in hooks:
+            hooks["ingest"] = fleet.ingest(new_ids, new_lens)
+        if i == 2 * args.n_per_point // 3 and "compact" not in hooks:
+            hooks["ingest"].wait(timeout=120)
+            fleet.compact_index()
+            hooks["compact"] = True
+
+    achieved, pct, n_shed, res = _open_loop_point(
+        eng, qids, qlens, knee["offered_qps"], args.n_per_point,
+        on_submit=on_submit)
+    assert hooks.get("compact"), "mid-sweep compaction never fired"
+    epochs = sorted({r.epoch for r in res if r.ok})
+    assert n_shed == 0, (
+        f"live ingest/compaction shed {n_shed} requests — serving did "
+        f"not stay live (counters: {eng.counters.snapshot()})")
+    csv(f"serve_slo,live_ingest_achieved_qps,{achieved:.1f}")
+    csv(f"serve_slo,live_ingest_epochs,{epochs}")
+    results["live_ingest"] = dict(
+        achieved_qps=round(achieved, 2), shed=n_shed,
+        epochs_served=[int(e) for e in epochs],
+        **{k: round(v, 2) for k, v in pct.items()})
+
+    # ---- bit-exactness: async answers == synchronous probe answers ------
+    sync_eng2 = QueryEngine(index, scfg, sharded=ShardedIndex(index, mesh))
+    nb = min(len(qlens), args.batch)
+    want_id, want_d = sync_eng2.query_batch(qids[:nb], qlens[:nb])
+    futs = [eng.submit(qids[j][:qlens[j]]) for j in range(nb)]
+    got = [f.result(timeout=300) for f in futs]
+    assert all(r.ok for r in got)
+    np.testing.assert_array_equal(np.stack([r.ids for r in got]), want_id)
+    np.testing.assert_array_equal(np.stack([r.dists for r in got]), want_d)
+    csv("serve_slo,async_bitexact,1")
+    results["async_bitexact"] = True
+
+    eng.close()
+    fleet.close()
+
+    with open(args.json, "w") as fh:
+        json.dump(results, fh, indent=2)
+    csv(f"serve_slo,json_written,{args.json}")
+
+    assert knee["achieved_qps"] >= sync_qps, (
+        f"async throughput at the knee ({knee['achieved_qps']:.1f} q/s) "
+        f"must beat the synchronous batch-1 baseline ({sync_qps:.1f} q/s) "
+        f"— micro-batching bought nothing")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus for CI (writes BENCH_serve.json)")
+    ap.add_argument("--n-refs", type=int, default=None)
+    ap.add_argument("--n-queries", type=int, default=64)
+    ap.add_argument("--n-per-point", type=int, default=None,
+                    help="requests submitted per offered-QPS point")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--multipliers", type=float, nargs="+",
+                    default=[0.25, 0.5, 1.0, 2.0, 4.0],
+                    help="offered-QPS sweep points as multiples of the "
+                         "sync batch-1 baseline")
+    ap.add_argument("--json", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    args.n_refs = args.n_refs or (512 if args.smoke else 4096)
+    args.n_per_point = args.n_per_point or (48 if args.smoke else 256)
+
+    if "XLA_FLAGS" not in os.environ:
+        # must precede the first jax import (host platform device count)
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.shards}"
+        if "jax" in sys.modules:
+            raise RuntimeError("jax imported before XLA_FLAGS was set; "
+                               "run benchmarks.serve_slo as the entry point")
+    _run(args)
+
+
+if __name__ == "__main__":
+    main()

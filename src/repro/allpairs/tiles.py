@@ -165,18 +165,28 @@ def _wave_ungapped_device(ids_dev, lens_dev, pi, pj, *, x: int | None,
 
 
 @functools.lru_cache(maxsize=8)
-def _sharded_wave_fns(ndev: int):
-    """SPMD wave programs over the first ``ndev`` devices: the (B,) pair
-    index vectors split ``P("wave")`` (B a multiple of ndev), the corpus
-    replicates, and every device gathers+scores its B/ndev pairs inside
+def _sharded_wave_fns(devices: tuple):
+    """SPMD wave programs over ``devices``: the (B,) pair index vectors
+    split ``P("wave")`` (B a multiple of len(devices)), the corpus
+    replicates, and every device gathers+scores its share of pairs inside
     ONE jitted program — the only dispatch form the CPU PJRT client
     actually runs concurrently. Per-pair results are independent, so the
-    split is bit-exact with the single-device wave."""
+    split is bit-exact with the single-device wave.
+
+    Cached by the DEVICE TUPLE — the same keying discipline as the
+    self-join emission and the serving ring (PR 5): device objects are
+    per-process singletons, so every caller resolving the same devices —
+    across fresh ``WaveConfig`` instances, fresh meshes, repeated
+    ``score_pairs`` calls — shares one compiled program pair (cache
+    stability pinned in tests/test_sharding.py). The previous key was the
+    bare device *count*, which happened to coincide but broke the
+    discipline (and would silently recompile nothing while masking a
+    wrong-devices bug if callers ever passed a different prefix)."""
     from jax.sharding import Mesh
     from jax.sharding import PartitionSpec as P
 
     from ..util import shard_map_compat
-    mesh = Mesh(np.array(jax.devices()[:ndev]), ("wave",))
+    mesh = Mesh(np.array(devices), ("wave",))
     ax = "wave"
 
     @functools.partial(jax.jit, static_argnames=("Lq", "Lr"))
@@ -295,7 +305,8 @@ def _run_score_waves(ids, lens, pairs, subset, cfg: WaveConfig, dev, out,
     def sink(slots, host):
         out[slots] = host[:len(slots)]
 
-    sharded = _sharded_wave_fns(ndev) if ndev > 1 else None
+    sharded = (_sharded_wave_fns(tuple(jax.devices()[:ndev]))
+               if ndev > 1 else None)
     ring = _DrainRing(0 if cfg.profile else cfg.inflight, sink)
     for chunk, B, Lq, Lr in _iter_wave_chunks(sub, lens, cfg, wave_batch,
                                               ndev):

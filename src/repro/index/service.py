@@ -207,10 +207,20 @@ class ServingConfig:
     rerank: bool = False            # Smith-Waterman re-rank of the top-k
 
 
+_STAGES = ("ladder", "sig", "probe", "rerank")
+
+
 @dataclass
 class _Stats:
     batch_sizes: list = field(default_factory=list)
     latencies: list = field(default_factory=list)
+    # accumulated per-stage seconds over every batch served: padding-ladder
+    # shaping, signature generation, probe+top-k (the device sync point),
+    # SW re-rank. Coarse wall-clock attribution — jax dispatch is async, so
+    # work issued in one stage can complete inside the next sync point;
+    # the probe stage carries that slack (documented in stats()).
+    stage: dict = field(default_factory=lambda: dict.fromkeys(_STAGES, 0.0))
+    truncations: int = 0            # batches whose probe hit max_probe_cap
 
 
 class QueryEngine:
@@ -309,8 +319,10 @@ class QueryEngine:
 
         t0 = time.perf_counter()
         pids, plens = self._pad_shapes(ids, lens)
+        t_ladder = time.perf_counter()
         q_sigs = self.sl.signatures(pids, plens)
         q_valid = np.asarray(self.sl.feature_counts(pids, plens)) > 0
+        t_sig = time.perf_counter()
 
         k = self.cfg.k
         truncated = False
@@ -325,6 +337,7 @@ class QueryEngine:
                 self.index, q_sigs, k=k, cap=self._probe_cap,
                 max_cap=self.cfg.max_probe_cap)
         if truncated:
+            self._stats.truncations += 1
             warnings.warn(
                 f"probe candidates truncated at max_probe_cap="
                 f"{self.cfg.max_probe_cap}; top-k may miss neighbors — "
@@ -332,15 +345,21 @@ class QueryEngine:
                 stacklevel=2)
         nid = np.array(nid)     # writable host copies
         nd = np.array(nd)
+        t_probe = time.perf_counter()
         nid[~q_valid] = -1
         nd[~q_valid] = -1
         nid, nd = nid[:B0], nd[:B0]
         if self.cfg.rerank:
             nid, nd = self._rerank(ids, lens, nid, nd)
 
-        dt = time.perf_counter() - t0
+        t_end = time.perf_counter()
+        st = self._stats.stage
+        st["ladder"] += t_ladder - t0
+        st["sig"] += t_sig - t_ladder
+        st["probe"] += t_probe - t_sig
+        st["rerank"] += t_end - t_probe
         self._stats.batch_sizes.append(B0)
-        self._stats.latencies.append(dt)
+        self._stats.latencies.append(t_end - t0)
         return nid, nd
 
     def _mode(self) -> str:
@@ -424,12 +443,19 @@ class QueryEngine:
         """Latency/throughput summary over every batch served so far.
         ``index_epoch`` is the backing index's segment counter — it moves
         when the engine serves across a live refresh (``index.add`` landed
-        between batches) without the engine being rebuilt."""
+        between batches) without the engine being rebuilt. ``stage_ms``
+        splits the accumulated wall-clock by serving stage
+        (ladder/sig/probe/rerank; jax dispatch is async, so the probe
+        stage — the device sync point — absorbs work issued earlier);
+        ``truncations`` counts batches whose probe overflowed even at
+        ``max_probe_cap`` (the no-silent-caps counter)."""
         lat = np.asarray(self._stats.latencies)
         nq = int(np.sum(self._stats.batch_sizes))
+        stage_ms = {s: v * 1e3 for s, v in self._stats.stage.items()}
         if len(lat) == 0:
             return dict(n_queries=0, n_batches=0, qps=0.0,
-                        p50_ms=0.0, p95_ms=0.0, mean_ms=0.0,
+                        p50_ms=0.0, p95_ms=0.0, p99_ms=0.0, mean_ms=0.0,
+                        stage_ms=stage_ms, truncations=0,
                         index_epoch=self.index.epoch)
         return dict(
             n_queries=nq,
@@ -437,6 +463,9 @@ class QueryEngine:
             qps=nq / float(lat.sum()),
             p50_ms=float(np.percentile(lat, 50) * 1e3),
             p95_ms=float(np.percentile(lat, 95) * 1e3),
+            p99_ms=float(np.percentile(lat, 99) * 1e3),
             mean_ms=float(lat.mean() * 1e3),
+            stage_ms=stage_ms,
+            truncations=self._stats.truncations,
             index_epoch=self.index.epoch,
         )

@@ -8,13 +8,24 @@ signature rows* — no shard ever holds the full (N, nw) signature matrix,
 so index memory scales down with the mesh. Serving probes run
 shard-local: the query batch is split into per-shard blocks that rotate
 around the mesh with ``ppermute`` (the ``ring_sweep`` discipline from
-:mod:`repro.core.mapreduce`), each hop probing the resident slab
-(searchsorted core shared with the single-device probe,
-``_probe_csr_positions``) and folding the matches into the block's
-carried top-k. After ``n_shards`` hops every block has visited every
-bucket owner and carries its global top-k home — no dense sweep, no
-global-id arithmetic (buckets store global ids directly), and per-hop
-communication is just the rotating query block + its k-row accumulator.
+:mod:`repro.core.mapreduce`) in a **two-phase** sweep:
+
+* **phase 1 — collect**: each hop only *searchsorts* the resident slab
+  (core shared with the single-device probe, ``_probe_csr_positions``)
+  and writes the candidate ids + their signature rows into the block's
+  carried candidate buffers. A (band, key) bucket is owned by exactly
+  one shard, so each buffer slot is written on exactly one hop — the
+  non-owning hops touch nothing.
+* **phase 2 — score at home**: after ``n_shards`` hops the buffers are
+  back at the block's home shard, which runs ONE Hamming-distance pass
+  over the collected ``nb*cap`` candidates, then the shared dedup +
+  top-k tail. The old ring scored all ``nb*cap`` visiting slots on
+  *every* hop even though non-owners match nothing — ``n_shards``-fold
+  more distance work (and a per-hop top-k merge) for the same result.
+
+No dense sweep, no global-id arithmetic (buckets store global ids
+directly); per-hop communication is the rotating query keys + the
+candidate id/signature buffers.
 
 Growth is a **delta refresh**, not a re-place: references appended with
 ``index.add()`` arrive as sealed segments, and because
@@ -29,12 +40,14 @@ re-places everything into one base slab; probe results are identical
 before and after.
 
 Exactness: buckets are never split across shards, so the union of
-per-shard probes is exactly the single-device candidate set; the carried
-top-k merges under the total order (distance, id) via the shared
-``_dedup_candidates`` tie-break, so results are bit-exact with
-:func:`repro.index.service.topk_probe` for every ``n_shards`` — including
-tie-breaks — and overflow detection (true matched-bucket size vs cap) is
-the max over all (shard, hop) probes, the same grow-and-retry contract.
+per-shard collections is exactly the single-device candidate set, the
+collected signature rows are exactly ``ref_sigs[cand]``, and the home
+pass is literally ``topk_probe``'s filter — one Hamming sweep, the shared
+``_dedup_candidates`` (distance, id) tie-break, one top-k — so results
+are bit-exact with :func:`repro.index.service.topk_probe` for every
+``n_shards`` — including tie-breaks — and overflow detection (true
+matched-bucket size vs cap) is the max over all (shard, hop) probes, the
+same grow-and-retry contract.
 Both layouts partition identically — the flip layout's single expanded
 table is just ``n_bands == 1`` (tested under sharding in
 tests/test_sharding.py).
@@ -42,6 +55,7 @@ tests/test_sharding.py).
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -80,69 +94,84 @@ def _merge_topk(best_id, best_d, cand, dist, k: int):
 @functools.lru_cache(maxsize=128)
 def _ring_program(devices: tuple, axis_name: str, Bl: int, cap: int, k: int,
                   has_delta: bool):
-    """The jitted shard_map ring program, cached at MODULE level by the
-    device tuple (never a Mesh object or a replica instance) — the same
-    keying lesson as the self-join's emission cache: equal meshes and
+    """The jitted two-phase shard_map ring program, cached at MODULE level
+    by the device tuple (never a Mesh object or a replica instance) — the
+    same keying lesson as the self-join's emission cache: equal meshes and
     every replica over them share one compiled program, so constructing a
     new ShardedIndex (or refreshing one) never silently recompiles a ring
-    it has already paid for. The ``has_delta`` variant probes the base and
-    delta slabs each hop and sums their matched-bucket sizes (the
+    it has already paid for. The ``has_delta`` variant collects from the
+    base and delta slabs each hop and sums their matched-bucket sizes (the
     merged-table overflow contract)."""
     ax = axis_name
     mesh = Mesh(np.array(devices), (ax,))
     n = len(devices)
     perm = [(i, (i + 1) % n) for i in range(n)]
 
-    def probe_slab(qk_c, qs_c, keys_l, offs_l, ids_l, esig_l):
-        """All bands' probe + local-sig Hamming filter on one slab:
-        -> cand/dist (nb, Bl, cap), size (nb, Bl)."""
+    def collect_slab(qk_c, keys_l, offs_l, ids_l, esig_l):
+        """Phase-1 collection on one slab: candidate ids + their signature
+        rows for the slots this shard owns -> cand (nb, Bl, cap) int32
+        (-1 where unmatched), sig (nb, Bl, cap, nw), size (nb, Bl). No
+        distance work — that happens once, at home."""
         E = ids_l.shape[1]
 
-        def probe_band(qk_b, keys_b, offs_b, ids_b, esig_b):
+        def collect_band(qk_b, keys_b, offs_b, ids_b, esig_b):
             idx, ok, size = _probe_csr_positions(qk_b, keys_b, offs_b,
                                                  cap=cap, E=E)
             cand = jnp.where(ok, ids_b[idx], -1)
-            dist = hamming_distance(qs_c[:, None, :], esig_b[idx])
-            return cand, jnp.where(ok, dist, BIG), size
+            sig = jnp.where(ok[..., None], esig_b[idx], 0)
+            return cand, sig, size
 
-        return jax.vmap(probe_band, in_axes=(1, 0, 0, 0, 0))(
+        return jax.vmap(collect_band, in_axes=(1, 0, 0, 0, 0))(
             qk_c, keys_l, offs_l, ids_l, esig_l)
 
     def shard_fn(qk, qs, *slabs):
         # qk (Bl, nb), qs (Bl, nw) — this shard's starting query block;
         # slabs arrive (1, nb, ...) after the P(ax) split: base
-        # (keys, offs, ids, esig) then, when present, the delta four
+        # (keys, offs, ids, esig) then, when present, the delta four.
+        # qs never rotates: the one distance pass runs at home (phase 2).
         base = tuple(a[0] for a in slabs[:4])
         delta = tuple(a[0] for a in slabs[4:8]) if has_delta else None
+        nw = base[3].shape[-1]
+        C = qk.shape[1] * cap * (2 if has_delta else 1)
 
         def hop(carry, _):
-            qk_c, qs_c, bid, bd, msz = carry
-            cand, dist, size = probe_slab(qk_c, qs_c, *base)
+            qk_c, idb, sgb, msz = carry
+            cand, sig, size = collect_slab(qk_c, *base)
             if delta is not None:
-                c2, d2, s2 = probe_slab(qk_c, qs_c, *delta)
+                c2, s2, z2 = collect_slab(qk_c, *delta)
                 # a bucket split across base+delta is ONE bucket of the
                 # merged table: candidates union, true size is the sum
                 cand = jnp.concatenate([cand, c2], axis=2)
-                dist = jnp.concatenate([dist, d2], axis=2)
-                size = size + s2
-            # (nb, Bl, C) -> (Bl, nb*C), the fused-probe layout
+                sig = jnp.concatenate([sig, s2], axis=2)
+                size = size + z2
+            # (nb, Bl, cap) -> (Bl, nb*cap), the fused-probe layout
             cand = jnp.transpose(cand, (1, 0, 2)).reshape(Bl, -1)
-            dist = jnp.transpose(dist, (1, 0, 2)).reshape(Bl, -1)
-            bid, bd = _merge_topk(bid, bd, cand, dist, k)
+            sig = jnp.transpose(sig, (1, 0, 2, 3)).reshape(Bl, -1, nw)
+            ok = cand >= 0
+            # each (query, band) bucket is owned by exactly one shard, so
+            # each slot is written on exactly one hop — where() is a union
+            idb = jnp.where(ok, cand, idb)
+            sgb = jnp.where(ok[..., None], sig, sgb)
             msz = jnp.maximum(msz, jnp.max(size))
-            # rotate the block and its accumulator one hop (ring_sweep
-            # discipline); after n hops it is home with its global top-k
+            # rotate the block's keys and candidate buffers one hop
+            # (ring_sweep discipline); after n hops they are home
             qk_c = jax.lax.ppermute(qk_c, ax, perm)
-            qs_c = jax.lax.ppermute(qs_c, ax, perm)
-            bid = jax.lax.ppermute(bid, ax, perm)
-            bd = jax.lax.ppermute(bd, ax, perm)
-            return (qk_c, qs_c, bid, bd, msz), None
+            idb = jax.lax.ppermute(idb, ax, perm)
+            sgb = jax.lax.ppermute(sgb, ax, perm)
+            return (qk_c, idb, sgb, msz), None
 
-        init = (qk, qs,
-                jnp.full((Bl, k), -1, jnp.int32),
-                jnp.full((Bl, k), BIG, jnp.int32),
+        init = (qk,
+                jnp.full((Bl, C), -1, jnp.int32),
+                jnp.zeros((Bl, C, nw), jnp.uint32),
                 jnp.zeros((), jnp.int32))
-        (_, _, bid, bd, msz), _ = jax.lax.scan(hop, init, None, length=n)
+        (_, idb, sgb, msz), _ = jax.lax.scan(hop, init, None, length=n)
+        # phase 2: ONE Hamming pass over the collected candidates at home,
+        # then the shared dedup + top-k tail — exactly topk_probe's filter
+        dist = hamming_distance(qs[:, None, :], sgb)
+        dist = jnp.where(idb >= 0, dist, BIG)
+        bid, bd = _merge_topk(jnp.full((Bl, k), -1, jnp.int32),
+                              jnp.full((Bl, k), BIG, jnp.int32),
+                              idb, dist, k)
         return bid, bd, msz[None]
 
     n_args = 10 if has_delta else 6
@@ -168,6 +197,16 @@ class ShardedIndex:
                              f"{axis_name!r}")
         self.mesh = mesh
         self.n_shards = mesh.shape[axis_name]
+        # Serializes this replica's slab swaps AND the backing index's
+        # lazy lifecycle mutations (seal/merge/partition) that refresh
+        # triggers. Reentrant because refresh() takes it and is also
+        # called under it from _refresh_if_stale. A replica fleet
+        # (repro.serve.fleet) swaps in ONE lock shared by every replica
+        # and the ingest thread, so a concurrent ``index.add()`` can
+        # never interleave with a replica sealing/partitioning the same
+        # segments (torn reads). Single-threaded use pays one uncontended
+        # RLock acquire per staleness check.
+        self.refresh_lock = threading.RLock()
         self._place()
 
     # ------------------------------------------------------------ placement
@@ -217,39 +256,43 @@ class ShardedIndex:
         (generation bump), the base is empty, or the delta has outgrown
         the base (at which point merging is cheaper than carrying both).
         """
-        index = self.index
-        index.seal()
-        if index.generation != self._gen:
-            self._place()           # compaction collapsed our base segments
-            return
-        if index.epoch == self._delta_epoch:
-            return                  # nothing new
-        base_keys = self._slabs[0]
-        if base_keys.shape[2] == 0:     # empty base: just re-place
-            self._place()
-            return
-        dpart = self.index.delta_partition(self.n_shards, self._base_epoch)
-        if int(dpart.n_entries.sum()) >= int(self._part.n_entries.sum()):
-            self._place()           # delta outgrew base: compact placement
-            return
-        if int(dpart.n_buckets.sum()) == 0:    # only invalid rows arrived
+        with self.refresh_lock:
+            index = self.index
+            index.seal()
+            if index.generation != self._gen:
+                self._place()       # compaction collapsed our base segments
+                return
+            if index.epoch == self._delta_epoch:
+                return              # nothing new
+            base_keys = self._slabs[0]
+            if base_keys.shape[2] == 0:     # empty base: just re-place
+                self._place()
+                return
+            dpart = self.index.delta_partition(self.n_shards,
+                                               self._base_epoch)
+            if int(dpart.n_entries.sum()) >= int(self._part.n_entries.sum()):
+                self._place()       # delta outgrew base: compact placement
+                return
+            if int(dpart.n_buckets.sum()) == 0:  # only invalid rows arrived
+                self._delta_epoch = index.epoch
+                return
+            self._delta = None      # drop the old delta before realloc
+            delta_slabs, delta_esigs = self._put(dpart, quantize=True)
+            self._delta = (delta_slabs, delta_esigs)
+            self._delta_part = dpart
             self._delta_epoch = index.epoch
-            return
-        self._delta = None          # drop the old delta before realloc
-        delta_slabs, delta_esigs = self._put(dpart, quantize=True)
-        self._delta = (delta_slabs, delta_esigs)
-        self._delta_part = dpart
-        self._delta_epoch = index.epoch
 
     def compact(self) -> None:
         """Fold the delta slabs back into one base placement (serving-side
         compaction; probe results are identical before and after)."""
-        self._place()
+        with self.refresh_lock:
+            self._place()
 
     def _refresh_if_stale(self) -> None:
-        if (self.index.generation, self.index.epoch) != \
-                (self._gen, self._delta_epoch):
-            self.refresh()
+        with self.refresh_lock:
+            if (self.index.generation, self.index.epoch) != \
+                    (self._gen, self._delta_epoch):
+                self.refresh()
 
     @property
     def size(self) -> int:

@@ -13,6 +13,13 @@ and a live serving replica ingests the delta without a full reload;
       --n-refs 2048 --n-queries 256 --batch 32 --k 5 --d 1 \
       --index /tmp/scallops_idx [--shards 4] [--rerank] [--layout flip] \
       [--add-fasta new_refs.fasta] [--compact]
+
+With ``--replicas N`` the queries go through the asynchronous serving
+tier instead (:mod:`repro.serve`): N sharded replicas behind a
+least-outstanding router, futures-based ``submit()`` with
+``--deadline-ms`` admission control and a ``--max-wait-ms`` dispatch
+policy; ``--add-fasta`` then ingests through the fleet's background
+loop while serving stays live.
 """
 from __future__ import annotations
 
@@ -21,6 +28,91 @@ import os
 import sys
 import tempfile
 import time
+
+
+def _serve_async(args, data, loaded, mesh, ref_seqs, scfg, path):
+    """Serve through the async tier: ReplicaFleet + AsyncEngine, one
+    future per query, with ``--add-fasta`` ingested live mid-stream."""
+    import numpy as np
+
+    from ..serve import AsyncEngine, ReplicaFleet
+
+    fleet = ReplicaFleet(loaded, scfg, n_replicas=args.replicas,
+                         mesh=mesh, ref_seqs=ref_seqs)
+    eng = AsyncEngine(fleet, max_wait_ms=args.max_wait_ms,
+                      default_deadline_ms=args.deadline_ms)
+    print(f"[async] {args.replicas} replica(s) x "
+          f"{fleet._replicas[0].sharded.n_shards} shard(s), "
+          f"max_wait={args.max_wait_ms}ms, "
+          f"deadline={args.deadline_ms or 'none'}"
+          f"{'' if args.deadline_ms is None else 'ms'}")
+    # warm-up: replicas share the compiled ring program, one compile total
+    fleet.query_batch(data["query_ids"][:args.batch],
+                      data["query_lens"][:args.batch])
+
+    qids, qlens = data["query_ids"], data["query_lens"]
+    ingest_ev = None
+    new_count = 0
+    futures = []
+    t0 = time.time()
+    for i in range(len(qlens)):
+        if args.add_fasta and i == len(qlens) // 2:
+            # ingest the delta while requests are still streaming in:
+            # serving never pauses, replicas refresh off-rotation
+            from ..data.fasta import load_fasta_encoded
+            _names, new_ids, new_lens = load_fasta_encoded(args.add_fasta)
+            new_count = len(new_lens)
+            ingest_ev = fleet.ingest(new_ids, new_lens)
+        futures.append(eng.submit(qids[i][:qlens[i]]))
+    results = [f.result(timeout=120) for f in futures]
+    wall = time.time() - t0
+
+    hits = served = shed = 0
+    epochs = {}
+    for r, (parent, _rate) in zip(results, data["truth"]):
+        if not r.ok:
+            shed += 1
+            continue
+        served += 1
+        epochs[r.epoch] = epochs.get(r.epoch, 0) + 1
+        if parent >= 0 and parent in set(r.ids[r.ids >= 0]):
+            hits += 1
+    if ingest_ev is not None:
+        ingest_ev.wait(timeout=120)
+        loaded.save(path)               # appends ONLY the new segment
+        print(f"[add]   +{new_count} refs ingested LIVE mid-stream -> "
+              f"epoch {loaded.epoch}; served epochs "
+              f"{dict(sorted(epochs.items()))} (every result tagged with "
+              f"the index state it was answered at)")
+
+    s = eng.stats()
+    lat, qlat = s["latency"], s["queue"]
+    n_hom = sum(1 for p, _ in data["truth"] if p >= 0)
+    print(f"[serve] {served}/{len(results)} queries in {wall:.2f}s — "
+          f"{served / max(wall, 1e-9):.0f} q/s, "
+          f"p50={lat['p50_ms']:.1f}ms p95={lat['p95_ms']:.1f}ms "
+          f"p99={lat['p99_ms']:.1f}ms (queue p95={qlat['p95_ms']:.1f}ms, "
+          f"{s['counters']['batches']} batches, "
+          f"shed={shed}, k={args.k})")
+    print(f"[quality] planted homologs in top-{args.k}: "
+          f"{hits}/{n_hom} ({hits / max(n_hom, 1):.0%})")
+
+    if args.compact:
+        before = fleet.query_batch(qids[:args.batch], qlens[:args.batch])
+        t1 = time.time()
+        fleet.compact_index()
+        loaded.save(path)
+        after = fleet.query_batch(qids[:args.batch], qlens[:args.batch])
+        same = (np.array_equal(before[0], after[0])
+                and np.array_equal(before[1], after[1]))
+        print(f"[compact] {time.time() - t1:.2f}s -> epoch {loaded.epoch} "
+              f"gen {loaded.generation} (rolling, serving stayed live); "
+              f"probe results "
+              f"{'identical' if same else 'DIVERGED (BUG)'}")
+        if not same:
+            raise SystemExit(1)
+    eng.close()
+    fleet.close()
 
 
 def main(argv=None):
@@ -61,6 +153,23 @@ def main(argv=None):
                          "--index is rewritten as a single segment)")
     ap.add_argument("--rerank", action="store_true",
                     help="Smith-Waterman re-rank of the top-k")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through the ASYNC tier: this many "
+                         "ShardedIndex replicas behind a least-outstanding "
+                         "router with futures-based submit() and a "
+                         "background ingest loop (0 = the synchronous "
+                         "QueryEngine path). Replicas share compiled ring "
+                         "programs, so N replicas cost one compile")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for the async tier: "
+                         "requests whose queue time + predicted batch "
+                         "cost exceed it are shed with a typed Rejected "
+                         "outcome instead of served late (default: no "
+                         "deadline, nothing is shed)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="async dispatch policy: a micro-batch launches "
+                         "at --batch requests or when its oldest request "
+                         "has waited this long (0 = greedy)")
     args = ap.parse_args(argv)
 
     if args.shards > 1 and "XLA_FLAGS" not in os.environ:
@@ -110,7 +219,7 @@ def main(argv=None):
     print(f"[load]  verified fingerprint in {time.time()-t0:.2f}s "
           f"(epoch={loaded.epoch})")
 
-    sharded = None
+    mesh = None
     if args.shards > 1:
         from jax.sharding import Mesh
         if jax.device_count() < args.shards:
@@ -120,14 +229,24 @@ def main(argv=None):
         # mesh sized by --shards (== the index's persisted n_shards), not
         # by whatever the process happens to expose
         mesh = Mesh(np.array(jax.devices()[:args.shards]), ("data",))
+
+    ref_seqs = (data["ref_ids"], data["ref_lens"])
+    scfg = ServingConfig(k=args.k, max_batch=args.batch, rerank=args.rerank)
+
+    if args.replicas >= 1:
+        _serve_async(args, data, loaded, mesh, ref_seqs, scfg, path)
+        if args.index is None:
+            import shutil
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+        return
+
+    sharded = None
+    if mesh is not None:
         sharded = ShardedIndex(loaded, mesh)
         part = sharded._part
         print(f"[shard] {int(part.n_buckets.sum())} buckets over "
               f"{sharded.n_shards} devices (per-shard buckets "
               f"{part.n_buckets.tolist()}, entries {part.n_entries.tolist()})")
-
-    ref_seqs = (data["ref_ids"], data["ref_lens"])
-    scfg = ServingConfig(k=args.k, max_batch=args.batch, rerank=args.rerank)
     engine = QueryEngine(loaded, scfg, sharded=sharded, ref_seqs=ref_seqs)
     mode = "sharded-probe" if sharded is not None else engine._mode()
     print(f"[mode]  {mode} serving (probe candidates are exact within "

@@ -1,0 +1,33 @@
+"""repro.serve — the asynchronous serving tier over the index substrate.
+
+The ROADMAP north star ("heavy traffic from millions of users") needs
+more than a fast probe: it needs an always-on tier that holds latency
+SLOs under concurrent load while the index grows underneath it. This
+package is that tier, built entirely on the PR 4/5 machinery:
+
+* ``engine``  — :class:`AsyncEngine`: futures-based ``submit()``, a
+  background dispatch thread draining a bounded queue into the
+  padding-ladder micro-batcher (bit-exact with the synchronous
+  ``flush()`` path), max-wait/max-batch dispatch policy, and
+  deadline-aware admission control with typed :class:`Completed` /
+  :class:`Rejected` outcomes.
+* ``fleet``   — :class:`ReplicaFleet`: N ``ShardedIndex`` replicas behind
+  a least-outstanding router, with a background ingest loop
+  (``add()`` → rolling per-replica delta ``refresh()`` → periodic minor
+  compaction) that never takes a replica out of rotation unserved —
+  epoch-tagged handoff per batch.
+* ``metrics`` — rolling p50/p95/p99 windows and shed/truncation counters
+  behind ``stats()``.
+
+The closed-loop SLO benchmark lives in ``benchmarks/serve_slo.py``
+(offered-QPS sweep, latency knee, ``BENCH_serve.json``).
+"""
+from .engine import AsyncEngine, Completed, Rejected
+from .fleet import ReplicaFleet
+from .metrics import Counters, Rolling
+
+__all__ = [
+    "AsyncEngine", "Completed", "Rejected",
+    "ReplicaFleet",
+    "Counters", "Rolling",
+]

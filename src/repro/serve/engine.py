@@ -1,0 +1,309 @@
+"""Futures-based asynchronous query engine with deadline admission control.
+
+``QueryEngine.flush`` is synchronous: every caller blocks on the whole
+micro-batch. This module turns the same serving path into an always-on
+tier: :meth:`AsyncEngine.submit` enqueues one query into a **bounded**
+request queue and returns a :class:`concurrent.futures.Future`
+immediately; a background dispatch thread drains the queue into the
+engine's padding-ladder micro-batcher under a **max-wait / max-batch**
+policy and resolves each future with a typed outcome:
+
+* :class:`Completed` — per-query top-k ids/dists, **bit-exact with the
+  synchronous ``flush()`` path**: the dispatcher assembles exactly the
+  arrays ``flush`` would, and every per-query result is independent of
+  batch composition (the padding ladder serves PAD rows that can match
+  nothing), so how requests happen to batch can never change an answer
+  (asserted in tests/test_serve.py under interleaved submits).
+* :class:`Rejected` — admission control shed the request: the queue was
+  full at submit (back-pressure at the door, the submitter never blocks),
+  or at dispatch time ``queue_time + predicted_batch_cost`` exceeded the
+  request's deadline (the batch it would join cannot finish in time, so
+  serving it would only waste device time that on-deadline requests need).
+  Typed results — not exceptions — so closed-loop load generators count
+  sheds without try/except in the hot loop.
+
+Batch cost is predicted per padding-ladder rung with an EWMA of measured
+batch latencies — the ladder quantizes batch shapes anyway, so the rung
+is the natural cost-model key. The clock is injectable (``clock=``) which
+makes shedding decisions deterministic under a fake clock in tests.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.alphabet import PAD, encode
+from .metrics import Counters, Rolling
+
+#: EWMA smoothing for the per-rung batch-cost model (higher = faster
+#: adaptation to load shifts, lower = steadier admission decisions).
+COST_ALPHA = 0.3
+
+
+@dataclass(frozen=True)
+class Completed:
+    """A served request: top-k neighbor ids/dists (-1 padded), the index
+    epoch the serving replica answered at (the PR 5 "valid at some epoch"
+    contract made visible), and queue/batch timing."""
+    ids: np.ndarray
+    dists: np.ndarray
+    epoch: int | None
+    queued_ms: float
+    batch_ms: float
+
+    @property
+    def ok(self) -> bool:
+        return True
+
+
+@dataclass(frozen=True)
+class Rejected:
+    """A shed request. ``reason`` is one of ``"queue_full"`` (bounded
+    queue was full at submit), ``"deadline"`` (queue time + predicted
+    batch cost exceeded the request deadline at dispatch), or
+    ``"shutdown"`` (engine closed with the request still queued)."""
+    reason: str
+    queued_ms: float = 0.0
+    predicted_ms: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return False
+
+
+@dataclass
+class _Request:
+    row: np.ndarray
+    length: int
+    t_submit: float
+    deadline: float | None          # absolute clock() seconds, or None
+    future: Future = field(default_factory=Future)
+
+
+def _resolve(fut: Future, value) -> None:
+    """Resolve a future, tolerating caller-side cancellation."""
+    try:
+        fut.set_result(value)
+    except InvalidStateError:
+        pass
+
+
+class AsyncEngine:
+    """Background dispatch thread over a synchronous serving backend.
+
+    ``backend`` is anything with a ``cfg`` (:class:`ServingConfig` — the
+    ladder and max_batch come from there) and a ``query_batch(ids, lens)``
+    returning ``(nid, nd)`` or ``(nid, nd, epoch)`` — a single
+    :class:`~repro.index.service.QueryEngine` or a
+    :class:`~repro.serve.fleet.ReplicaFleet`.
+
+    * ``max_wait_ms`` — dispatch policy: a batch launches when it reaches
+      ``cfg.max_batch`` requests or the oldest member has waited this
+      long, whichever comes first (0 = greedy: take whatever is queued).
+    * ``queue_depth`` — bound on queued requests; submits beyond it
+      resolve immediately to ``Rejected("queue_full")``.
+    * ``default_deadline_ms`` — applied to submits that pass no deadline
+      (None = no deadline, never shed for time).
+    * ``clock`` — injectable monotonic clock (tests use a fake one to
+      make admission decisions deterministic).
+    * ``start=False`` skips the thread; tests drive :meth:`_drain_once`.
+    """
+
+    def __init__(self, backend, *, max_wait_ms: float = 2.0,
+                 queue_depth: int = 1024,
+                 default_deadline_ms: float | None = None,
+                 clock=time.monotonic, window: int = 4096,
+                 start: bool = True):
+        self.backend = backend
+        self.max_batch = int(backend.cfg.max_batch)
+        self._ladder = tuple(backend.cfg.batch_ladder)
+        self.max_wait = float(max_wait_ms) / 1e3
+        self.default_deadline = (None if default_deadline_ms is None
+                                 else float(default_deadline_ms) / 1e3)
+        self._clock = clock
+        self._q: queue.Queue = queue.Queue(maxsize=int(queue_depth))
+        self._cost_ms: dict[int, float] = {}    # ladder rung -> EWMA ms
+        self.counters = Counters("submitted", "completed", "shed_queue_full",
+                                 "shed_deadline", "shed_shutdown",
+                                 "batches")
+        self.queue_lat = Rolling(window)        # submit -> dispatch seconds
+        self.total_lat = Rolling(window)        # submit -> resolve seconds
+        self._closed = threading.Event()
+        self._thread = None
+        if start:
+            self._thread = threading.Thread(
+                target=self._loop, name="serve-dispatch", daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------ submit
+    def submit(self, seq, *, deadline_ms: float | None = None) -> Future:
+        """Enqueue one query (amino-acid string or encoded int8 row);
+        returns a future resolving to :class:`Completed` or
+        :class:`Rejected`. Never blocks: a full queue is an immediate
+        typed rejection (back-pressure belongs to the caller, not a
+        hidden ``put()`` stall)."""
+        if isinstance(seq, str):
+            row = np.asarray(encode(seq), np.int8)
+        else:
+            row = np.asarray(seq, np.int8).reshape(-1)
+        now = self._clock()
+        if deadline_ms is not None:
+            deadline = now + float(deadline_ms) / 1e3
+        elif self.default_deadline is not None:
+            deadline = now + self.default_deadline
+        else:
+            deadline = None
+        req = _Request(row, len(row), now, deadline)
+        self.counters.bump("submitted")
+        if self._closed.is_set():
+            self.counters.bump("shed_shutdown")
+            _resolve(req.future, Rejected("shutdown"))
+            return req.future
+        try:
+            self._q.put_nowait(req)
+        except queue.Full:
+            self.counters.bump("shed_queue_full")
+            _resolve(req.future, Rejected("queue_full"))
+        return req.future
+
+    def pending(self) -> int:
+        return self._q.qsize()
+
+    # ------------------------------------------------------------ dispatch
+    def _rung(self, b: int) -> int:
+        """Padding-ladder rung a batch of ``b`` requests lands on (the
+        cost-model key — mirrors ``QueryEngine._pad_shapes``)."""
+        ladder = [x for x in self._ladder if x >= b]
+        return min(ladder) if ladder else self.max_batch
+
+    def predicted_ms(self, b: int) -> float:
+        """Predicted wall-clock of serving a batch of ``b`` requests:
+        the EWMA for its ladder rung; optimistic 0 until that rung has
+        been measured (first batches admit everything, then the model
+        takes over)."""
+        return self._cost_ms.get(self._rung(b), 0.0)
+
+    def _update_cost(self, b: int, seconds: float) -> None:
+        r = self._rung(b)
+        ms = seconds * 1e3
+        old = self._cost_ms.get(r)
+        self._cost_ms[r] = ms if old is None else \
+            COST_ALPHA * ms + (1.0 - COST_ALPHA) * old
+
+    def _collect(self, timeout: float) -> list:
+        """Gather one batch under the max-wait/max-batch policy."""
+        try:
+            batch = [self._q.get(timeout=timeout)]
+        except queue.Empty:
+            return []
+        t_first = self._clock()
+        while len(batch) < self.max_batch:
+            wait = self.max_wait - (self._clock() - t_first)
+            if wait <= 0:
+                try:                        # greedy: only what's queued
+                    batch.append(self._q.get_nowait())
+                except queue.Empty:
+                    break
+            else:
+                try:
+                    batch.append(self._q.get(timeout=wait))
+                except queue.Empty:
+                    break
+        return batch
+
+    def _drain_once(self, timeout: float = 0.05) -> int:
+        """One dispatch iteration: collect, admit/shed, serve, resolve.
+        Returns the number of requests taken off the queue."""
+        batch = self._collect(timeout)
+        if not batch:
+            return 0
+        now = self._clock()
+        predicted = self.predicted_ms(len(batch))
+        admitted = []
+        for r in batch:
+            # queue time is already inside `now`; shedding asks whether
+            # the batch this request would join can finish by its deadline
+            if r.deadline is not None and now + predicted / 1e3 > r.deadline:
+                self.counters.bump("shed_deadline")
+                _resolve(r.future, Rejected(
+                    "deadline", queued_ms=(now - r.t_submit) * 1e3,
+                    predicted_ms=predicted))
+            else:
+                admitted.append(r)
+        if not admitted:
+            return len(batch)
+        n = len(admitted)
+        L = max(r.length for r in admitted)
+        ids = np.full((n, max(L, 1)), PAD, np.int8)
+        lens = np.zeros(n, np.int32)
+        for j, r in enumerate(admitted):
+            ids[j, :r.length] = r.row
+            lens[j] = r.length
+        t0 = self._clock()
+        out = self.backend.query_batch(ids, lens)
+        dt = self._clock() - t0
+        if len(out) == 3:
+            nid, nd, epoch = out
+        else:
+            nid, nd = out
+            idx = getattr(self.backend, "index", None)
+            epoch = idx.epoch if idx is not None else None
+        self._update_cost(n, dt)
+        self.counters.bump("batches")
+        done = self._clock()
+        for j, r in enumerate(admitted):
+            self.counters.bump("completed")
+            self.queue_lat.add(t0 - r.t_submit)
+            self.total_lat.add(done - r.t_submit)
+            _resolve(r.future, Completed(
+                nid[j], nd[j], epoch,
+                queued_ms=(t0 - r.t_submit) * 1e3, batch_ms=dt * 1e3))
+        return len(batch)
+
+    def _loop(self) -> None:
+        while not self._closed.is_set():
+            self._drain_once(timeout=0.02)
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self, timeout: float = 30.0) -> None:
+        """Stop dispatch; queued-but-unserved requests resolve to
+        ``Rejected("shutdown")`` (a future from this engine always
+        resolves)."""
+        if self._closed.is_set():
+            return
+        self._closed.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+        while True:
+            try:
+                r = self._q.get_nowait()
+            except queue.Empty:
+                break
+            self.counters.bump("shed_shutdown")
+            _resolve(r.future, Rejected("shutdown"))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        """Engine-level counters + rolling queue/total latency percentiles
+        + the cost model, with the backend's own stats() nested under
+        ``backend`` (per-stage timers, truncations, replica epochs)."""
+        return dict(
+            pending=self.pending(),
+            counters=self.counters.snapshot(),
+            queue=self.queue_lat.snapshot(),
+            latency=self.total_lat.snapshot(),
+            cost_model_ms={str(k): round(v, 3)
+                           for k, v in sorted(self._cost_ms.items())},
+            backend=self.backend.stats(),
+        )

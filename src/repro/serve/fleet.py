@@ -1,0 +1,233 @@
+"""Replica fleet: N sharded serving replicas behind a router + live ingest.
+
+One :class:`~repro.index.store.SignatureIndex` (the corpus is one
+artifact), N :class:`~repro.index.shard.ShardedIndex` replicas over it,
+each wrapped in its own :class:`~repro.index.service.QueryEngine` (every
+replica keeps its own grow-and-retry cap and serving stats). Replicas
+over equal meshes share every compiled ring program — the module-level
+device-tuple cache from PR 5 is what makes an N-replica fleet cost one
+compile, not N.
+
+**Router** — ``query_batch`` picks the replica with the fewest
+outstanding batches (ties broken least-recently-used), *skipping* any
+replica whose lock is held (mid-refresh/compaction) when a free one
+exists — a replica is never taken out of rotation unserved: while the
+ingest thread swaps one replica's slabs, traffic flows to the others, and
+if literally every replica is busy the request waits on the best one
+rather than failing.
+
+**Ingest loop** — a background thread drains ``ingest()`` batches:
+``index.add()`` (+ seal) under the shared lifecycle lock, then a rolling
+per-replica delta ``refresh()`` under each replica's serving lock, then —
+every ``minor_compact_every`` ingests — a rolling serving-side minor
+compaction (``ShardedIndex.compact()``: the delta slab folds into the
+base so steady-state serving returns to the cheap single-slab ring;
+the index's segment files are untouched). Every handoff is epoch-tagged:
+``query_batch`` returns the delta epoch the serving replica answered at,
+so a result is always attributable to a specific index state — the PR 5
+bit-exactness contract ("identical to a compacted rebuild at that
+epoch") extended across threads.
+
+Thread-safety invariants (tests/test_serve.py races them):
+
+* one **lifecycle lock** (installed as every replica's
+  ``ShardedIndex.refresh_lock``) serializes all index mutation —
+  ``add``/``seal``/merge/partition — against every replica's staleness
+  check and refresh, so a probe can never see half-sealed segments;
+* one **serving lock per replica** serializes that replica's slab swaps
+  against its probes, so a ring never runs on half-swapped slabs;
+* lock order is always replica-lock → lifecycle-lock (the inline
+  ``_refresh_if_stale`` inside ``topk`` takes them in that order, and so
+  does the ingest loop), so the pair cannot deadlock.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+from ..index.service import QueryEngine, ServingConfig
+from ..index.shard import ShardedIndex
+from .metrics import Counters
+
+
+class _Replica:
+    __slots__ = ("name", "engine", "sharded", "lock", "outstanding",
+                 "last_used")
+
+    def __init__(self, name: str, engine: QueryEngine,
+                 sharded: ShardedIndex):
+        self.name = name
+        self.engine = engine
+        self.sharded = sharded
+        self.lock = threading.Lock()    # serving lock: probes vs slab swaps
+        self.outstanding = 0
+        self.last_used = 0
+
+
+class ReplicaFleet:
+    """N serving replicas over one index, with live background ingest.
+
+    Exposes the async-engine backend protocol: ``cfg`` and
+    ``query_batch(ids, lens) -> (nid, nd, epoch)`` — plug a fleet
+    straight into :class:`~repro.serve.engine.AsyncEngine`.
+    """
+
+    def __init__(self, index, cfg: ServingConfig | None = None, *,
+                 n_replicas: int = 2, mesh=None, ref_seqs=None,
+                 minor_compact_every: int = 4, start_ingest: bool = True):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.index = index
+        self.cfg = cfg or ServingConfig()
+        self.minor_compact_every = int(minor_compact_every)
+        # ONE lifecycle lock shared by every replica and the ingest
+        # thread (see module docstring); RLock because refresh() both
+        # takes it and runs under it from _refresh_if_stale.
+        self._lifecycle = threading.RLock()
+        self._replicas: list[_Replica] = []
+        for i in range(n_replicas):
+            sharded = ShardedIndex(index, mesh)
+            sharded.refresh_lock = self._lifecycle
+            engine = QueryEngine(index, self.cfg, sharded=sharded,
+                                 ref_seqs=ref_seqs)
+            self._replicas.append(_Replica(f"replica{i}", engine, sharded))
+        self._pick_lock = threading.Lock()
+        self._ticket = 0
+        self.counters = Counters("batches", "ingests", "minor_compactions",
+                                 "major_compactions", "waited_busy")
+        self._ingest_q: queue.Queue = queue.Queue()
+        self._closed = threading.Event()
+        self._ingest_thread = None
+        if start_ingest:
+            self._ingest_thread = threading.Thread(
+                target=self._ingest_loop, name="serve-ingest", daemon=True)
+            self._ingest_thread.start()
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self._replicas)
+
+    # ------------------------------------------------------------ routing
+    def _pick(self) -> _Replica:
+        """Least-outstanding replica, skipping locked ones when possible;
+        ACQUIRES the winner's serving lock (caller releases)."""
+        with self._pick_lock:
+            self._ticket += 1
+            order = sorted(self._replicas,
+                           key=lambda r: (r.outstanding, r.last_used))
+        for rep in order:
+            if rep.lock.acquire(blocking=False):
+                return rep
+        # every replica busy (all mid-batch or mid-refresh): wait on the
+        # least-loaded one — requests queue behind it, they never fail
+        self.counters.bump("waited_busy")
+        rep = order[0]
+        rep.lock.acquire()
+        return rep
+
+    def query_batch(self, ids, lens):
+        """Serve one batch on the best replica: (nid, nd, epoch) with
+        ``epoch`` the delta epoch (index segment count) the replica
+        answered at — results are bit-exact with a synchronous
+        ``topk_probe`` over the index at exactly that epoch."""
+        rep = self._pick()
+        try:
+            with self._pick_lock:
+                rep.outstanding += 1
+                rep.last_used = self._ticket
+            nid, nd = rep.engine.query_batch(ids, lens)
+            # read under rep.lock: this is exactly what the batch saw
+            epoch = rep.sharded.epoch[1]
+        finally:
+            with self._pick_lock:
+                rep.outstanding -= 1
+            rep.lock.release()
+        self.counters.bump("batches")
+        return nid, nd, epoch
+
+    # ------------------------------------------------------------ ingest
+    def ingest(self, ref_ids, ref_lens) -> threading.Event:
+        """Queue a reference batch for background ingest; returns an
+        Event set once every replica serves the new segment. Serving
+        never stops: replicas refresh one at a time off-rotation."""
+        ev = threading.Event()
+        self._ingest_q.put((np.asarray(ref_ids, np.int8),
+                            np.asarray(ref_lens, np.int32), ev))
+        return ev
+
+    def _ingest_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                item = self._ingest_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            self._apply_ingest(*item)
+
+    def _apply_ingest(self, ref_ids, ref_lens, ev) -> None:
+        with self._lifecycle:
+            self.index.add(ref_ids, ref_lens)
+            self.index.seal()       # segments exist before replicas look
+        for rep in self._replicas:  # rolling: one replica off at a time
+            with rep.lock:
+                rep.sharded.refresh()
+        self.counters.bump("ingests")
+        if self.minor_compact_every > 0 and \
+                self.counters["ingests"] % self.minor_compact_every == 0:
+            for rep in self._replicas:
+                with rep.lock:
+                    rep.sharded.compact()
+            self.counters.bump("minor_compactions")
+        ev.set()
+
+    def drain_ingest(self, timeout: float = 60.0) -> bool:
+        """Block until every queued ingest has been applied."""
+        import time as _t
+        t0 = _t.monotonic()
+        while not self._ingest_q.empty():
+            if _t.monotonic() - t0 > timeout:
+                return False
+            _t.sleep(0.005)
+        return True
+
+    def compact_index(self) -> None:
+        """Major compaction: fold the index's segments into one
+        (``generation`` bump) and re-place every replica — rolling, so
+        serving stays live; results are identical before and after."""
+        with self._lifecycle:
+            self.index.compact()
+        for rep in self._replicas:
+            with rep.lock:
+                rep.sharded.refresh()   # generation bump -> full re-place
+        self.counters.bump("major_compactions")
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self, timeout: float = 30.0) -> None:
+        self._closed.set()
+        if self._ingest_thread is not None:
+            self._ingest_thread.join(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        """Fleet counters + per-replica serving stats and epochs."""
+        reps = []
+        for rep in self._replicas:
+            s = rep.engine.stats()
+            s["name"] = rep.name
+            s["outstanding"] = rep.outstanding
+            s["epoch"] = tuple(rep.sharded.epoch)
+            reps.append(s)
+        return dict(
+            n_replicas=self.n_replicas,
+            counters=self.counters.snapshot(),
+            index_epoch=self.index.epoch,
+            index_generation=self.index.generation,
+            replicas=reps,
+        )

@@ -1,0 +1,80 @@
+"""Serving-tier observability primitives: rolling percentiles + counters.
+
+The synchronous :class:`~repro.index.service.QueryEngine` keeps *every*
+batch latency forever — fine for a benchmark pass, wrong for an always-on
+tier where stats() is polled while millions of requests stream through.
+:class:`Rolling` keeps a bounded window (recent behaviour, O(1) memory);
+:class:`Counters` is a plain named-counter bag shared by the async engine
+and the fleet so shed/truncation accounting lives in one shape.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+import numpy as np
+
+
+class Rolling:
+    """Rolling latency window: ``add(seconds)``, read p50/p95/p99 over the
+    most recent ``window`` samples. Thread-safe — the dispatch thread adds
+    while callers snapshot."""
+
+    def __init__(self, window: int = 4096):
+        self._buf: deque = deque(maxlen=int(window))
+        self._n = 0                     # total ever added (not windowed)
+        self._lock = threading.Lock()
+
+    def add(self, seconds: float) -> None:
+        with self._lock:
+            self._buf.append(float(seconds))
+            self._n += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._buf)
+
+    @property
+    def total(self) -> int:
+        """Samples ever added (the window only bounds what percentiles
+        are computed over)."""
+        with self._lock:
+            return self._n
+
+    def snapshot(self) -> dict:
+        """{count, total, p50_ms, p95_ms, p99_ms, mean_ms} over the
+        current window (zeros when empty)."""
+        with self._lock:
+            arr = np.asarray(self._buf, dtype=np.float64)
+            n = self._n
+        if arr.size == 0:
+            return dict(count=0, total=n, p50_ms=0.0, p95_ms=0.0,
+                        p99_ms=0.0, mean_ms=0.0)
+        return dict(
+            count=int(arr.size),
+            total=n,
+            p50_ms=float(np.percentile(arr, 50) * 1e3),
+            p95_ms=float(np.percentile(arr, 95) * 1e3),
+            p99_ms=float(np.percentile(arr, 99) * 1e3),
+            mean_ms=float(arr.mean() * 1e3),
+        )
+
+
+class Counters:
+    """Thread-safe named counters (shed reasons, ingests, compactions)."""
+
+    def __init__(self, *names: str):
+        self._lock = threading.Lock()
+        self._c = {n: 0 for n in names}
+
+    def bump(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            self._c[name] = self._c.get(name, 0) + by
+
+    def __getitem__(self, name: str) -> int:
+        with self._lock:
+            return self._c.get(name, 0)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self._c)

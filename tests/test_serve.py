@@ -1,0 +1,358 @@
+"""The async serving tier (repro.serve): futures engine, admission
+control, replica fleet, and observability.
+
+The invariants pinned here:
+
+* **batching can't change answers** — a future resolved by the async
+  dispatcher carries exactly what the synchronous ``flush()`` path would
+  have returned for the same query, however the submits happened to
+  batch (the padding ladder serves PAD rows that match nothing);
+* **shedding is deterministic** — under an injectable clock and a preset
+  cost model, which requests get ``Rejected("deadline")`` is a pure
+  function of submit times and deadlines;
+* **serving never tears** — a fleet result produced while refreshes and
+  compactions race against queries is bit-exact with a from-scratch
+  rebuild at the epoch it is tagged with (the PR 5 lifecycle contract
+  extended across threads), and no request ever fails because a replica
+  was mid-swap.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import LSHConfig
+from repro.data import SyntheticProteinConfig, make_protein_sets
+from repro.index import QueryEngine, ServingConfig, ShardedIndex, SignatureIndex
+from repro.serve import AsyncEngine, Completed, Rejected, ReplicaFleet
+from repro.serve.engine import COST_ALPHA
+from repro.serve.metrics import Counters, Rolling
+
+CFG = LSHConfig(k=3, T=13, f=32, d=1)
+# probe mode on both sides of every parity assertion: the fleet always
+# serves the sharded probe ring, while mode="auto" below dense_threshold
+# would take the dense path (which ranks ALL refs — different semantics)
+SCFG = ServingConfig(k=5, max_batch=8, mode="probe")
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_protein_sets(SyntheticProteinConfig(
+        n_refs=120, n_homolog_queries=16, n_decoy_queries=16,
+        ref_len_mean=90, ref_len_std=12, sub_rates=(0.04, 0.1), seed=77))
+
+
+@pytest.fixture(scope="module")
+def index(data):
+    idx = SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"])
+    idx._ensure_built()
+    return idx
+
+
+def _rows(data):
+    """Queries as length-trimmed rows (what a caller submits)."""
+    return [np.asarray(data["query_ids"][j][:data["query_lens"][j]], np.int8)
+            for j in range(len(data["query_lens"]))]
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ------------------------------------------------------------ bit-exactness
+def test_async_matches_flush_bitexact(data, index):
+    """Every async result == the synchronous flush() result for the same
+    query, despite completely different batch compositions (async batches
+    form by arrival under max-wait; flush batches by submission chunks)."""
+    rows = _rows(data)
+    sync = QueryEngine(index, SCFG)
+    for r in rows:
+        sync.submit(r)
+    want = sync.flush()
+
+    async_backend = QueryEngine(index, SCFG)
+    with AsyncEngine(async_backend, max_wait_ms=1.0) as eng:
+        # interleave: stagger the submit order and let the dispatch
+        # thread cut batches wherever the timing happens to fall
+        order = list(range(len(rows)))
+        order = order[1::2] + order[0::2]
+        futs = {j: eng.submit(rows[j]) for j in order}
+        got = {j: f.result(timeout=120) for j, f in futs.items()}
+    for j, (wid, wd) in enumerate(want):
+        r = got[j]
+        assert isinstance(r, Completed) and r.ok
+        np.testing.assert_array_equal(r.ids, wid)
+        np.testing.assert_array_equal(r.dists, wd)
+        assert r.epoch == index.epoch
+
+
+def test_async_singleton_vs_batch_composition(data, index):
+    """The same query submitted alone and buried in a big batch returns
+    identical ids/dists — per-query results are independent of batch
+    composition (the bit-exactness argument the tier rests on)."""
+    rows = _rows(data)
+    backend = QueryEngine(index, SCFG)
+    with AsyncEngine(backend, max_wait_ms=0.0, start=False) as eng:
+        solo = eng.submit(rows[0])
+        eng._drain_once(timeout=0.01)           # batch of exactly 1
+        futs = [eng.submit(r) for r in rows]    # batch of many
+        while eng.pending():
+            eng._drain_once(timeout=0.01)
+        a = solo.result(timeout=5)
+        b = futs[0].result(timeout=5)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.dists, b.dists)
+
+
+# ------------------------------------------------------------ admission
+def test_deadline_shedding_deterministic(data, index):
+    """With a fake clock and a preset cost model, shedding is a pure
+    function of (queue time + predicted batch cost) vs deadline."""
+    rows = _rows(data)
+    clock = FakeClock()
+    backend = QueryEngine(index, SCFG)
+    eng = AsyncEngine(backend, max_wait_ms=0.0, clock=clock, start=False)
+    # batch of 3 lands on ladder rung 4; predict 50ms for it
+    eng._cost_ms[eng._rung(3)] = 50.0
+
+    f_tight = eng.submit(rows[0], deadline_ms=60.0)     # dies in queue
+    f_loose = eng.submit(rows[1], deadline_ms=500.0)    # survives
+    f_none = eng.submit(rows[2])                        # no deadline
+    clock.advance(0.020)    # 20ms queued: 20 + 50 predicted > 60 tight
+    eng._drain_once(timeout=0.0)
+
+    r = f_tight.result(timeout=5)
+    assert isinstance(r, Rejected) and r.reason == "deadline" and not r.ok
+    assert r.predicted_ms == pytest.approx(50.0)
+    assert r.queued_ms == pytest.approx(20.0)
+    assert f_loose.result(timeout=5).ok
+    assert f_none.result(timeout=5).ok
+    assert eng.counters["shed_deadline"] == 1
+    assert eng.counters["completed"] == 2
+    # identical setup, identical outcome (no hidden wall-clock)
+    clock2 = FakeClock()
+    eng2 = AsyncEngine(QueryEngine(index, SCFG), max_wait_ms=0.0,
+                       clock=clock2, start=False)
+    eng2._cost_ms[eng2._rung(3)] = 50.0
+    g1 = eng2.submit(rows[0], deadline_ms=60.0)
+    g2 = eng2.submit(rows[1], deadline_ms=500.0)
+    g3 = eng2.submit(rows[2])
+    clock2.advance(0.020)
+    eng2._drain_once(timeout=0.0)
+    assert [f.result(5).ok for f in (g1, g2, g3)] == \
+           [f.result(5).ok for f in (f_tight, f_loose, f_none)]
+    eng.close()
+    eng2.close()
+
+
+def test_queue_full_and_shutdown_rejections(data, index):
+    rows = _rows(data)
+    backend = QueryEngine(index, SCFG)
+    eng = AsyncEngine(backend, queue_depth=2, start=False)
+    f1, f2 = eng.submit(rows[0]), eng.submit(rows[1])
+    f3 = eng.submit(rows[2])
+    r3 = f3.result(timeout=5)       # immediate: submit never blocks
+    assert isinstance(r3, Rejected) and r3.reason == "queue_full"
+    assert eng.counters["shed_queue_full"] == 1
+    eng.close()                     # f1/f2 still queued -> shutdown
+    assert f1.result(timeout=5).reason == "shutdown"
+    assert f2.result(timeout=5).reason == "shutdown"
+    assert eng.submit(rows[0]).result(timeout=5).reason == "shutdown"
+    assert eng.counters["shed_shutdown"] == 3
+
+
+def test_cost_model_rung_and_ewma(index):
+    eng = AsyncEngine(QueryEngine(index, SCFG), start=False)
+    # ladder (1, 2, 4, 8, ...) capped at max_batch=8
+    assert [eng._rung(b) for b in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    assert eng.predicted_ms(3) == 0.0       # optimistic until measured
+    eng._update_cost(3, 0.100)
+    assert eng.predicted_ms(3) == pytest.approx(100.0)
+    eng._update_cost(3, 0.200)              # EWMA, not overwrite
+    assert eng.predicted_ms(3) == pytest.approx(
+        COST_ALPHA * 200.0 + (1 - COST_ALPHA) * 100.0)
+    assert eng.predicted_ms(8) == 0.0       # other rungs untouched
+    eng.close()
+
+
+# ------------------------------------------------------------ fleet races
+def test_fleet_serving_during_refresh_and_compaction(data):
+    """Queries racing a live ingest + compactions: every result is
+    bit-exact with a from-scratch rebuild at the epoch it is tagged
+    with, and nothing is ever rejected or torn."""
+    n = len(data["ref_lens"])
+    cut1, cut2 = n // 2, 3 * n // 4
+    qids = data["query_ids"][:8]
+    qlens = data["query_lens"][:8]
+
+    # expected answers per epoch, from clean single-threaded rebuilds
+    # (epoch == number of sealed segments: 1, then 2, then 3)
+    expect = {}
+    for epoch, upto in ((1, cut1), (2, cut2), (3, n)):
+        idx = SignatureIndex.build(CFG, data["ref_ids"][:upto],
+                                   data["ref_lens"][:upto])
+        eng = QueryEngine(idx, SCFG, sharded=ShardedIndex(idx))
+        expect[epoch] = eng.query_batch(qids, qlens)
+
+    live = SignatureIndex.build(CFG, data["ref_ids"][:cut1],
+                                data["ref_lens"][:cut1])
+    fleet = ReplicaFleet(live, SCFG, n_replicas=2, minor_compact_every=2)
+    try:
+        results, errors = [], []
+        stop = threading.Event()
+
+        def pound():
+            try:
+                while not stop.is_set():
+                    nid, nd, epoch = fleet.query_batch(qids, qlens)
+                    results.append((np.asarray(nid), np.asarray(nd), epoch))
+            except Exception as e:        # noqa: BLE001 - reraised below
+                errors.append(e)
+
+        threads = [threading.Thread(target=pound) for _ in range(2)]
+        for t in threads:
+            t.start()
+        ev1 = fleet.ingest(data["ref_ids"][cut1:cut2],
+                           data["ref_lens"][cut1:cut2])
+        assert ev1.wait(timeout=120)
+        ev2 = fleet.ingest(data["ref_ids"][cut2:], data["ref_lens"][cut2:])
+        assert ev2.wait(timeout=120)      # 2nd ingest -> minor compaction
+        # a few more results at the final epoch, then stop
+        nid, nd, epoch = fleet.query_batch(qids, qlens)
+        assert epoch == 3
+        stop.set()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        results.append((np.asarray(nid), np.asarray(nd), epoch))
+
+        seen = set()
+        for nid, nd, epoch in results:
+            assert epoch in expect, f"torn epoch tag {epoch}"
+            seen.add(epoch)
+            np.testing.assert_array_equal(nid, expect[epoch][0])
+            np.testing.assert_array_equal(nd, expect[epoch][1])
+        assert 3 in seen                 # the final state was served
+        assert fleet.counters["ingests"] == 2
+        assert fleet.counters["minor_compactions"] == 1
+
+        # major compaction racing queries: content (and answers) frozen
+        threads = [threading.Thread(target=pound) for _ in range(2)]
+        stop.clear()
+        n_before = len(results)
+        for t in threads:
+            t.start()
+        fleet.compact_index()
+        stop.set()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        for nid, nd, _epoch in results[n_before:]:
+            np.testing.assert_array_equal(nid, expect[3][0])
+            np.testing.assert_array_equal(nd, expect[3][1])
+        assert live.generation == 1 and live.epoch == 1
+    finally:
+        fleet.close()
+
+
+def test_fleet_through_async_engine_bitexact(data):
+    """The full stack — AsyncEngine over a 2-replica fleet — returns
+    flush()-identical answers with epoch tags, end to end."""
+    idx = SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"])
+    rows = _rows(data)
+    sync = QueryEngine(idx, SCFG, sharded=ShardedIndex(idx))
+    for r in rows:
+        sync.submit(r)
+    want = sync.flush()
+    with ReplicaFleet(idx, SCFG, n_replicas=2) as fleet, \
+            AsyncEngine(fleet, max_wait_ms=1.0) as eng:
+        got = [eng.submit(r).result(timeout=120) for r in rows]
+    for r, (wid, wd) in zip(got, want):
+        assert r.ok and r.epoch == idx.epoch
+        np.testing.assert_array_equal(r.ids, wid)
+        np.testing.assert_array_equal(r.dists, wd)
+
+
+def test_fleet_router_least_outstanding(data):
+    idx = SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"])
+    with ReplicaFleet(idx, SCFG, n_replicas=3, start_ingest=False) as fleet:
+        # all idle: picks rotate by last_used, spreading load
+        picked = []
+        for _ in range(3):
+            rep = fleet._pick()
+            picked.append(rep.name)
+            with fleet._pick_lock:
+                rep.last_used = fleet._ticket
+            rep.lock.release()
+        assert len(set(picked)) == 3
+        # a busy replica (lock held) is skipped, never waited on while a
+        # free one exists
+        busy = fleet._replicas[0]
+        assert busy.lock.acquire(blocking=False)
+        try:
+            for _ in range(4):
+                rep = fleet._pick()
+                assert rep.name != busy.name
+                rep.lock.release()
+        finally:
+            busy.lock.release()
+        assert fleet.counters["waited_busy"] == 0
+
+
+# ------------------------------------------------------------ observability
+def test_rolling_window_and_counters():
+    r = Rolling(window=4)
+    for ms in (10, 20, 30, 40, 50, 60):   # first two fall out the window
+        r.add(ms / 1e3)
+    snap = r.snapshot()
+    assert snap["count"] == 4 and snap["total"] == 6
+    assert snap["p50_ms"] == pytest.approx(45.0)
+    assert snap["mean_ms"] == pytest.approx(45.0)
+    assert snap["p99_ms"] <= 60.0 + 1e-9
+    assert Rolling().snapshot() == dict(count=0, total=0, p50_ms=0.0,
+                                        p95_ms=0.0, p99_ms=0.0, mean_ms=0.0)
+    c = Counters("a")
+    c.bump("a")
+    c.bump("b", by=2)
+    assert c["a"] == 1 and c["b"] == 2 and c["missing"] == 0
+    assert c.snapshot() == {"a": 1, "b": 2}
+
+
+def test_stats_surfaces(data, index):
+    """stats() exposes the new observability everywhere: per-stage timers
+    + p99 + truncations on the sync engine, queue/latency/cost-model on
+    the async engine, per-replica epochs on the fleet."""
+    sync = QueryEngine(index, SCFG)
+    sync.query_batch(data["query_ids"][:4], data["query_lens"][:4])
+    s = sync.stats()
+    assert set(s["stage_ms"]) == {"ladder", "sig", "probe", "rerank"}
+    assert s["p99_ms"] >= s["p95_ms"] >= s["p50_ms"] >= 0
+    assert s["truncations"] == 0
+    assert sum(s["stage_ms"].values()) > 0
+
+    rows = _rows(data)
+    with AsyncEngine(QueryEngine(index, SCFG), max_wait_ms=0.5) as eng:
+        [f.result(timeout=120) for f in (eng.submit(r) for r in rows[:4])]
+        es = eng.stats()
+    assert es["counters"]["completed"] == 4
+    assert es["latency"]["count"] == 4
+    assert es["queue"]["p95_ms"] <= es["latency"]["p95_ms"] + 1e9
+    assert es["cost_model_ms"]            # at least one rung measured
+    assert es["backend"]["n_queries"] >= 4
+
+    with ReplicaFleet(index, SCFG, n_replicas=2,
+                      start_ingest=False) as fleet:
+        fleet.query_batch(data["query_ids"][:4], data["query_lens"][:4])
+        fs = fleet.stats()
+    assert fs["n_replicas"] == 2
+    assert len(fs["replicas"]) == 2
+    assert all(r["epoch"] == (index.epoch, index.epoch)
+               for r in fs["replicas"])
+    assert fs["counters"]["batches"] == 1

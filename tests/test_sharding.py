@@ -170,6 +170,25 @@ def test_emit_program_cache_survives_fresh_mesh(data):
     assert _emit_sharded_cached.cache_info().currsize == size0 + 1
 
 
+def test_wave_fns_cache_keyed_by_device_tuple():
+    """Regression (same PR 4 trap, wave side): the SPMD wave programs in
+    allpairs.tiles are cached by DEVICE TUPLE — not a bare device count —
+    so repeated calls with the same devices share one compiled program,
+    and a different device subset cannot alias a stale entry."""
+    import jax
+    from repro.allpairs.tiles import _sharded_wave_fns
+    devs = tuple(jax.devices()[:1])
+    size0 = _sharded_wave_fns.cache_info().currsize
+    f1 = _sharded_wave_fns(devs)
+    f2 = _sharded_wave_fns(tuple(jax.devices()[:1]))    # fresh tuple, same devs
+    assert f1 is f2
+    assert _sharded_wave_fns.cache_info().currsize == size0 + 1
+    # the key is the devices themselves: hashable, and a list (unhashable,
+    # the bug a bare-count key invites back) is rejected loudly
+    with pytest.raises(TypeError):
+        _sharded_wave_fns(list(jax.devices()[:1]))
+
+
 # ---------------------------------------------------------------- persistence
 def test_sharded_index_roundtrip_and_fingerprint(tmp_path, data, q_sigs):
     idx = SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"],
