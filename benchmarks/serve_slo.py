@@ -16,11 +16,21 @@ Acceptance criteria (asserted in ``--smoke``, not just reported):
 * a live ingest + major compaction mid-sweep must complete with ZERO
   failed or blocked requests (rolling refresh keeps serving live);
 * the async path must be bit-exact with the synchronous probe path
-  (mode="probe") on a fixed query batch.
+  (mode="probe") on a fixed query batch;
+* the recompile sentinel (repro.obs.jit) reports ZERO compiles from the
+  first sweep point to the last — *including* the mid-sweep ingest and
+  major compaction: a priming phase pre-pays every lifecycle shape
+  (delta ring, compacted base), so steady-state serving never traces.
 
 Emits ``BENCH_serve.json`` (sync baseline, per-point sweep stats, knee,
-live-ingest accounting) which the nightly CI job uploads alongside the
-other BENCH artifacts.
+live-ingest accounting, per-site compile counts) which the nightly CI
+job uploads alongside the other BENCH artifacts. With ``--trace-out``
+structured tracing is enabled for the whole run and the exported
+Chrome/Perfetto JSON is checked: every completed query's trace ID spans
+submit -> dispatch -> resolve with its batch's probe spans, and the
+report attributes the slowest live-ingest samples to the lifecycle
+spans they overlap (ingest/compaction spikes line up, by construction
+visible on one timeline).
 
   PYTHONPATH=src python -m benchmarks.serve_slo --smoke        # CI
   PYTHONPATH=src python -m benchmarks.serve_slo --n-refs 4096 \
@@ -47,27 +57,6 @@ def _percentiles(lat_s):
                 p95_ms=float(np.percentile(a, 95)),
                 p99_ms=float(np.percentile(a, 99)),
                 mean_ms=float(a.mean()))
-
-
-def _warm_rungs(backend, qids, qlens, scfg):
-    """Compile every (batch-rung, length-quantum) serving shape the sweep
-    can land on — a real tier pre-warms its ladder; without this, the
-    open-loop points measure XLA compiles instead of serving."""
-    import numpy as np
-    quanta = {}
-    for j, L in enumerate(np.asarray(qlens)):
-        q = int(-(-int(L) // scfg.len_quantum) * scfg.len_quantum)
-        if q not in quanta or L > qlens[quanta[q]]:
-            quanta[q] = j
-    rungs = [b for b in scfg.batch_ladder if b <= scfg.max_batch]
-    for b in rungs:
-        for j in quanta.values():
-            # slice to the true length: the padded width (what the jit
-            # cache keys on) is quantized from the ARRAY width
-            row = qids[j:j + 1, :int(qlens[j])]
-            backend.query_batch(np.repeat(row, b, axis=0),
-                                np.repeat(qlens[j:j + 1], b))
-    return len(rungs) * len(quanta)
 
 
 def _open_loop_point(eng, qids, qlens, offered_qps, n_requests,
@@ -103,6 +92,58 @@ def _open_loop_point(eng, qids, qlens, offered_qps, n_requests,
     return achieved, _percentiles(lat), n_shed, results
 
 
+def _trace_report(spans, slow_threshold_ms):
+    """Reconstruct every query's path from the exported spans and
+    attribute slow samples to overlapping lifecycle spans.
+
+    Per-query latency comes from the trace itself (``resolve.ts -
+    submit.ts`` for each trace ID), so the attribution never mixes
+    clocks. Returns (report dict, list of broken trace IDs)."""
+    submit = {}
+    resolve = {}
+    by_trace = {}
+    lifecycle = []
+    for s in spans:
+        if s["cat"] == "lifecycle":
+            lifecycle.append(s)
+        for tid in s["args"].get("trace", ()):
+            by_trace.setdefault(tid, set()).add(s["name"])
+            if s["name"] == "submit":
+                submit[tid] = s["ts"]
+            elif s["name"] == "resolve":
+                resolve[tid] = s["ts"]
+    # a completed query's path: submit -> dispatch (batch) -> the serving
+    # spans of its batch -> resolve. Shed queries have submit+shed only.
+    need = {"submit", "dispatch", "query_batch", "probe", "resolve"}
+    broken = [tid for tid in resolve
+              if not need.issubset(by_trace.get(tid, set()))]
+    slow = []
+    for tid, t1 in resolve.items():
+        t0 = submit.get(tid)
+        if t0 is None:
+            continue
+        lat_ms = (t1 - t0) * 1e3
+        if lat_ms < slow_threshold_ms:
+            continue
+        overlaps = [dict(name=s["name"],
+                         overlap_ms=round(1e3 * (min(t1, s["ts"] + s["dur"])
+                                                 - max(t0, s["ts"])), 2))
+                    for s in lifecycle
+                    if s["dur"] and s["ts"] < t1 and s["ts"] + s["dur"] > t0]
+        slow.append(dict(trace=tid, latency_ms=round(lat_ms, 2),
+                         lifecycle=overlaps))
+    slow.sort(key=lambda d: -d["latency_ms"])
+    n_attr = sum(1 for d in slow if d["lifecycle"])
+    return dict(
+        n_traced=len(by_trace), n_completed=len(resolve),
+        n_path_broken=len(broken),
+        lifecycle_spans=sorted({s["name"] for s in lifecycle}),
+        slow_threshold_ms=slow_threshold_ms,
+        n_slow=len(slow), n_slow_attributed_to_lifecycle=n_attr,
+        slowest=slow[:10],
+    ), broken
+
+
 def _run(args):
     import jax
     import numpy as np
@@ -112,8 +153,11 @@ def _run(args):
     from repro.data import SyntheticProteinConfig, make_protein_sets
     from repro.index import (QueryEngine, ServingConfig, ShardedIndex,
                              SignatureIndex)
+    from repro.obs import SENTINEL, TRACER, enable as trace_enable
     from repro.serve import AsyncEngine, ReplicaFleet
 
+    if args.trace_out:
+        trace_enable()
     S = args.shards
     assert jax.device_count() >= S, (
         f"need {S} devices, got {jax.devices()}")
@@ -139,11 +183,23 @@ def _run(args):
                "batch": args.batch, "max_wait_ms": args.max_wait_ms,
                "devices": jax.device_count()}
 
+    # the 32-reference batch the mid-sweep ingest will add — built up
+    # front because the PRIMING phase ingests the same content first:
+    # identical content -> identical pow2-quantized delta slab shapes ->
+    # the delta-ring programs the live ingest needs are already compiled
+    rng = np.random.default_rng(7)
+    from repro.core.alphabet import ALPHABET_SIZE, PAD
+    new_lens = rng.integers(100, 180, size=32).astype(np.int32)
+    new_ids = np.full((32, int(new_lens.max())), PAD, np.int8)
+    for r, L in enumerate(new_lens):
+        new_ids[r, :L] = rng.integers(0, ALPHABET_SIZE, size=L,
+                                      dtype=np.int8)
+
     # ---- synchronous batch-1 baseline (no micro-batching to hide behind)
     sync_sh = ShardedIndex(index, mesh)
-    sync_eng = QueryEngine(index, scfg, sharded=sync_sh)
+    sync_eng = QueryEngine(index, scfg, sharded=sync_sh, name="sync")
     t_warm0 = time.monotonic()
-    n_warm = _warm_rungs(sync_eng, qids, qlens, scfg)
+    n_warm = sync_eng.warmup(qids, qlens)
     t0 = time.monotonic()
     n_sync = min(len(qlens), args.n_per_point)
     for i in range(n_sync):
@@ -153,72 +209,87 @@ def _run(args):
     results["sync_batch1_qps"] = round(sync_qps, 2)
 
     # ---- the async tier under an offered-QPS sweep ----------------------
-    fleet = ReplicaFleet(index, scfg, n_replicas=args.replicas, mesh=mesh)
-    eng = AsyncEngine(fleet, max_wait_ms=args.max_wait_ms)
-    # the module-level device-tuple program cache means the sync warmup
-    # above already compiled every ring; this pass warms the fleet's
-    # per-replica host paths (signatures etc.) without new compiles
-    _warm_rungs(fleet, qids, qlens, scfg)
+    # warmup= compiles every (rung, quantum) shape on every replica at
+    # construction (the sync warmup above already compiled the rings —
+    # the device-tuple program cache makes N replicas cost one compile)
+    fleet = ReplicaFleet(index, scfg, n_replicas=args.replicas, mesh=mesh,
+                         warmup=(qids, qlens))
+    eng = AsyncEngine(fleet, max_wait_ms=args.max_wait_ms, name="slo")
+
+    # PRIMING: pre-pay every lifecycle shape the live-ingest rerun will
+    # serve — ingest the same 32-ref content (delta slabs + delta-ring
+    # compile at every rung), then major-compact (pow2-quantized base
+    # slabs; shapes repeat across compactions) and re-warm. After this,
+    # steady-state serving must never trace again: the whole sweep AND
+    # the mid-sweep ingest/compaction run under expect_no_compiles.
+    fleet.ingest(new_ids, new_lens).wait(timeout=120)
+    fleet.warmup(qids, qlens)           # delta-ring shapes, every rung
+    fleet.compact_index()
+    fleet.warmup(qids, qlens)           # compacted-base shapes
     csv(f"serve_slo,warm_shapes,{n_warm} "
-        f"({time.monotonic() - t_warm0:.1f}s)")
+        f"({time.monotonic() - t_warm0:.1f}s, primed ingest+compaction)")
 
-    sweep = []
-    knee = None
-    for mult in args.multipliers:
-        offered = sync_qps * mult
-        achieved, pct, n_shed, _ = _open_loop_point(
-            eng, qids, qlens, offered, args.n_per_point)
-        point = dict(offered_qps=round(offered, 2),
-                     achieved_qps=round(achieved, 2),
-                     shed=n_shed, **{k: round(v, 2) for k, v in pct.items()})
-        sweep.append(point)
-        csv(f"serve_slo,offered={offered:.1f},achieved={achieved:.1f} "
-            f"p50={pct['p50_ms']:.1f}ms p95={pct['p95_ms']:.1f}ms "
-            f"p99={pct['p99_ms']:.1f}ms shed={n_shed}")
-        if achieved >= 0.9 * offered:
-            knee = point            # highest offered the tier absorbs
-    results["sweep"] = sweep
-    results["knee"] = knee
-    assert knee is not None, (
-        "the tier absorbed NO offered rate (achieved < 0.9x offered "
-        "everywhere) — dispatch is broken or the sweep floor is too high")
-    csv(f"serve_slo,knee_offered_qps,{knee['offered_qps']}")
-    csv(f"serve_slo,knee_achieved_qps,{knee['achieved_qps']}")
+    with SENTINEL.expect_no_compiles(
+            message="offered-QPS sweep (post-warmup steady state)"):
+        sweep = []
+        knee = None
+        for mult in args.multipliers:
+            offered = sync_qps * mult
+            achieved, pct, n_shed, _ = _open_loop_point(
+                eng, qids, qlens, offered, args.n_per_point)
+            point = dict(offered_qps=round(offered, 2),
+                         achieved_qps=round(achieved, 2),
+                         shed=n_shed,
+                         **{k: round(v, 2) for k, v in pct.items()})
+            sweep.append(point)
+            csv(f"serve_slo,offered={offered:.1f},achieved={achieved:.1f} "
+                f"p50={pct['p50_ms']:.1f}ms p95={pct['p95_ms']:.1f}ms "
+                f"p99={pct['p99_ms']:.1f}ms shed={n_shed}")
+            if achieved >= 0.9 * offered:
+                knee = point        # highest offered the tier absorbs
+        results["sweep"] = sweep
+        results["knee"] = knee
+        assert knee is not None, (
+            "the tier absorbed NO offered rate (achieved < 0.9x offered "
+            "everywhere) — dispatch is broken or the sweep floor is too "
+            "high")
+        csv(f"serve_slo,knee_offered_qps,{knee['offered_qps']}")
+        csv(f"serve_slo,knee_achieved_qps,{knee['achieved_qps']}")
 
-    # ---- live ingest + major compaction mid-stream ----------------------
-    # re-run the knee point with an ingest fired a third of the way in and
-    # a major compaction two thirds in; every request must complete
-    rng = np.random.default_rng(7)
-    from repro.core.alphabet import ALPHABET_SIZE, PAD
-    new_lens = rng.integers(100, 180, size=32).astype(np.int32)
-    new_ids = np.full((32, int(new_lens.max())), PAD, np.int8)
-    for r, L in enumerate(new_lens):
-        new_ids[r, :L] = rng.integers(0, ALPHABET_SIZE, size=L,
-                                      dtype=np.int8)
-    hooks = {}
+        # ---- live ingest + major compaction mid-stream ------------------
+        # re-run the knee point with an ingest fired a third of the way in
+        # and a major compaction two thirds in; every request must
+        # complete, and (priming above) none may trigger a compile
+        hooks = {}
 
-    def on_submit(i):
-        if i == args.n_per_point // 3 and "ingest" not in hooks:
-            hooks["ingest"] = fleet.ingest(new_ids, new_lens)
-        if i == 2 * args.n_per_point // 3 and "compact" not in hooks:
-            hooks["ingest"].wait(timeout=120)
-            fleet.compact_index()
-            hooks["compact"] = True
+        def on_submit(i):
+            if i == args.n_per_point // 3 and "ingest" not in hooks:
+                hooks["ingest"] = fleet.ingest(new_ids, new_lens)
+            if i == 2 * args.n_per_point // 3 and "compact" not in hooks:
+                hooks["ingest"].wait(timeout=120)
+                fleet.compact_index()
+                hooks["compact"] = True
 
-    achieved, pct, n_shed, res = _open_loop_point(
-        eng, qids, qlens, knee["offered_qps"], args.n_per_point,
-        on_submit=on_submit)
-    assert hooks.get("compact"), "mid-sweep compaction never fired"
-    epochs = sorted({r.epoch for r in res if r.ok})
-    assert n_shed == 0, (
-        f"live ingest/compaction shed {n_shed} requests — serving did "
-        f"not stay live (counters: {eng.counters.snapshot()})")
+        achieved, pct, n_shed, res = _open_loop_point(
+            eng, qids, qlens, knee["offered_qps"], args.n_per_point,
+            on_submit=on_submit)
+        assert hooks.get("compact"), "mid-sweep compaction never fired"
+        epochs = sorted({r.epoch for r in res if r.ok})
+        assert n_shed == 0, (
+            f"live ingest/compaction shed {n_shed} requests — serving did "
+            f"not stay live (counters: {eng.counters.snapshot()})")
     csv(f"serve_slo,live_ingest_achieved_qps,{achieved:.1f}")
     csv(f"serve_slo,live_ingest_epochs,{epochs}")
     results["live_ingest"] = dict(
         achieved_qps=round(achieved, 2), shed=n_shed,
         epochs_served=[int(e) for e in epochs],
         **{k: round(v, 2) for k, v in pct.items()})
+    assert not SENTINEL.recompiled(), (
+        f"silent recompiles (same key traced twice): "
+        f"{SENTINEL.recompiled()}")
+    results["jit_compiles"] = SENTINEL.by_site()
+    csv(f"serve_slo,jit_compiles,{sum(SENTINEL.by_site().values())} "
+        f"(all pre-sweep: {SENTINEL.by_site()})")
 
     # ---- bit-exactness: async answers == synchronous probe answers ------
     sync_eng2 = QueryEngine(index, scfg, sharded=ShardedIndex(index, mesh))
@@ -234,6 +305,25 @@ def _run(args):
 
     eng.close()
     fleet.close()
+
+    if args.trace_out:
+        n_ev = TRACER.export(args.trace_out)
+        # slow = past 2x the knee median: the tail the report must explain
+        thresh = max(2.0 * knee["p50_ms"], 1.0)
+        report, broken = _trace_report(TRACER.spans(), thresh)
+        assert report["n_path_broken"] == 0, (
+            f"{report['n_path_broken']} completed queries have broken "
+            f"trace paths (first: {broken[:5]}) — a span on the "
+            f"submit->dispatch->probe->resolve chain lost its trace ID")
+        for name in ("ingest", "major_compaction"):
+            assert name in report["lifecycle_spans"], (
+                f"no {name!r} lifecycle span in the trace — the mid-sweep "
+                f"event ran untraced (spans: {report['lifecycle_spans']})")
+        results["trace"] = report
+        csv(f"serve_slo,trace_events,{n_ev} -> {args.trace_out}")
+        csv(f"serve_slo,trace_paths,{report['n_completed']} complete, "
+            f"0 broken; {report['n_slow']} slow (>{thresh:.1f}ms), "
+            f"{report['n_slow_attributed_to_lifecycle']} overlap lifecycle")
 
     with open(args.json, "w") as fh:
         json.dump(results, fh, indent=2)
@@ -263,6 +353,11 @@ def main(argv=None):
                     help="offered-QPS sweep points as multiples of the "
                          "sync batch-1 baseline")
     ap.add_argument("--json", default="BENCH_serve.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable structured tracing for the whole run and "
+                         "export Chrome/Perfetto trace JSON here (adds a "
+                         "per-query path-completeness check and a slow-"
+                         "sample lifecycle attribution report)")
     args = ap.parse_args(argv)
     args.n_refs = args.n_refs or (512 if args.smoke else 4096)
     args.n_per_point = args.n_per_point or (48 if args.smoke else 256)

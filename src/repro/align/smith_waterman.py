@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.alphabet import BLOSUM62_PADDED, PAD
+from ..obs import trace_sentinel
 
 GAP = -4     # linear gap penalty (BLOSUM62-compatible default)
 NEG = -10**6  # masked-substitution sentinel (padded positions never win)
@@ -141,6 +142,7 @@ def gather_rows(ids_dev, lens_dev, idx, L: int):
 
 
 @functools.partial(jax.jit, static_argnames=("Lq", "Lr"))
+@trace_sentinel("sw_gather")
 def sw_gather_scores(q_ids, q_lens, r_ids, r_lens, qi, ri, *,
                      Lq: int, Lr: int) -> jax.Array:
     """ONE jitted program: gather both pair sides from device-resident

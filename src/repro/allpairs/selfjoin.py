@@ -57,6 +57,7 @@ from ..core.hamming import hamming_distance
 from ..core.join import compact_pairs, dedup_pairs
 from ..index.partition import BucketPartition, pad_slabs_pow2
 from ..index.store import SignatureIndex
+from ..obs import span, trace_sentinel
 from ..util import next_pow2, shard_map_compat
 
 
@@ -93,6 +94,7 @@ def _emit_bucket_pairs(offsets, ids, *, cap: int):
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
+@trace_sentinel("emit_slab")
 def _emit_slab_pairs(offs_s, ids_s, *, cap: int):
     """Within-bucket pairs of one shard's stacked slab: offsets (nb, U+1),
     ids (nb, E) -> (nb, cap, 2) int32, -1 past each band's true count.
@@ -145,6 +147,7 @@ def _emit_cross_pairs(dkeys, doffs, dids, rkeys, roffs, rids, *, cap: int):
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
+@trace_sentinel("emit_cross")
 def _emit_cross_slab(dkeys_s, doffs_s, dids_s, rkeys_s, roffs_s, rids_s,
                      *, cap: int):
     """Band-stacked cross emission: (nb, ...) delta + resident slabs ->
@@ -171,6 +174,7 @@ def _emit_sharded_cached(devices: tuple, axis_name: str, cap: int):
     ax = axis_name
     mesh = Mesh(np.array(devices), (ax,))
 
+    @trace_sentinel("emission_spmd", static_key=(devices, cap))
     def shard_fn(offs, ids):
         return _emit_slab_pairs(offs[0], ids[0], cap=cap)
 
@@ -351,7 +355,9 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
     # Emission runs ONCE at per-shard exact-or-2x capacity (it can never
     # truncate); only the deduplicated cross-shard union below grows, so a
     # retry re-runs just the dedup/compact step, never the emission.
-    cand = _emit_partition(part, caps, mesh, axis_name)
+    with span("emission", cat="allpairs", shards=n,
+              spmd=mesh is not None, need=need):
+        cand = _emit_partition(part, caps, mesh, axis_name)
     cap = max(max_pairs, int(caps.max()))
     return _dedup_and_pack(cand, index, d, cap, max_grow, "self-join")
 
@@ -432,25 +438,27 @@ def lsh_delta_join(index: SignatureIndex, *, base_size: int,
         return _segment_stack(segs[i])[1]
 
     bufs = []
-    for s in range(k, len(segs)):
-        need_w = int(part(s).pair_totals[0].max(initial=0))
-        if need_w > max_grow:
-            _grow_overflow("delta join", max_grow)
-        if need_w > 0:
-            _, doffs, dids = slabs(s)
-            bufs.append(_emit_slab_pairs(doffs, dids,
-                                         cap=next_pow2(need_w)))
-        for r in range(s):          # every earlier segment is resident
-            totals = _cross_totals(segs[s], segs[r])
-            need_c = int(totals.max(initial=0))
-            if need_c > max_grow:
+    with span("delta_emission", cat="allpairs",
+              new_segments=len(segs) - k, resident_segments=k):
+        for s in range(k, len(segs)):
+            need_w = int(part(s).pair_totals[0].max(initial=0))
+            if need_w > max_grow:
                 _grow_overflow("delta join", max_grow)
-            if need_c == 0:
-                continue
-            dk, do, di = slabs(s)
-            rk, ro, ri = slabs(r)
-            bufs.append(_emit_cross_slab(dk, do, di, rk, ro, ri,
-                                         cap=next_pow2(need_c)))
+            if need_w > 0:
+                _, doffs, dids = slabs(s)
+                bufs.append(_emit_slab_pairs(doffs, dids,
+                                             cap=next_pow2(need_w)))
+            for r in range(s):      # every earlier segment is resident
+                totals = _cross_totals(segs[s], segs[r])
+                need_c = int(totals.max(initial=0))
+                if need_c > max_grow:
+                    _grow_overflow("delta join", max_grow)
+                if need_c == 0:
+                    continue
+                dk, do, di = slabs(s)
+                rk, ro, ri = slabs(r)
+                bufs.append(_emit_cross_slab(dk, do, di, rk, ro, ri,
+                                             cap=next_pow2(need_c)))
     if not bufs:
         return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
     # ragged host merge (buffers differ in cap); dedup lexsorts downstream

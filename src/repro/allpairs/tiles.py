@@ -63,6 +63,8 @@ from ..align.smith_waterman import (gather_rows, sw_gather_scores,
                                     ungapped_xdrop_scores)
 from ..core.alphabet import PAD
 from ..kernels.sw import on_tpu
+from ..obs import span, trace_sentinel
+from ..obs.trace import record as record_span
 
 
 @dataclass(frozen=True)
@@ -151,12 +153,14 @@ def wave_plan(pairs: np.ndarray, lens: np.ndarray, cfg: WaveConfig):
 
 # ---------------------------------------------------------------- device side
 @functools.partial(jax.jit, static_argnames=("Lq", "Lr"))
+@trace_sentinel("wave_gather")
 def _gather_wave(ids_dev, lens_dev, pi, pj, *, Lq: int, Lr: int):
     return (gather_rows(ids_dev, lens_dev, pi, Lq),
             gather_rows(ids_dev, lens_dev, pj, Lr))
 
 
 @functools.partial(jax.jit, static_argnames=("x", "Lq", "Lr"))
+@trace_sentinel("wave_ungapped")
 def _wave_ungapped_device(ids_dev, lens_dev, pi, pj, *, x: int | None,
                           Lq: int, Lr: int):
     """Fused gather + ungapped X-drop prefilter scan."""
@@ -190,6 +194,7 @@ def _sharded_wave_fns(devices: tuple):
     ax = "wave"
 
     @functools.partial(jax.jit, static_argnames=("Lq", "Lr"))
+    @trace_sentinel("wave_sw_spmd", static_key=(devices,))
     def sw_fn(ids_dev, lens_dev, pi, pj, *, Lq: int, Lr: int):
         f = shard_map_compat(
             lambda i, l, a, b: sw_gather_scores(i, l, i, l, a, b,
@@ -198,6 +203,7 @@ def _sharded_wave_fns(devices: tuple):
         return f(ids_dev, lens_dev, pi, pj)
 
     @functools.partial(jax.jit, static_argnames=("x", "Lq", "Lr"))
+    @trace_sentinel("wave_ungapped_spmd", static_key=(devices,))
     def ungapped_fn(ids_dev, lens_dev, pi, pj, *, x: int | None,
                     Lq: int, Lr: int):
         f = shard_map_compat(
@@ -313,7 +319,10 @@ def _run_score_waves(ids, lens, pairs, subset, cfg: WaveConfig, dev, out,
         t0 = time.perf_counter()
         if dev is None:                     # host-gather (PR 2) path
             qm, rm = _host_gather(ids, lens, sub, chunk, B, Lq, Lr)
-            stats.t["host_gather"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats.t["host_gather"] += t1 - t0
+            record_span("host_gather", t0, t1, cat="allpairs",
+                        B=B, n=len(chunk))
             t0 = time.perf_counter()
             res = _score_block(qm, rm, kind, cfg.xdrop, use_pallas, cfg)
         elif use_pallas:                    # device gather -> Pallas tile
@@ -340,7 +349,12 @@ def _run_score_waves(ids, lens, pairs, subset, cfg: WaveConfig, dev, out,
         if cfg.profile:
             jax.block_until_ready(res)
         key = "prefilter" if kind == "ungapped" else "dispatch"
-        stats.t[key] += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.t[key] += t1 - t0
+        # dispatch-side duration: device time hides in the drain unless
+        # cfg.profile blocks per wave
+        record_span("wave", t0, t1, cat="allpairs", kind=kind, B=B,
+                    Lq=Lq, Lr=Lr, n=len(chunk), spmd=ndev > 1)
         t0 = time.perf_counter()
         ring.push(subset[chunk], res)
         stats.t["drain"] += time.perf_counter() - t0
@@ -373,7 +387,10 @@ def _run_pid_waves(ids, lens, pairs, subset, cfg: WaveConfig, dev,
         pw, lw, sw = sw_wave_pid(qm, rm, chunk=B)
         # one bucket for the whole PID wave: device DP + H-matrix D2H +
         # host traceback (sw_wave_pid interleaves them internally)
-        stats.t["pid_wave"] += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.t["pid_wave"] += t1 - t0
+        record_span("wave", t0, t1, cat="allpairs", kind="pid", B=B,
+                    Lq=Lq, Lr=Lr, n=len(chunk))
         slots = subset[chunk]
         pid[slots] = pw[:len(chunk)]
         aln[slots] = lw[:len(chunk)]
@@ -397,6 +414,7 @@ def score_pairs(ids: np.ndarray, lens: np.ndarray, pairs: np.ndarray,
     pairs = np.asarray(pairs, np.int32)
     lens = np.asarray(lens, np.int32)
     P = len(pairs)
+    t_all = time.perf_counter()
     scores = np.zeros(P, np.int32)
     pid = np.zeros(P) if cfg.with_pid else None
     aln = np.zeros(P, np.int64) if cfg.with_pid else None
@@ -432,6 +450,9 @@ def score_pairs(ids: np.ndarray, lens: np.ndarray, pairs: np.ndarray,
             _run_score_waves(ids, lens, pairs, subset, cfg, dev, scores,
                              stats, kind="sw", wave_batch=cfg.wave_batch,
                              use_pallas=use_pallas, ndev=ndev)
+    record_span("score_pairs", t_all, time.perf_counter(), cat="allpairs",
+                pairs=P, waves=stats.n_waves, shapes=len(stats.shapes),
+                prefiltered=0 if kept is None else int((~kept).sum()))
     return PairScores(scores=scores, pid=pid, aln_len=aln,
                       n_waves=stats.n_waves, n_shapes=len(stats.shapes),
                       ungapped=ungapped, kept=kept,

@@ -24,9 +24,10 @@ same way.
 from __future__ import annotations
 
 import functools
+import itertools
 import time
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,8 @@ from ..core.alphabet import PAD, encode
 from ..core.hamming import hamming_distance
 from ..core.pipeline import ScalLoPS
 from ..kernels import ops
+from ..obs import REGISTRY, Histogram, span, trace_sentinel
+from ..obs.trace import record as record_span
 from .store import SignatureIndex
 
 BIG = 1 << 30  # sentinel distance for masked slots (int32-safe)
@@ -62,6 +65,7 @@ def _probe_csr_positions(qkeys, csr_keys, csr_offsets, *, cap: int, E: int):
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
+@trace_sentinel("probe_csr")
 def _probe_csr(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
     """One band's bucket probe: searchsorted into the CSR unique keys.
 
@@ -81,6 +85,7 @@ def _probe_csr(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
+@trace_sentinel("probe_fused")
 def _probe_csr_fused(qkeys, csr_keys, csr_offsets, csr_ids, *, cap: int):
     """All bands' bucket probes + cross-band dedup in ONE jitted program.
 
@@ -125,6 +130,7 @@ def _dedup_candidates(cand, dist, ok):
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
+@trace_sentinel("topk_candidates")
 def _topk_from_candidates(q_sigs, cand, ref_sigs, ref_valid, *, k: int):
     """Exact-filter candidates and keep the k nearest per query.
 
@@ -159,6 +165,7 @@ def _finalize_topk(dvals, id_source, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
+@trace_sentinel("topk_dense")
 def _topk_from_dists(dist, ref_valid, *, k: int):
     """(B, N) distances -> top-k (ids, dists) with invalid refs masked."""
     dvals = jnp.where(ref_valid[None, :], dist, BIG)
@@ -209,18 +216,64 @@ class ServingConfig:
 
 _STAGES = ("ladder", "sig", "probe", "rerank")
 
+# registry families every engine registers into (children labeled by the
+# engine's name, so per-replica streams stay attributable AND merge — the
+# fleet-wide latency histogram is the exact fold of the children)
+_M_BATCH = REGISTRY.histogram(
+    "serve_batch_seconds", "query_batch wall-clock", labelnames=("engine",))
+_M_STAGE = REGISTRY.histogram(
+    "serve_stage_seconds", "per-batch serving-stage wall-clock "
+    "(ladder/sig/probe/rerank)", labelnames=("engine", "stage"))
+_M_QUERIES = REGISTRY.counter(
+    "serve_queries", "queries served", labelnames=("engine",))
+_M_TRUNC = REGISTRY.counter(
+    "serve_truncations", "batches whose probe overflowed even at "
+    "max_probe_cap (the no-silent-caps counter)", labelnames=("engine",))
 
-@dataclass
+_engine_ids = itertools.count()
+
+
 class _Stats:
-    batch_sizes: list = field(default_factory=list)
-    latencies: list = field(default_factory=list)
-    # accumulated per-stage seconds over every batch served: padding-ladder
-    # shaping, signature generation, probe+top-k (the device sync point),
-    # SW re-rank. Coarse wall-clock attribution — jax dispatch is async, so
-    # work issued in one stage can complete inside the next sync point;
-    # the probe stage carries that slack (documented in stats()).
-    stage: dict = field(default_factory=lambda: dict.fromkeys(_STAGES, 0.0))
-    truncations: int = 0            # batches whose probe hit max_probe_cap
+    """Bounded per-engine serving stats. The first cut kept EVERY batch
+    latency in a growing list — flagged wrong for always-on serving in
+    serve/metrics.py's own docstring — and its percentiles couldn't merge
+    across replicas. Fixed-log-bucket histograms fix both: O(buckets)
+    memory forever, and the registry children (labeled by engine name)
+    fold exactly across replicas (repro.obs.registry). Each batch is
+    observed twice — into the resettable ``stats()`` view here and into
+    the monotonic registry children (reset() must not rewind a scrape)."""
+
+    def __init__(self, name: str):
+        self._m_lat = _M_BATCH.labels(engine=name)
+        self._m_stage = {s: _M_STAGE.labels(engine=name, stage=s)
+                         for s in _STAGES}
+        self._m_queries = _M_QUERIES.labels(engine=name)
+        self._m_trunc = _M_TRUNC.labels(engine=name)
+        self.reset()
+
+    def reset(self) -> None:
+        self.lat = Histogram(self._m_lat.bounds)
+        # accumulated per-stage seconds over every batch served (coarse
+        # wall-clock attribution — jax dispatch is async, so work issued in
+        # one stage can complete inside the next sync point; the probe
+        # stage carries that slack, documented in stats())
+        self.stage = dict.fromkeys(_STAGES, 0.0)
+        self.n_queries = 0
+        self.truncations = 0        # batches whose probe hit max_probe_cap
+
+    def observe_batch(self, n_queries: int, seconds: float,
+                      stage_seconds: dict) -> None:
+        self.lat.observe(seconds)
+        self._m_lat.observe(seconds)
+        self.n_queries += n_queries
+        self._m_queries.inc(n_queries)
+        for s, v in stage_seconds.items():
+            self.stage[s] += v
+            self._m_stage[s].observe(v)
+
+    def observe_truncation(self) -> None:
+        self.truncations += 1
+        self._m_trunc.inc()
 
 
 class QueryEngine:
@@ -233,15 +286,16 @@ class QueryEngine:
     """
 
     def __init__(self, index: SignatureIndex, cfg: ServingConfig | None = None,
-                 *, ref_seqs=None, sharded=None):
+                 *, ref_seqs=None, sharded=None, name: str | None = None):
         self.index = index
         self.cfg = cfg or ServingConfig()
         self.sl = ScalLoPS(index.cfg)
         self.ref_seqs = ref_seqs
         self.sharded = sharded          # optional ShardedIndex fan-out path
+        self.name = name or f"engine{next(_engine_ids)}"
         self._probe_cap = self.cfg.probe_cap
         self._queue: list[tuple[np.ndarray, int]] = []
-        self._stats = _Stats()
+        self._stats = _Stats(self.name)
         self._ref_dev = None            # device-resident (ids, lens) for the
                                         # SW re-rank gather (uploaded once)
         if self.cfg.rerank and ref_seqs is None:
@@ -337,7 +391,7 @@ class QueryEngine:
                 self.index, q_sigs, k=k, cap=self._probe_cap,
                 max_cap=self.cfg.max_probe_cap)
         if truncated:
-            self._stats.truncations += 1
+            self._stats.observe_truncation()
             warnings.warn(
                 f"probe candidates truncated at max_probe_cap="
                 f"{self.cfg.max_probe_cap}; top-k may miss neighbors — "
@@ -353,13 +407,19 @@ class QueryEngine:
             nid, nd = self._rerank(ids, lens, nid, nd)
 
         t_end = time.perf_counter()
-        st = self._stats.stage
-        st["ladder"] += t_ladder - t0
-        st["sig"] += t_sig - t_ladder
-        st["probe"] += t_probe - t_sig
-        st["rerank"] += t_end - t_probe
-        self._stats.batch_sizes.append(B0)
-        self._stats.latencies.append(t_end - t0)
+        # spans from the timestamps already taken (no extra clock reads);
+        # the enclosing dispatch/route context tags them with the batch's
+        # query trace IDs (repro.obs.trace)
+        record_span("query_batch", t0, t_end, engine=self.name, B=B0)
+        record_span("ladder", t0, t_ladder)
+        record_span("sig", t_ladder, t_sig)
+        record_span("probe", t_sig, t_probe, cap=self._probe_cap,
+                    sharded=self.sharded is not None)
+        if self.cfg.rerank:
+            record_span("rerank", t_probe, t_end)
+        self._stats.observe_batch(B0, t_end - t0, {
+            "ladder": t_ladder - t0, "sig": t_sig - t_ladder,
+            "probe": t_probe - t_sig, "rerank": t_end - t_probe})
         return nid, nd
 
     def _mode(self) -> str:
@@ -438,34 +498,90 @@ class QueryEngine:
         return (np.take_along_axis(nid, order, axis=1),
                 np.take_along_axis(nd, order, axis=1))
 
+    # ------------------------------------------------------------ warmup
+    def warmup(self, q_ids=None, q_lens=None, *,
+               max_len: int | None = None) -> int:
+        """Compile every (batch-rung, length-quantum) serving shape before
+        traffic arrives, so the open-loop points of an SLO sweep measure
+        serving instead of XLA compiles (the jit cache keys on the padded
+        ARRAY width — warming only full-width rows silently leaves real
+        quanta cold, which the SLO benchmark learned the hard way).
+
+        With sample queries ``(q_ids, q_lens)``, first runs EVERY sample
+        through the engine to settle the grow-and-retry probe cap — the
+        worst *bucket* in the sample set decides the cap, not the longest
+        row, and a cap grown after warmup would retrace every rung
+        mid-traffic — then warms exactly the length quanta the samples
+        occupy at the settled cap. Without samples, synthesizes rows for
+        every quantum up to ``max_len`` (default: one quantum). Emits one
+        ``warmup`` span per (rung, quantum); returns shapes warmed. Runs
+        through ``query_batch``, so call :meth:`reset_stats` afterwards
+        if warmup batches must not pollute serving stats."""
+        quanta: dict[int, np.ndarray] = {}
+        qm = self.cfg.len_quantum
+        if q_ids is not None:
+            lens = np.asarray(q_lens)
+            for j, L in enumerate(lens):
+                q = int(-(-int(L) // qm) * qm)
+                if q not in quanta or int(L) > len(quanta[q]):
+                    quanta[q] = np.asarray(q_ids[j][:int(L)], np.int8)
+        else:
+            top = max(int(max_len or qm), qm)
+            for q in range(qm, (-(-top // qm) * qm) + 1, qm):
+                quanta[q] = np.zeros(q, np.int8)    # shapes are what compile
+        rungs = [b for b in self.cfg.batch_ladder if b <= self.cfg.max_batch]
+        if q_ids is not None:
+            # cap-settling pass: one chunked sweep over the full sample
+            # set so the rung loop below compiles at the FINAL cap
+            b = max(rungs)
+            lens32 = np.asarray(q_lens, np.int32)
+            with span("warmup", rung=b, engine=self.name, settle=True,
+                      samples=len(lens32)):
+                for i in range(0, len(lens32), b):
+                    self.query_batch(q_ids[i:i + b], lens32[i:i + b])
+        for b in rungs:
+            for q, row in sorted(quanta.items()):
+                with span("warmup", rung=b, quantum=q, engine=self.name):
+                    self.query_batch(np.repeat(row[None, :], b, axis=0),
+                                     np.full(b, len(row), np.int32))
+        return len(rungs) * len(quanta)
+
+    def reset_stats(self) -> None:
+        """Zero the ``stats()`` view (e.g. after warmup). The registry
+        children stay monotonic — a Prometheus scrape never rewinds."""
+        self._stats.reset()
+
     # ------------------------------------------------------------ stats
     def stats(self) -> dict:
-        """Latency/throughput summary over every batch served so far.
-        ``index_epoch`` is the backing index's segment counter — it moves
-        when the engine serves across a live refresh (``index.add`` landed
-        between batches) without the engine being rebuilt. ``stage_ms``
-        splits the accumulated wall-clock by serving stage
-        (ladder/sig/probe/rerank; jax dispatch is async, so the probe
-        stage — the device sync point — absorbs work issued earlier);
-        ``truncations`` counts batches whose probe overflowed even at
-        ``max_probe_cap`` (the no-silent-caps counter)."""
-        lat = np.asarray(self._stats.latencies)
-        nq = int(np.sum(self._stats.batch_sizes))
-        stage_ms = {s: v * 1e3 for s, v in self._stats.stage.items()}
-        if len(lat) == 0:
+        """Latency/throughput summary over every batch served so far —
+        bounded memory (fixed-log-bucket histograms, repro.obs.registry),
+        percentiles are bucket-interpolated estimates (<= one bucket's
+        relative width off the sample percentile). ``index_epoch`` is the
+        backing index's segment counter — it moves when the engine serves
+        across a live refresh (``index.add`` landed between batches)
+        without the engine being rebuilt. ``stage_ms`` splits the
+        accumulated wall-clock by serving stage (ladder/sig/probe/rerank;
+        jax dispatch is async, so the probe stage — the device sync point
+        — absorbs work issued earlier); ``truncations`` counts batches
+        whose probe overflowed even at ``max_probe_cap`` (the
+        no-silent-caps counter)."""
+        st = self._stats
+        lat = st.lat
+        stage_ms = {s: v * 1e3 for s, v in st.stage.items()}
+        if lat.count == 0:
             return dict(n_queries=0, n_batches=0, qps=0.0,
                         p50_ms=0.0, p95_ms=0.0, p99_ms=0.0, mean_ms=0.0,
                         stage_ms=stage_ms, truncations=0,
                         index_epoch=self.index.epoch)
         return dict(
-            n_queries=nq,
-            n_batches=len(lat),
-            qps=nq / float(lat.sum()),
-            p50_ms=float(np.percentile(lat, 50) * 1e3),
-            p95_ms=float(np.percentile(lat, 95) * 1e3),
-            p99_ms=float(np.percentile(lat, 99) * 1e3),
-            mean_ms=float(lat.mean() * 1e3),
+            n_queries=st.n_queries,
+            n_batches=lat.count,
+            qps=st.n_queries / lat.sum,
+            p50_ms=lat.quantile(0.50) * 1e3,
+            p95_ms=lat.quantile(0.95) * 1e3,
+            p99_ms=lat.quantile(0.99) * 1e3,
+            mean_ms=lat.mean * 1e3,
             stage_ms=stage_ms,
-            truncations=self._stats.truncations,
+            truncations=st.truncations,
             index_epoch=self.index.epoch,
         )

@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +65,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..core.hamming import hamming_distance
+from ..obs import span, trace_sentinel
+from ..obs.trace import record as record_span
 from ..util import shard_map_compat
 from .partition import pad_slabs_pow2
 from .service import BIG, _dedup_candidates, _probe_csr_positions
@@ -124,6 +127,7 @@ def _ring_program(devices: tuple, axis_name: str, Bl: int, cap: int, k: int,
         return jax.vmap(collect_band, in_axes=(1, 0, 0, 0, 0))(
             qk_c, keys_l, offs_l, ids_l, esig_l)
 
+    @trace_sentinel("ring", static_key=(devices, Bl, cap, k, has_delta))
     def shard_fn(qk, qs, *slabs):
         # qk (Bl, nb), qs (Bl, nw) — this shard's starting query block;
         # slabs arrive (1, nb, ...) after the P(ax) split: base
@@ -210,7 +214,7 @@ class ShardedIndex:
         self._place()
 
     # ------------------------------------------------------------ placement
-    def _put(self, part, quantize: bool = False):
+    def _put(self, part, quantize: bool = True):
         """Slabs go straight from host to their owning devices with a
         ``NamedSharding`` split on the shard axis — no single device ever
         materializes the full stack, and the jitted ring (whose in_specs
@@ -218,12 +222,16 @@ class ShardedIndex:
 
         ``quantize`` pads the bucket (U) and entry (E) axes to powers of
         two (:func:`repro.index.partition.pad_slabs_pow2` — the shared
-        inert-padding discipline) — used for DELTA slabs so successive
-        refreshes repeat slab shapes and the delta ring program stays
-        jit-cache-hot until the delta genuinely doubles."""
+        inert-padding discipline) so repeated placements repeat slab
+        shapes and the ring program stays jit-cache-hot. Originally only
+        the DELTA slabs were quantized; the recompile sentinel
+        (repro.obs.jit) showed the BASE slabs retracing the ring on every
+        compaction (+32 refs = new exact E = new program), so the base is
+        now quantized too — a major compaction only recompiles when a
+        slab genuinely crosses a power-of-two bin."""
         keys, offs, ids = part.host_slabs()
         esig = part.host_entry_sigs()
-        if quantize:
+        if quantize and ids.shape[-1] > 0:
             keys, offs, ids, esig = pad_slabs_pow2(keys, offs, ids, esig)
         sharding = NamedSharding(self.mesh, P(self.axis_name))
         slabs = tuple(jax.device_put(a, sharding)
@@ -237,8 +245,10 @@ class ShardedIndex:
         delta outgrows the base — never on a routine refresh."""
         index = self.index
         index.seal()
-        part = index.partition(self.n_shards)
-        self._slabs, self._esigs = self._put(part)
+        with span("place", cat="lifecycle", shards=self.n_shards,
+                  epoch=index.epoch):
+            part = index.partition(self.n_shards)
+            self._slabs, self._esigs = self._put(part)
         self._part = part
         self._delta = None          # (slabs, esigs) of segments past base
         self._delta_part = None
@@ -276,9 +286,12 @@ class ShardedIndex:
             if int(dpart.n_buckets.sum()) == 0:  # only invalid rows arrived
                 self._delta_epoch = index.epoch
                 return
-            self._delta = None      # drop the old delta before realloc
-            delta_slabs, delta_esigs = self._put(dpart, quantize=True)
-            self._delta = (delta_slabs, delta_esigs)
+            with span("refresh", cat="lifecycle",
+                      from_epoch=self._delta_epoch, to_epoch=index.epoch,
+                      entries=int(dpart.n_entries.sum())):
+                self._delta = None  # drop the old delta before realloc
+                delta_slabs, delta_esigs = self._put(dpart)
+                self._delta = (delta_slabs, delta_esigs)
             self._delta_part = dpart
             self._delta_epoch = index.epoch
 
@@ -286,7 +299,9 @@ class ShardedIndex:
         """Fold the delta slabs back into one base placement (serving-side
         compaction; probe results are identical before and after)."""
         with self.refresh_lock:
-            self._place()
+            with span("compact_serving", cat="lifecycle",
+                      epoch=self.index.epoch):
+                self._place()
 
     def _refresh_if_stale(self) -> None:
         with self.refresh_lock:
@@ -340,6 +355,7 @@ class ShardedIndex:
         qk_p[:B] = qk
         qs_p = np.tile(q[:1], (Bl * n, 1))
         qs_p[:B] = q
+        t_ring = time.perf_counter()
         while True:
             fn = self._ring_fn(Bl, cap, k, self._delta is not None)
             args = (qk_p, qs_p, *self._slabs, self._esigs)
@@ -350,6 +366,9 @@ class ShardedIndex:
             if not truncated or cap >= max_cap:
                 break
             cap = min(cap * 2, max_cap)     # grow-and-retry
+        record_span("ring_probe", t_ring, time.perf_counter(), B=B,
+                    shards=n, cap=cap, truncated=truncated,
+                    delta=self._delta is not None)
         nid = np.array(bid[:B])
         nd = np.array(bd[:B])
         nd[nd >= BIG] = -1

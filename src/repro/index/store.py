@@ -55,6 +55,7 @@ import numpy as np
 
 from ..core.pipeline import LSHConfig, ScalLoPS
 from ..core.join import band_keys
+from ..obs import span
 from . import segments as seglib
 from .segments import Segment
 
@@ -225,12 +226,16 @@ class SignatureIndex:
     def seal(self) -> None:
         """Seal pending rows into segments (bucket the new rows). Cheap
         relative to a rebuild: O(new rows), resident segments untouched."""
-        while self._pending:
-            sigs, valid, base = self._pending.pop(0)
-            self.segments.append(seglib.build_segment(
-                sigs, valid, base, layout=self.layout, f=self.cfg.f,
-                d=self.cfg.d, bands=self.bands, interleave=self.interleave,
-                key_hash=self.key_hash))
+        if not self._pending:
+            return
+        with span("seal", cat="lifecycle", pending=len(self._pending),
+                  epoch=len(self.segments)):
+            while self._pending:
+                sigs, valid, base = self._pending.pop(0)
+                self.segments.append(seglib.build_segment(
+                    sigs, valid, base, layout=self.layout, f=self.cfg.f,
+                    d=self.cfg.d, bands=self.bands,
+                    interleave=self.interleave, key_hash=self.key_hash))
 
     def _ensure_built(self) -> None:
         """Seal pending segments and materialize the merged bucket table."""
@@ -257,10 +262,12 @@ class SignatureIndex:
         self.seal()
         if len(self.segments) == 1:
             return
-        self._ensure_built()
-        self.segments = [Segment(0, self.sigs, self.valid, self._csr_np)]
-        self._pending = []
-        self.generation += 1
+        with span("compact_index", cat="lifecycle",
+                  segments=len(self.segments), size=self.size):
+            self._ensure_built()
+            self.segments = [Segment(0, self.sigs, self.valid, self._csr_np)]
+            self._pending = []
+            self.generation += 1
 
     def partition(self, n_shards: int | None = None) -> "BucketPartition":
         """Shard-owned stacked CSR slabs (:mod:`repro.index.partition`) —

@@ -30,6 +30,21 @@ import tempfile
 import time
 
 
+def _dump_obs(args) -> None:
+    """Write the observability artifacts the flags asked for: Prometheus
+    text exposition (--metrics-out) and/or the Chrome/Perfetto trace
+    (--trace-out; open at https://ui.perfetto.dev)."""
+    from ..obs import REGISTRY, TRACER
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            fh.write(REGISTRY.prometheus())
+        print(f"[obs]   metrics -> {args.metrics_out}")
+    if args.trace_out:
+        n = TRACER.export(args.trace_out)
+        print(f"[obs]   trace -> {args.trace_out} ({n} events; open in "
+              f"chrome://tracing or ui.perfetto.dev)")
+
+
 def _serve_async(args, data, loaded, mesh, ref_seqs, scfg, path):
     """Serve through the async tier: ReplicaFleet + AsyncEngine, one
     future per query, with ``--add-fasta`` ingested live mid-stream."""
@@ -46,9 +61,9 @@ def _serve_async(args, data, loaded, mesh, ref_seqs, scfg, path):
           f"max_wait={args.max_wait_ms}ms, "
           f"deadline={args.deadline_ms or 'none'}"
           f"{'' if args.deadline_ms is None else 'ms'}")
-    # warm-up: replicas share the compiled ring program, one compile total
-    fleet.query_batch(data["query_ids"][:args.batch],
-                      data["query_lens"][:args.batch])
+    # warm-up: every (rung, length-quantum) serving shape on every replica
+    # (replicas share the compiled ring programs — one compile total)
+    fleet.warmup(data["query_ids"], data["query_lens"])
 
     qids, qlens = data["query_ids"], data["query_lens"]
     ingest_ev = None
@@ -113,6 +128,7 @@ def _serve_async(args, data, loaded, mesh, ref_seqs, scfg, path):
             raise SystemExit(1)
     eng.close()
     fleet.close()
+    _dump_obs(args)
 
 
 def main(argv=None):
@@ -170,7 +186,21 @@ def main(argv=None):
                     help="async dispatch policy: a micro-batch launches "
                          "at --batch requests or when its oldest request "
                          "has waited this long (0 = greedy)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the process-wide metrics registry as "
+                         "Prometheus text exposition on exit (merged "
+                         "histograms, counters, recompile-sentinel counts)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable structured tracing and write a "
+                         "Chrome/Perfetto trace_event JSON on exit (every "
+                         "span carries its queries' trace IDs; open in "
+                         "chrome://tracing or ui.perfetto.dev)")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        from ..obs import enable as _trace_enable
+        _trace_enable()     # before any serving work: spans from the first
+                            # warm-up batch onward land in the buffer
 
     if args.shards > 1 and "XLA_FLAGS" not in os.environ:
         # must precede the first jax import (host platform device count)
@@ -252,9 +282,8 @@ def main(argv=None):
     print(f"[mode]  {mode} serving (probe candidates are exact within "
           f"Hamming d={args.d}; the dense path ranks ALL refs — raise --d "
           f"for deeper top-k recall under probe/sharded serving)")
-    # warm-up batch compiles the fixed-shape serving path
-    engine.query_batch(data["query_ids"][:args.batch],
-                       data["query_lens"][:args.batch])
+    # warm-up: every (rung, length-quantum) serving shape, pre-traffic
+    engine.warmup(data["query_ids"], data["query_lens"])
 
     # ---- grow the live index (append-only segment + delta refresh)
     if args.add_fasta:
@@ -283,8 +312,7 @@ def main(argv=None):
             print(f"[add]   delta refresh + first batch {time.time()-t0:.2f}s "
                   f"(replica epochs base={sharded.epoch[0]} "
                   f"delta={sharded.epoch[1]})")
-    engine._stats.batch_sizes.clear()
-    engine._stats.latencies.clear()
+    engine.reset_stats()        # warm-up/ingest batches aren't traffic
 
     qids, qlens = data["query_ids"], data["query_lens"]
     hits = 0
@@ -324,6 +352,7 @@ def main(argv=None):
         if not same:
             raise SystemExit(1)
 
+    _dump_obs(args)
     if args.index is None:
         import shutil
         shutil.rmtree(tmp_dir, ignore_errors=True)

@@ -1,0 +1,39 @@
+"""repro.obs — one observability substrate under every layer.
+
+ScalLoPS's core claim is *scalability across sourced computing
+resources*; the paper proves it with per-phase (map/shuffle/reduce) time
+attribution, and the extreme-scale follow-up (PAPERS.md) uses per-node
+pipeline-phase attribution as its primary evaluation instrument. This
+package is that instrument for our stack — the layer every perf PR
+measures itself with:
+
+* ``trace``    — structured spans with per-query trace IDs minted at
+  ``AsyncEngine.submit()`` and propagated (contextvar) through router →
+  replica → ring probe → re-rank, plus lifecycle events (seal, delta
+  refresh, compactions) and the all-pairs wave pipeline; bounded
+  thread-safe ring buffer; Chrome/Perfetto ``trace_event`` export;
+  disabled tracing costs one branch.
+* ``registry`` — mergeable metrics: fixed-log-bucket histograms (bucket
+  counts add exactly across replicas/shards — sample windows never
+  could), declared-at-registration counters and gauges, one process-wide
+  :data:`REGISTRY`, Prometheus text exposition + JSON snapshot.
+* ``jit``      — the recompile sentinel: every instrumented jitted
+  program body records a compile per (site, abstract signature); a key
+  compiling twice is a silent-recompile bug (this repo shipped two), and
+  ``SENTINEL.expect_no_compiles()`` turns "zero steady-state recompiles
+  after warmup" into an asserted invariant in tests and the SLO
+  benchmark.
+"""
+from .jit import SENTINEL, CompileSentinel, trace_sentinel
+from .registry import (REGISTRY, Counter, Gauge, Histogram, Registry,
+                       default_bounds)
+from .trace import (TRACER, Tracer, current_trace, disable, enable, instant,
+                    new_trace_id, record, span, trace_context)
+
+__all__ = [
+    "TRACER", "Tracer", "span", "instant", "record", "new_trace_id",
+    "trace_context", "current_trace", "enable", "disable",
+    "REGISTRY", "Registry", "Histogram", "Counter", "Gauge",
+    "default_bounds",
+    "SENTINEL", "CompileSentinel", "trace_sentinel",
+]

@@ -1,0 +1,150 @@
+"""Recompile sentinel: count program traces per cache key, loudly.
+
+This repo has shipped two *silent*-recompile bugs: the sharded self-join
+keyed its emission cache on a fresh ``Mesh`` per call (PR 5 fix), and the
+wave-pipeline cache keyed on the device *count* instead of the device
+tuple (PR 6 fix). Both were invisible precisely because a recompile
+looks like a slow batch, not an error. The sentinel makes compiles a
+first-class observable: every instrumented program body bumps a counter
+keyed by ``(site, abstract signature)`` and records a ``compile`` trace
+instant, and :meth:`CompileSentinel.expect_no_compiles` turns "zero
+steady-state recompiles after warmup" into an *asserted invariant* —
+in tests and in the SLO benchmark.
+
+How it counts: :func:`trace_sentinel` wraps the Python body of a
+``jax.jit``-ed function. Under jit, that body only executes while JAX is
+**tracing** — once per new abstract signature per compiled program — so
+each execution is exactly one (re)trace/compile. The key is the abstract
+signature (shapes + dtypes + static args), which means the sentinel
+distinguishes the two failure modes:
+
+* a **new key** compiling once — expected (a cold shape, a grown cap);
+* the **same key** compiling twice — a silent recompile: some cache
+  upstream (an lru_cache on a Mesh, a rebuilt closure) failed to reuse
+  the program it already paid for. ``counts()`` makes these jump out
+  (``n > 1``), and the fresh-``Mesh`` regression test in
+  tests/test_obs.py pins that the sentinel fires on exactly this.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+
+from .registry import REGISTRY
+from .trace import instant
+
+__all__ = ["SENTINEL", "CompileSentinel", "trace_sentinel"]
+
+_compiles = REGISTRY.counter(
+    "jit_compiles", "program (re)traces recorded by the recompile "
+    "sentinel, by instrumented site", labelnames=("site",))
+
+
+def _abstract_key(args, kwargs) -> tuple:
+    """Stable signature of a trace: (shape, dtype) for array-likes (incl.
+    tracers), repr for static/python args. Two traces with equal keys are
+    the *same* program being paid for twice."""
+    def one(a):
+        shape = getattr(a, "shape", None)
+        dtype = getattr(a, "dtype", None)
+        if shape is not None and dtype is not None:
+            return ("arr", tuple(shape), str(dtype))
+        return repr(a)
+    return (tuple(one(a) for a in args),
+            tuple((k, one(v)) for k, v in sorted(kwargs.items())))
+
+
+class CompileSentinel:
+    """Thread-safe compile counter keyed by (site, abstract signature)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counts: dict[tuple, int] = {}
+
+    def record(self, site: str, key: tuple) -> None:
+        with self._lock:
+            k = (site, key)
+            self._counts[k] = self._counts.get(k, 0) + 1
+            n = self._counts[k]
+        _compiles.inc(site=site)
+        instant("compile", cat="jit", site=site, n_for_key=n)
+
+    # ------------------------------------------------------------ read
+    def counts(self, site: str | None = None) -> dict:
+        """{(site, key): n}; filtered to one site when given."""
+        with self._lock:
+            items = dict(self._counts)
+        if site is None:
+            return items
+        return {k: v for k, v in items.items() if k[0] == site}
+
+    def total(self, site: str | None = None) -> int:
+        return sum(self.counts(site).values())
+
+    def by_site(self) -> dict:
+        """{site: total compiles} — the summary a benchmark reports."""
+        out: dict[str, int] = {}
+        for (site, _key), n in self.counts().items():
+            out[site] = out.get(site, 0) + n
+        return out
+
+    def recompiled(self) -> dict:
+        """Keys compiled MORE than once — each one is a silent-recompile
+        bug (the program was paid for, then paid for again)."""
+        return {k: n for k, n in self.counts().items() if n > 1}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counts.clear()
+
+    # ------------------------------------------------------------ assert
+    @contextlib.contextmanager
+    def expect_no_compiles(self, site: str | None = None, *,
+                           message: str = ""):
+        """Assert that the enclosed block triggers ZERO (re)compiles —
+        the steady-state invariant a warmed serving tier must hold."""
+        before = self.counts(site)
+        yield
+        after = self.counts(site)
+        fresh = {k: after[k] - before.get(k, 0)
+                 for k in after if after[k] != before.get(k, 0)}
+        if fresh:
+            rows = "\n".join(f"  {s}: +{n} (key={key!r})"
+                             for (s, key), n in sorted(fresh.items()))
+            raise AssertionError(
+                f"{message or 'steady state violated'}: "
+                f"{sum(fresh.values())} compile(s) inside a zero-compile "
+                f"region —\n{rows}")
+
+
+SENTINEL = CompileSentinel()
+
+
+def trace_sentinel(site: str, static_key: tuple = ()):
+    """Decorate a function body placed UNDER ``jax.jit`` (or built inside
+    a cached program builder) so every trace of it is recorded::
+
+        @functools.partial(jax.jit, static_argnames=("cap",))
+        @trace_sentinel("probe_fused")
+        def _probe_csr_fused(...): ...
+
+    ``static_key`` is for bodies built inside a cached program *builder*
+    (``_ring_program(devices, cap, ...)``): statics captured by closure
+    are invisible in the call arguments, so without them in the key a
+    legitimate rebuild at a new cap looks identical to a silent recompile
+    of the old one — pass the builder's cache key through::
+
+        @trace_sentinel("ring", static_key=(devices, Bl, cap, k))
+        def shard_fn(...): ...
+
+    Adds one host-side dict bump per *trace*, nothing per call — compiled
+    executions never re-enter the Python body."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def inner(*args, **kwargs):
+            SENTINEL.record(site, _abstract_key(args, kwargs)
+                            + (("static", static_key),))
+            return fn(*args, **kwargs)
+        return inner
+    return deco

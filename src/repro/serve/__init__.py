@@ -17,7 +17,16 @@ package is that tier, built entirely on the PR 4/5 machinery:
   compaction) that never takes a replica out of rotation unserved —
   epoch-tagged handoff per batch.
 * ``metrics`` — rolling p50/p95/p99 windows and shed/truncation counters
-  behind ``stats()``.
+  behind ``stats()``, now thin adapters over :mod:`repro.obs` (samples
+  mirror into mergeable registry histograms; counter names are declared
+  and typos warn).
+
+Observability (:mod:`repro.obs`): ``submit()`` mints a per-query trace
+ID that rides a contextvar through dispatch → router → replica → ring →
+rerank, so an exported trace reconstructs every request's full path;
+``warmup()`` on both the engine and the fleet compiles every serving
+shape pre-traffic, and the recompile sentinel asserts steady state stays
+compile-free.
 
 The closed-loop SLO benchmark lives in ``benchmarks/serve_slo.py``
 (offered-QPS sweep, latency knee, ``BENCH_serve.json``).

@@ -29,6 +29,7 @@ makes shedding decisions deterministic under a fake clock in tests.
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
@@ -38,11 +39,32 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..core.alphabet import PAD, encode
+from ..obs import REGISTRY, instant, new_trace_id, span, trace_context
 from .metrics import Counters, Rolling
 
 #: EWMA smoothing for the per-rung batch-cost model (higher = faster
 #: adaptation to load shifts, lower = steadier admission decisions).
 COST_ALPHA = 0.3
+
+# registry families (children labeled by the async engine's name; the
+# Rolling windows mirror into the *_seconds histograms, so per-process
+# snapshots keep their exact window percentiles while the registry view
+# merges across engines/processes)
+_M_QUEUE = REGISTRY.histogram(
+    "async_queue_seconds", "submit -> dispatch queue wait",
+    labelnames=("engine",))
+_M_TOTAL = REGISTRY.histogram(
+    "async_total_seconds", "submit -> resolve request latency",
+    labelnames=("engine",))
+_M_REQS = REGISTRY.counter(
+    "async_requests", "submitted requests by outcome (completed / "
+    "shed_queue_full / shed_deadline / shed_shutdown)",
+    labelnames=("engine", "outcome"))
+_M_DEPTH = REGISTRY.gauge(
+    "async_queue_depth", "queued requests at last dispatch",
+    labelnames=("engine",))
+
+_async_ids = itertools.count()
 
 
 @dataclass(frozen=True)
@@ -82,6 +104,7 @@ class _Request:
     length: int
     t_submit: float
     deadline: float | None          # absolute clock() seconds, or None
+    trace: int = 0                  # trace ID minted at submit (obs.trace)
     future: Future = field(default_factory=Future)
 
 
@@ -118,7 +141,8 @@ class AsyncEngine:
                  queue_depth: int = 1024,
                  default_deadline_ms: float | None = None,
                  clock=time.monotonic, window: int = 4096,
-                 start: bool = True):
+                 name: str | None = None,
+                 warmup=None, start: bool = True):
         self.backend = backend
         self.max_batch = int(backend.cfg.max_batch)
         self._ladder = tuple(backend.cfg.batch_ladder)
@@ -128,13 +152,22 @@ class AsyncEngine:
         self._clock = clock
         self._q: queue.Queue = queue.Queue(maxsize=int(queue_depth))
         self._cost_ms: dict[int, float] = {}    # ladder rung -> EWMA ms
+        self.name = name or f"async{next(_async_ids)}"
         self.counters = Counters("submitted", "completed", "shed_queue_full",
                                  "shed_deadline", "shed_shutdown",
                                  "batches")
-        self.queue_lat = Rolling(window)        # submit -> dispatch seconds
-        self.total_lat = Rolling(window)        # submit -> resolve seconds
+        # exact window percentiles locally; merged histograms globally
+        self.queue_lat = Rolling(window, _M_QUEUE.labels(engine=self.name))
+        self.total_lat = Rolling(window, _M_TOTAL.labels(engine=self.name))
+        self._m_reqs = _M_REQS
+        self._m_depth = _M_DEPTH.labels(engine=self.name)
         self._closed = threading.Event()
         self._thread = None
+        if warmup is not None:      # compile every serving shape pre-traffic
+            if isinstance(warmup, tuple):
+                self.warmup(*warmup)
+            else:
+                self.warmup()
         if start:
             self._thread = threading.Thread(
                 target=self._loop, name="serve-dispatch", daemon=True)
@@ -158,18 +191,24 @@ class AsyncEngine:
             deadline = now + self.default_deadline
         else:
             deadline = None
-        req = _Request(row, len(row), now, deadline)
+        tid = new_trace_id()
+        req = _Request(row, len(row), now, deadline, trace=tid)
         self.counters.bump("submitted")
+        instant("submit", trace=[tid], engine=self.name, len=req.length)
         if self._closed.is_set():
-            self.counters.bump("shed_shutdown")
-            _resolve(req.future, Rejected("shutdown"))
+            self._shed(req, "shutdown")
             return req.future
         try:
             self._q.put_nowait(req)
         except queue.Full:
-            self.counters.bump("shed_queue_full")
-            _resolve(req.future, Rejected("queue_full"))
+            self._shed(req, "queue_full")
         return req.future
+
+    def _shed(self, req: _Request, reason: str, **kw) -> None:
+        self.counters.bump(f"shed_{reason}")
+        self._m_reqs.inc(engine=self.name, outcome=f"shed_{reason}")
+        instant("shed", trace=[req.trace], reason=reason)
+        _resolve(req.future, Rejected(reason, **kw))
 
     def pending(self) -> int:
         return self._q.qsize()
@@ -222,6 +261,7 @@ class AsyncEngine:
         batch = self._collect(timeout)
         if not batch:
             return 0
+        self._m_depth.set(self._q.qsize())
         now = self._clock()
         predicted = self.predicted_ms(len(batch))
         admitted = []
@@ -229,10 +269,9 @@ class AsyncEngine:
             # queue time is already inside `now`; shedding asks whether
             # the batch this request would join can finish by its deadline
             if r.deadline is not None and now + predicted / 1e3 > r.deadline:
-                self.counters.bump("shed_deadline")
-                _resolve(r.future, Rejected(
-                    "deadline", queued_ms=(now - r.t_submit) * 1e3,
-                    predicted_ms=predicted))
+                self._shed(r, "deadline",
+                           queued_ms=(now - r.t_submit) * 1e3,
+                           predicted_ms=predicted)
             else:
                 admitted.append(r)
         if not admitted:
@@ -244,8 +283,14 @@ class AsyncEngine:
         for j, r in enumerate(admitted):
             ids[j, :r.length] = r.row
             lens[j] = r.length
+        tids = tuple(r.trace for r in admitted)
         t0 = self._clock()
-        out = self.backend.query_batch(ids, lens)
+        # every span beneath (route, query_batch, probe, ring, rerank) is
+        # tagged with this batch's query trace IDs via the contextvar
+        with trace_context(tids):
+            with span("dispatch", n=n, engine=self.name,
+                      predicted_ms=round(predicted, 3)):
+                out = self.backend.query_batch(ids, lens)
         dt = self._clock() - t0
         if len(out) == 3:
             nid, nd, epoch = out
@@ -258,8 +303,10 @@ class AsyncEngine:
         done = self._clock()
         for j, r in enumerate(admitted):
             self.counters.bump("completed")
+            self._m_reqs.inc(engine=self.name, outcome="completed")
             self.queue_lat.add(t0 - r.t_submit)
             self.total_lat.add(done - r.t_submit)
+            instant("resolve", trace=[r.trace], engine=self.name)
             _resolve(r.future, Completed(
                 nid[j], nd[j], epoch,
                 queued_ms=(t0 - r.t_submit) * 1e3, batch_ms=dt * 1e3))
@@ -268,6 +315,20 @@ class AsyncEngine:
     def _loop(self) -> None:
         while not self._closed.is_set():
             self._drain_once(timeout=0.02)
+
+    # ------------------------------------------------------------ warmup
+    def warmup(self, q_ids=None, q_lens=None, *,
+               max_len: int | None = None) -> int:
+        """Compile every (batch-rung, length-quantum) serving shape on the
+        backend before traffic arrives (delegates to the backend's own
+        ``warmup`` — :meth:`QueryEngine.warmup` /
+        :meth:`ReplicaFleet.warmup`); pass ``warmup=True`` or
+        ``warmup=(q_ids, q_lens)`` at construction to do this
+        automatically. Returns the number of shapes warmed."""
+        wu = getattr(self.backend, "warmup", None)
+        if wu is None:
+            return 0
+        return wu(q_ids, q_lens, max_len=max_len)
 
     # ------------------------------------------------------------ lifecycle
     def close(self, timeout: float = 30.0) -> None:
@@ -284,8 +345,7 @@ class AsyncEngine:
                 r = self._q.get_nowait()
             except queue.Empty:
                 break
-            self.counters.bump("shed_shutdown")
-            _resolve(r.future, Rejected("shutdown"))
+            self._shed(r, "shutdown")
 
     def __enter__(self):
         return self

@@ -49,6 +49,7 @@ import numpy as np
 
 from ..index.service import QueryEngine, ServingConfig
 from ..index.shard import ShardedIndex
+from ..obs import span
 from .metrics import Counters
 
 
@@ -76,7 +77,8 @@ class ReplicaFleet:
 
     def __init__(self, index, cfg: ServingConfig | None = None, *,
                  n_replicas: int = 2, mesh=None, ref_seqs=None,
-                 minor_compact_every: int = 4, start_ingest: bool = True):
+                 minor_compact_every: int = 4, warmup=None,
+                 start_ingest: bool = True):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         self.index = index
@@ -91,7 +93,7 @@ class ReplicaFleet:
             sharded = ShardedIndex(index, mesh)
             sharded.refresh_lock = self._lifecycle
             engine = QueryEngine(index, self.cfg, sharded=sharded,
-                                 ref_seqs=ref_seqs)
+                                 ref_seqs=ref_seqs, name=f"replica{i}")
             self._replicas.append(_Replica(f"replica{i}", engine, sharded))
         self._pick_lock = threading.Lock()
         self._ticket = 0
@@ -100,6 +102,11 @@ class ReplicaFleet:
         self._ingest_q: queue.Queue = queue.Queue()
         self._closed = threading.Event()
         self._ingest_thread = None
+        if warmup is not None:      # compile every serving shape pre-traffic
+            if isinstance(warmup, tuple):
+                self.warmup(*warmup)
+            else:
+                self.warmup()
         if start_ingest:
             self._ingest_thread = threading.Thread(
                 target=self._ingest_loop, name="serve-ingest", daemon=True)
@@ -137,7 +144,8 @@ class ReplicaFleet:
             with self._pick_lock:
                 rep.outstanding += 1
                 rep.last_used = self._ticket
-            nid, nd = rep.engine.query_batch(ids, lens)
+            with span("route", replica=rep.name):
+                nid, nd = rep.engine.query_batch(ids, lens)
             # read under rep.lock: this is exactly what the batch saw
             epoch = rep.sharded.epoch[1]
         finally:
@@ -166,18 +174,22 @@ class ReplicaFleet:
             self._apply_ingest(*item)
 
     def _apply_ingest(self, ref_ids, ref_lens, ev) -> None:
-        with self._lifecycle:
-            self.index.add(ref_ids, ref_lens)
-            self.index.seal()       # segments exist before replicas look
-        for rep in self._replicas:  # rolling: one replica off at a time
-            with rep.lock:
-                rep.sharded.refresh()
+        with span("ingest", cat="lifecycle", rows=len(ref_lens),
+                  epoch=self.index.epoch):
+            with self._lifecycle:
+                self.index.add(ref_ids, ref_lens)
+                self.index.seal()   # segments exist before replicas look
+            for rep in self._replicas:  # rolling: one replica at a time
+                with rep.lock:
+                    rep.sharded.refresh()
         self.counters.bump("ingests")
         if self.minor_compact_every > 0 and \
                 self.counters["ingests"] % self.minor_compact_every == 0:
-            for rep in self._replicas:
-                with rep.lock:
-                    rep.sharded.compact()
+            with span("minor_compaction", cat="lifecycle",
+                      epoch=self.index.epoch):
+                for rep in self._replicas:
+                    with rep.lock:
+                        rep.sharded.compact()
             self.counters.bump("minor_compactions")
         ev.set()
 
@@ -195,12 +207,32 @@ class ReplicaFleet:
         """Major compaction: fold the index's segments into one
         (``generation`` bump) and re-place every replica — rolling, so
         serving stays live; results are identical before and after."""
-        with self._lifecycle:
-            self.index.compact()
+        with span("major_compaction", cat="lifecycle",
+                  epoch=self.index.epoch,
+                  generation=self.index.generation):
+            with self._lifecycle:
+                self.index.compact()
+            for rep in self._replicas:
+                with rep.lock:
+                    rep.sharded.refresh()   # generation bump -> re-place
+        self.counters.bump("major_compactions")
+
+    # ------------------------------------------------------------ warmup
+    def warmup(self, q_ids=None, q_lens=None, *,
+               max_len: int | None = None) -> int:
+        """Warm EVERY replica's engine directly (the router would send all
+        warmup batches to whichever replica is free, leaving the others
+        cold); same per-(rung, length-quantum) sweep as
+        :meth:`QueryEngine.warmup`. Returns total shapes warmed. Replicas
+        over equal meshes share compiled ring programs, so replicas after
+        the first warm from cache — but their grow-and-retry probe caps
+        still settle per replica, which is the point of warming each."""
+        total = 0
         for rep in self._replicas:
             with rep.lock:
-                rep.sharded.refresh()   # generation bump -> full re-place
-        self.counters.bump("major_compactions")
+                total += rep.engine.warmup(q_ids, q_lens, max_len=max_len)
+                rep.engine.reset_stats()    # warmup batches aren't traffic
+        return total
 
     # ------------------------------------------------------------ lifecycle
     def close(self, timeout: float = 30.0) -> None:

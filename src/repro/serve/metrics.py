@@ -1,15 +1,20 @@
-"""Serving-tier observability primitives: rolling percentiles + counters.
+"""Serving-tier observability adapters: rolling percentiles + counters.
 
-The synchronous :class:`~repro.index.service.QueryEngine` keeps *every*
-batch latency forever — fine for a benchmark pass, wrong for an always-on
-tier where stats() is polled while millions of requests stream through.
-:class:`Rolling` keeps a bounded window (recent behaviour, O(1) memory);
-:class:`Counters` is a plain named-counter bag shared by the async engine
-and the fleet so shed/truncation accounting lives in one shape.
+These are now thin adapters over :mod:`repro.obs`. :class:`Rolling`
+keeps its exact sample-window percentiles (tests pin the exact values,
+and a window is the right view for "recent behaviour") but can *mirror*
+every sample into a registry :class:`~repro.obs.registry.Histogram`
+child, whose fixed-log-bucket counts merge exactly across replicas and
+processes — the window alone never could. :class:`Counters` is a plain
+named-counter bag whose names are **declared at construction**; bumping
+an undeclared name warns (a typo'd counter name used to vanish silently
+into a fresh key) but still counts, so existing callers keep working
+while the typo surfaces.
 """
 from __future__ import annotations
 
 import threading
+import warnings
 from collections import deque
 
 import numpy as np
@@ -18,17 +23,23 @@ import numpy as np
 class Rolling:
     """Rolling latency window: ``add(seconds)``, read p50/p95/p99 over the
     most recent ``window`` samples. Thread-safe — the dispatch thread adds
-    while callers snapshot."""
+    while callers snapshot. ``hist`` (optional) is a
+    :class:`repro.obs.registry.Histogram` that receives every sample too:
+    the window answers "what is latency *now*", the histogram merges
+    across replicas and never forgets."""
 
-    def __init__(self, window: int = 4096):
+    def __init__(self, window: int = 4096, hist=None):
         self._buf: deque = deque(maxlen=int(window))
         self._n = 0                     # total ever added (not windowed)
         self._lock = threading.Lock()
+        self._hist = hist
 
     def add(self, seconds: float) -> None:
         with self._lock:
             self._buf.append(float(seconds))
             self._n += 1
+        if self._hist is not None:
+            self._hist.observe(seconds)
 
     def __len__(self) -> int:
         with self._lock:
@@ -61,13 +72,25 @@ class Rolling:
 
 
 class Counters:
-    """Thread-safe named counters (shed reasons, ingests, compactions)."""
+    """Thread-safe named counters (shed reasons, ingests, compactions).
+
+    Names are declared at construction. An undeclared ``bump`` warns —
+    the registry's declared-at-registration discipline, adapted: the old
+    behaviour silently created a fresh key, so a typo'd name split the
+    count in two and both halves looked plausible. The bump still counts
+    (back-compat), but the typo is now loud."""
 
     def __init__(self, *names: str):
         self._lock = threading.Lock()
         self._c = {n: 0 for n in names}
+        self._declared = frozenset(names)
 
     def bump(self, name: str, by: int = 1) -> None:
+        if name not in self._declared:
+            warnings.warn(
+                f"Counters.bump({name!r}): undeclared counter name "
+                f"(declared: {sorted(self._declared)}) — counting anyway, "
+                f"but check for a typo", stacklevel=2)
         with self._lock:
             self._c[name] = self._c.get(name, 0) + by
 
