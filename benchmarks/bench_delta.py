@@ -29,8 +29,29 @@ def _load(path):
         return None
 
 
+def compare_chaos(fresh: dict, base: dict) -> list[str]:
+    """Chaos artifacts: the fault counters are DETERMINISTIC (the plan
+    scripts every fault by call number), so any drift at all — one more
+    retry, one fewer quarantine — means the failure semantics changed
+    and is flagged; there is no noise threshold to hide behind."""
+    fc, bc = fresh.get("fault_counters"), base.get("fault_counters")
+    if not fc or not bc:
+        return [f"fault_counters missing (fresh={bool(fc)}, "
+                f"baseline={bool(bc)})"]
+    warnings = []
+    for key in sorted(set(fc) | set(bc)):
+        fv, bv = fc.get(key), bc.get(key)
+        if fv != bv:
+            warnings.append(
+                f"fault-path count {key!r} changed: {bv} -> {fv} "
+                f"(deterministic — this is a semantics change, not noise)")
+    return warnings
+
+
 def compare(fresh: dict, base: dict, threshold: float = 0.20) -> list[str]:
     """Return warning strings for every knee metric past the threshold."""
+    if fresh.get("bench") == "chaos_soak" or "fault_counters" in fresh:
+        return compare_chaos(fresh, base)
     warnings = []
     fk, bk = fresh.get("knee"), base.get("knee")
     if not fk or not bk:
@@ -69,9 +90,14 @@ def main(argv=None) -> int:
     if fresh is None or base is None:
         return 0    # missing artifact: nothing to compare, never block
     warnings = compare(fresh, base, args.threshold)
+    chaos = fresh.get("bench") == "chaos_soak" or "fault_counters" in fresh
+    title = "chaos fault-count drift" if chaos else "serve_slo knee regression"
     for w in warnings:
-        print(f"::warning title=serve_slo knee regression::{w}")
-    if not warnings:
+        print(f"::warning title={title}::{w}")
+    if not warnings and chaos:
+        print(f"bench_delta: chaos fault counters identical to baseline "
+              f"({len(fresh.get('fault_counters', {}))} counters)")
+    elif not warnings:
         fk, bk = fresh["knee"], base["knee"]
         print(f"bench_delta: knee within {args.threshold:.0%} of baseline "
               f"(achieved {fk['achieved_qps']:.1f} vs {bk['achieved_qps']:.1f}"

@@ -1,0 +1,381 @@
+"""Chaos soak: the serving closed loop under a scripted fault plan.
+
+``serve_slo.py`` proves the tier holds its SLO when nothing goes wrong;
+this benchmark proves what happens when things DO go wrong is exactly
+what the design says. A deterministic :class:`~repro.faults.FaultPlan`
+scripts faults at named sites by per-site call number, the phases below
+drive traffic through the same AsyncEngine + ReplicaFleet stack, and
+every assertion is **exact** — the script says which calls fail, so the
+retry/quarantine/degraded/shed counters are a deterministic function of
+the script, not a distribution to eyeball:
+
+* **transient**  — two isolated replica failures; both batches must be
+  retried on the other replica and complete (zero user-visible errors).
+* **blackout**   — four adjacent failures take both replicas down:
+  exactly 2 quarantines, 3 typed degraded batches (never an exception),
+  then — after the quarantine expires — exactly 2 half-open probes and
+  2 readmissions bring the fleet back.
+* **dispatch kill** — the dispatch thread dies mid-batch: the in-flight
+  future resolves ``Rejected("internal", detail=...)`` and the
+  supervisor restarts the loop (the next query completes normally).
+* **soak**       — an open-loop run with a killed-then-retried ingest
+  (the ticket resolves WITH the error; the supervisor restarts; the
+  re-ingest advances the epoch) and a scripted latency spike; zero
+  sheds, zero stranded futures.
+* **bit-exact**  — every completed query from every phase is replayed
+  against a from-scratch rebuild of the index at the epoch it was
+  answered at; ids and distances must match bit-for-bit (the PR 5
+  epoch contract survives retries, restarts, and degradation).
+* **torn write + recovery** — the plan tears one segment write on a
+  saved copy; ``load()`` raises a typed :class:`CorruptSegment` naming
+  the file, ``load(recover=True)`` quarantines the tail and serves the
+  longest valid prefix — bit-exact with a rebuild of that prefix.
+
+Emits ``BENCH_chaos.json`` whose ``fault_counters`` block is fully
+deterministic — ``bench_delta.py`` flags ANY drift against the committed
+baseline (a changed fault count means the failure semantics changed).
+
+  PYTHONPATH=src python -m benchmarks.chaos_soak --smoke        # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _run(args):
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import LSHConfig
+    from repro.core.alphabet import ALPHABET_SIZE, PAD
+    from repro.data import SyntheticProteinConfig, make_protein_sets
+    from repro.faults import FaultPlan, InjectedFault
+    from repro.index import (QueryEngine, ServingConfig, ShardedIndex,
+                             SignatureIndex)
+    from repro.index.segments import CorruptSegment
+    from repro.serve import AsyncEngine, ReplicaFleet
+
+    from benchmarks.serve_slo import _open_loop_point
+
+    S = args.shards
+    assert jax.device_count() >= S, f"need {S} devices, got {jax.devices()}"
+    csv = print
+    csv("bench,metric,value")
+
+    data = make_protein_sets(SyntheticProteinConfig(
+        n_refs=args.n_refs, n_homolog_queries=args.n_queries // 4,
+        n_decoy_queries=args.n_queries - args.n_queries // 4,
+        ref_len_mean=150, ref_len_std=30, sub_rates=(0.05, 0.15), seed=13))
+    qids, qlens = data["query_ids"], data["query_lens"]
+    nq = len(qlens)
+    cfg = LSHConfig(k=3, T=13, f=32, d=1)
+    index = SignatureIndex.build(cfg, data["ref_ids"], data["ref_lens"])
+    index._ensure_built()
+    mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
+    scfg = ServingConfig(k=args.k, max_batch=args.batch, mode="probe")
+
+    # the mid-soak ingest batch (same recipe as serve_slo's)
+    rng = np.random.default_rng(7)
+    new_lens = rng.integers(100, 180, size=32).astype(np.int32)
+    new_ids = np.full((32, int(new_lens.max())), PAD, np.int8)
+    for r, L in enumerate(new_lens):
+        new_ids[r, :L] = rng.integers(0, ALPHABET_SIZE, size=L,
+                                      dtype=np.int8)
+
+    fleet = ReplicaFleet(index, scfg, n_replicas=2, mesh=mesh,
+                         fail_threshold=2, quarantine_s=args.quarantine_s,
+                         max_retries=1, warmup=(qids, qlens))
+    eng = AsyncEngine(fleet, max_wait_ms=2.0, name="chaos")
+    epoch0 = index.epoch
+
+    results = {"bench": "chaos_soak", "n_refs": args.n_refs,
+               "shards": S, "quarantine_s": args.quarantine_s,
+               "devices": jax.device_count()}
+    all_futs = []            # EVERY future this run creates (none may strand)
+    completed = []           # (query_j, outcome) for the bit-exact replay
+
+    def serial(j):
+        """Submit query j and wait: one batch, one dispatch call."""
+        fut = eng.submit(qids[j][:qlens[j]])
+        all_futs.append(fut)
+        out = fut.result(timeout=120)
+        if out.ok:
+            completed.append((j, out))
+        return out
+
+    def snap():
+        c = fleet.counters
+        return {k: c[k] for k in
+                ("batches", "retries", "retry_success", "replica_failures",
+                 "replica_quarantines", "replica_probes",
+                 "replica_readmissions", "degraded_batches",
+                 "ingests", "ingest_failures")}
+
+    plan = FaultPlan()
+    # -- transient: two isolated replica faults, absorbed by retry
+    plan.add("replica.query", "raise", on={3, 8})
+    # -- blackout: four adjacent faults -> both replicas quarantined
+    plan.add("replica.query", "raise", on={13, 14, 15, 16})
+    # -- dispatch kill: engine.dispatch calls are 1/batch; phases below
+    #    make calls 1..15 (transient 10, blackout 3 + 2 recovery), so the
+    #    16th dispatched batch is the scripted thread death
+    plan.add("engine.dispatch", "kill", on=16)
+    # -- soak: first ingest apply dies; a later query batch runs slow
+    plan.add("ingest.apply", "kill", on=1)
+    plan.add("replica.query", "latency", on=20, delay_s=0.05)
+
+    with plan:
+        # ---- phase 1: transient replica faults --------------------------
+        base = snap()
+        outs = [serial(i % nq) for i in range(10)]
+        assert all(o.ok for o in outs), \
+            f"transient faults leaked to callers: {outs}"
+        d = {k: snap()[k] - base[k] for k in base}
+        assert (d["retries"], d["retry_success"]) == (2, 2), d
+        assert d["replica_failures"] == 2 and \
+            d["replica_quarantines"] == 0 and d["degraded_batches"] == 0, d
+        csv("chaos,transient_retries,2/2 recovered")
+        results["transient"] = d
+
+        # ---- phase 2: blackout -> degraded -> probe -> readmit ----------
+        base = snap()
+        deg = [serial(i % nq) for i in range(3)]
+        assert all((not o.ok) and getattr(o, "degraded", False)
+                   for o in deg), f"blackout must degrade, got {deg}"
+        assert all(o.coverage == 0.0 for o in deg[1:]), deg
+        time.sleep(args.quarantine_s + 0.5)     # let quarantine expire
+        back = [serial(i % nq) for i in range(2)]
+        assert all(o.ok for o in back), f"readmission failed: {back}"
+        d = {k: snap()[k] - base[k] for k in base}
+        assert d["degraded_batches"] == 3 and \
+            d["replica_quarantines"] == 2 and \
+            d["replica_probes"] == 2 and d["replica_readmissions"] == 2, d
+        csv("chaos,blackout,3 degraded (typed), 2 quarantined, "
+            "2 probed, 2 readmitted")
+        results["blackout"] = d
+
+        # ---- phase 3: dispatch-thread death -----------------------------
+        out = serial(0)
+        assert (not out.ok) and out.reason == "internal" \
+            and "injected" in out.detail, out
+        out = serial(1)     # supervisor restarted the loop: next one serves
+        assert out.ok, f"dispatch never came back: {out}"
+        ds = eng.stats()["dispatch"]
+        assert ds["crashes"] == 1 and ds["alive"] and not ds["degraded"], ds
+        assert eng.counters["shed_internal"] == 1
+        csv("chaos,dispatch_kill,1 typed internal rejection, restarted")
+        results["dispatch_kill"] = dict(crashes=ds["crashes"],
+                                        shed_internal=1)
+
+        # ---- phase 4: open-loop soak with ingest kill + latency spike ---
+        base = snap()
+        tickets = {}
+
+        def on_submit(i):
+            if i == 8 and "killed" not in tickets:
+                tickets["killed"] = fleet.ingest(new_ids, new_lens)
+            if i == 20 and "retried" not in tickets:
+                t1 = tickets["killed"]
+                t1.wait(timeout=60)     # resolves WITH the error attached
+                assert t1.error is not None and "injected" in t1.error, \
+                    f"killed ingest ticket: set={t1.is_set()} err={t1.error}"
+                tickets["retried"] = fleet.ingest(new_ids, new_lens)
+
+        achieved, pct, n_shed, res = _open_loop_point(
+            eng, qids, qlens, args.soak_qps, args.soak_requests,
+            on_submit=on_submit)
+        assert tickets["retried"].wait(timeout=120) \
+            and tickets["retried"].ok, tickets["retried"].error
+        assert n_shed == 0, f"soak shed {n_shed} requests"
+        # _open_loop_point already proved every future resolved (result()
+        # with a timeout); fold its completions into the replay set
+        for i, r in enumerate(res):
+            completed.append((i % nq, r))
+        d = {k: snap()[k] - base[k] for k in base}
+        assert d["ingest_failures"] == 1 and d["ingests"] == 1, d
+        ing = fleet.stats()["ingest"]
+        assert ing["crashes"] == 1 and ing["alive"] and \
+            not ing["degraded"], ing
+        epochs = sorted({r.epoch for r in res})
+        assert epochs == [epoch0, epoch0 + 1], (
+            f"soak must straddle the re-ingest epoch: {epochs}")
+        csv(f"chaos,soak,{achieved:.1f} q/s achieved, 0 shed, "
+            f"p95={pct['p95_ms']:.1f}ms, epochs={epochs}")
+        results["soak"] = dict(achieved_qps=round(achieved, 2), shed=0,
+                               epochs=[int(e) for e in epochs],
+                               ingest_crashes=1,
+                               **{k: round(v, 2) for k, v in pct.items()})
+
+        # ---- every scripted fault fired; nothing is unresolved ----------
+        assert not plan.unfired(), f"scripted faults never ran: " \
+            f"{plan.unfired()} (calls: {plan.summary()['calls']})"
+        assert all(f is None or f.done() for f in all_futs), \
+            "stranded futures after the soak"
+
+        # ---- phase 5: per-epoch bit-exactness of EVERY completed query --
+        # rebuild the index from scratch at each epoch served and replay
+        combined_ids, combined_lens = _concat_refs(
+            np.asarray(data["ref_ids"]), np.asarray(data["ref_lens"]),
+            new_ids, new_lens)
+        rows_at = {epoch0: args.n_refs, epoch0 + 1: args.n_refs + 32}
+        n_checked = 0
+        for epoch in sorted({o.epoch for _j, o in completed}):
+            rebuild = SignatureIndex.build(
+                cfg, combined_ids[:rows_at[epoch]],
+                combined_lens[:rows_at[epoch]])
+            ref_eng = QueryEngine(rebuild, scfg,
+                                  sharded=ShardedIndex(rebuild, mesh))
+            js = sorted({j for j, o in completed if o.epoch == epoch})
+            want = {j: ref_eng.query_batch(qids[j:j + 1], qlens[j:j + 1])
+                    for j in js}
+            for j, o in completed:
+                if o.epoch != epoch:
+                    continue
+                np.testing.assert_array_equal(o.ids, want[j][0][0])
+                np.testing.assert_array_equal(o.dists, want[j][1][0])
+                n_checked += 1
+        assert n_checked == len(completed)
+        csv(f"chaos,bitexact,{n_checked} completed queries match "
+            f"per-epoch rebuilds exactly")
+        results["bitexact_queries"] = n_checked
+
+        # ---- phase 6: torn write -> typed load error -> recovery --------
+        idx_dir = os.path.join(args.workdir, "chaos_idx")
+        index.save(idx_dir)
+        with open(os.path.join(idx_dir, "manifest.json")) as fh:
+            manifest = json.load(fh)
+        victim = manifest["segments"][-1]["file"]
+        vpath = os.path.join(idx_dir, victim)
+        with open(vpath, "rb") as fh:
+            orig = fh.read()
+        # schedule the tear for the very next store.write call, then
+        # re-write the segment through the one blessed write path — the
+        # plan makes it behave like the non-atomic writer of old
+        from repro.faults import atomic_write
+        plan.add("store.write", "torn",
+                 on=plan.calls("store.write") + 1, frac=0.4)
+        try:
+            atomic_write(vpath, lambda fh: fh.write(orig))
+            raise AssertionError("torn write did not raise")
+        except InjectedFault as e:
+            assert e.kind == "torn"
+        assert os.path.getsize(vpath) < len(orig), "file was not torn"
+        try:
+            SignatureIndex.load(idx_dir, expected_cfg=cfg)
+            raise AssertionError("load() served a torn segment")
+        except CorruptSegment as e:
+            assert victim in e.file, e.file
+        recovered = SignatureIndex.load(idx_dir, expected_cfg=cfg,
+                                        recover=True)
+        rec = recovered.recovery
+        assert rec is not None and victim in rec["file"], rec
+        assert rec["n_rows_served"] == recovered.size
+        assert os.path.exists(os.path.join(idx_dir, "quarantine", victim))
+        # the served prefix is bit-exact with a rebuild of those rows
+        prefix = SignatureIndex.build(
+            cfg, combined_ids[:rec["n_rows_served"]],
+            combined_lens[:rec["n_rows_served"]])
+        pe = QueryEngine(prefix, scfg, sharded=ShardedIndex(prefix, mesh))
+        re_ = QueryEngine(recovered, scfg,
+                          sharded=ShardedIndex(recovered, mesh))
+        nb = min(nq, args.batch)
+        want_id, want_d = pe.query_batch(qids[:nb], qlens[:nb])
+        got_id, got_d = re_.query_batch(qids[:nb], qlens[:nb])
+        np.testing.assert_array_equal(got_id, want_id)
+        np.testing.assert_array_equal(got_d, want_d)
+        # after recovery the rewritten manifest loads clean
+        clean = SignatureIndex.load(idx_dir, expected_cfg=cfg)
+        assert clean.recovery is None and clean.size == rec["n_rows_served"]
+        csv(f"chaos,recovery,quarantined {rec['quarantined']} -> served "
+            f"{rec['n_rows_served']} rows bit-exact")
+        results["recovery"] = {k: rec[k] for k in
+                               ("reason", "n_segments_dropped",
+                                "n_rows_dropped", "n_rows_served")}
+        results["recovery"]["file"] = victim
+
+        results["fault_plan"] = plan.summary()
+
+    assert eng.close(timeout=30), "dispatch thread wedged at close"
+    assert fleet.close(timeout=30), "ingest thread wedged at close"
+
+    # the block bench_delta diffs EXACTLY (deterministic by construction)
+    results["fault_counters"] = dict(
+        injected=plan.fired(),
+        injected_by_kind={k: plan.fired(kind=k)
+                          for k in ("raise", "kill", "latency", "torn")},
+        retries=fleet.counters["retries"],
+        retry_success=fleet.counters["retry_success"],
+        replica_failures=fleet.counters["replica_failures"],
+        replica_quarantines=fleet.counters["replica_quarantines"],
+        replica_probes=fleet.counters["replica_probes"],
+        replica_readmissions=fleet.counters["replica_readmissions"],
+        degraded_batches=fleet.counters["degraded_batches"],
+        ingest_failures=fleet.counters["ingest_failures"],
+        shed_internal=eng.counters["shed_internal"],
+        engine_degraded=eng.counters["degraded"],
+        dispatch_crashes=1,
+        ingest_crashes=1,
+    )
+    csv(f"chaos,fault_counters,{results['fault_counters']}")
+
+    with open(args.json, "w") as fh:
+        json.dump(results, fh, indent=2)
+    csv(f"chaos,json_written,{args.json}")
+
+
+def _concat_refs(ref_ids, ref_lens, new_ids, new_lens):
+    """Concatenate two padded ref batches into one (widths may differ)."""
+    import numpy as np
+    from repro.core.alphabet import PAD
+    W = max(ref_ids.shape[1], new_ids.shape[1])
+    out = np.full((len(ref_lens) + len(new_lens), W), PAD, np.int8)
+    out[:len(ref_lens), :ref_ids.shape[1]] = ref_ids
+    out[len(ref_lens):, :new_ids.shape[1]] = new_ids
+    return out, np.concatenate([ref_lens, new_lens]).astype(np.int32)
+
+
+def main(argv=None):
+    import tempfile
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus for CI (writes BENCH_chaos.json)")
+    ap.add_argument("--n-refs", type=int, default=None)
+    ap.add_argument("--n-queries", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--quarantine-s", type=float, default=1.5)
+    ap.add_argument("--soak-qps", type=float, default=None,
+                    help="offered rate for the open-loop soak phase")
+    ap.add_argument("--soak-requests", type=int, default=None)
+    ap.add_argument("--json", default="BENCH_chaos.json")
+    ap.add_argument("--workdir", default=None,
+                    help="scratch dir for the torn-write/recovery phase")
+    args = ap.parse_args(argv)
+    args.n_refs = args.n_refs or (512 if args.smoke else 4096)
+    args.soak_requests = args.soak_requests or (40 if args.smoke else 256)
+    args.soak_qps = args.soak_qps or (60.0 if args.smoke else 200.0)
+
+    if "XLA_FLAGS" not in os.environ:
+        # must precede the first jax import (host platform device count)
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.shards}"
+        if "jax" in sys.modules:
+            raise RuntimeError("jax imported before XLA_FLAGS was set; "
+                               "run benchmarks.chaos_soak as the entry point")
+    if args.workdir is None:
+        with tempfile.TemporaryDirectory(prefix="chaos_soak_") as td:
+            args.workdir = td
+            _run(args)
+    else:
+        _run(args)
+
+
+if __name__ == "__main__":
+    main()

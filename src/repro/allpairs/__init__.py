@@ -38,8 +38,9 @@ import numpy as np
 
 from ..core.pipeline import LSHConfig
 from ..index.store import SignatureIndex
-from .graph import (FamilyForest, FamilyResult, cluster_families,
-                    families_from_labels, threshold_edges, union_find)
+from .graph import (FamilyForest, FamilyResult, ForestMismatch,
+                    cluster_families, families_from_labels, threshold_edges,
+                    union_find)
 from .selfjoin import (SelfJoinResult, brute_force_collisions,
                        lsh_delta_join, lsh_self_join)
 from .tiles import PairScores, WaveConfig, score_pairs, wave_plan

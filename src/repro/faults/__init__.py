@@ -1,0 +1,47 @@
+"""repro.faults — deterministic fault injection and the handling that
+makes the faults survivable.
+
+ScalLoPS gets its fault tolerance for free from Hadoop re-execution; our
+always-on serving tier (PR 6) and segmented persistence (PR 5) had **no
+failure model at all** — a replica exception, a dead ingest thread, or a
+kill mid-``save()`` was silent data loss or a wedged process. This
+package supplies both halves of the fix:
+
+* ``plan``       — :class:`FaultPlan`: a seedable, deterministic
+  fault-injection registry. Faults fire at named **sites**
+  (``replica.query``, ``ingest.apply``, ``engine.dispatch``,
+  ``store.write``) on scripted call numbers: raise-on-Nth-call, latency
+  spikes, thread kills, torn writes. Call sites cost one attribute load
+  + ``is None`` branch when no plan is installed; with a plan installed
+  every firing lands in a ledger, so a chaos run can assert its
+  shed/retry counts against the script *exactly*.
+* ``supervisor`` — :class:`Supervisor`: the worker-thread harness the
+  serving tier runs its dispatch and ingest loops under. Crashes are
+  caught, reported through ``on_crash`` (the owner resolves every
+  outstanding future/event with a typed error), counted in the obs
+  registry, and the loop restarts under exponential backoff with
+  deterministic seeded jitter; a bounded run of consecutive failures
+  gives up into a visible ``degraded`` state instead of spinning.
+* ``atomic``     — :func:`atomic_write`: tmp file + fsync +
+  ``os.replace`` (+ directory fsync), the single write path every
+  manifest/segment/legacy-npz write goes through — a crash anywhere
+  inside leaves the destination either old or new, never torn. The
+  torn-write fault *kind* deliberately bypasses it (partial bytes
+  straight to the destination, then a crash) to manufacture exactly the
+  damage the recovery path (:func:`repro.index.segments.load_segmented`
+  with ``recover=True``) must survive.
+
+The chaos soak benchmark (``benchmarks/chaos_soak.py``) scripts all of
+this end to end; ``tests/test_faults.py`` pins each piece.
+"""
+from .atomic import atomic_write
+from .plan import (FaultPlan, FaultSpec, InjectedFault, ThreadKilled,
+                   active_plan, fault_point)
+from .supervisor import Supervisor
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "InjectedFault", "ThreadKilled",
+    "active_plan", "fault_point",
+    "Supervisor",
+    "atomic_write",
+]

@@ -23,6 +23,18 @@ O(delta); an explicit compaction (``SignatureIndex.compact``) merges the
 segments back into one (the reduce step). The monolithic ``.npz`` of
 PR 1–4 keeps loading through the same entry point as a single sealed
 segment.
+
+**Crash safety** (PR 8): every file this module writes — segment npz
+and manifest alike — goes through :func:`repro.faults.atomic_write`
+(tmp + fsync + ``os.replace``), so a kill at any instant leaves the
+directory loadable: segments land before the manifest that references
+them, and the manifest swap is atomic. Damage that arrives anyway
+(bitrot, a partial copy, a legacy non-atomic writer) raises a typed
+:class:`CorruptSegment` naming the offending file; ``load_segmented``
+with ``recover=True`` instead moves the damaged segment *and everything
+after it* into ``quarantine/`` (the prefix property — later segments'
+global ids assume every earlier row exists), rewrites the manifest to
+the longest valid prefix, and serves that.
 """
 from __future__ import annotations
 
@@ -30,9 +42,28 @@ import dataclasses
 import hashlib
 import json
 import os
+import shutil
+import zipfile
 
 import jax.numpy as jnp
 import numpy as np
+
+from ..faults import atomic_write
+from ..obs import REGISTRY
+
+_M_QUARANTINED = REGISTRY.counter(
+    "segments_quarantined", "damaged segment files moved to quarantine/ "
+    "during recovery loads")
+
+
+class CorruptSegment(ValueError):
+    """A persisted segment file (or the manifest entry describing it) is
+    damaged: truncated, checksum-mismatched, missing, or inconsistent
+    with its neighbours. ``file`` names the offending file."""
+
+    def __init__(self, file: str, message: str):
+        super().__init__(message)
+        self.file = file
 
 
 @dataclasses.dataclass
@@ -225,16 +256,17 @@ def save_segmented(path, meta: dict, segments: list[Segment],
             payload[f"band{b}_keys"] = keys
             payload[f"band{b}_offsets"] = offsets
             payload[f"band{b}_ids"] = ids
-        np.savez_compressed(os.path.join(root, entries[i]["file"]), **payload)
+        # atomic: a crash mid-save leaves the old manifest pointing only
+        # at complete files (segments land before the manifest below)
+        atomic_write(os.path.join(root, entries[i]["file"]),
+                     lambda fh, p=payload: np.savez_compressed(fh, **p))
         written += 1
     manifest = dict(meta)
     manifest["manifest_version"] = MANIFEST_VERSION
     manifest["write_gen"] = gen
     manifest["segments"] = entries
-    tmp = mpath + ".tmp"
-    with open(tmp, "w") as fh:
-        json.dump(manifest, fh, sort_keys=True, indent=1)
-    os.replace(tmp, mpath)              # manifest lands atomically, last
+    blob = json.dumps(manifest, sort_keys=True, indent=1).encode()
+    atomic_write(mpath, lambda fh: fh.write(blob))  # lands atomically, last
     keep = {e["file"] for e in entries}
     for f in old_files:                 # a rewrite dropped the old gen
         if f not in keep and os.path.exists(os.path.join(root, f)):
@@ -242,8 +274,76 @@ def save_segmented(path, meta: dict, segments: list[Segment],
     return written
 
 
-def load_segmented(path) -> tuple[dict, list[Segment]]:
-    """Read manifest + every segment file; returns (meta, segments)."""
+def _load_segment_file(root: str, e: dict, n_bands: int,
+                       expect_base: int) -> Segment:
+    """Load + verify ONE manifest entry's segment file; every failure
+    mode is a :class:`CorruptSegment` naming the file."""
+    f = e["file"]
+    fpath = os.path.join(root, f)
+    try:
+        with np.load(fpath) as z:
+            csr = [(z[f"band{b}_keys"], z[f"band{b}_offsets"],
+                    z[f"band{b}_ids"]) for b in range(n_bands)]
+            seg = Segment(int(z["base"]), z["sigs"],
+                          np.asarray(z["valid"], bool), csr)
+    except FileNotFoundError:
+        raise CorruptSegment(f, f"segment {f} is missing from disk") \
+            from None
+    except (OSError, EOFError, KeyError, zipfile.BadZipFile,
+            ValueError) as err:
+        # a torn write truncates the npz zip container — np.load raises
+        # BadZipFile/EOFError/OSError depending on where the tear landed
+        raise CorruptSegment(
+            f, f"segment {f} is unreadable (truncated or torn write): "
+               f"{type(err).__name__}: {err}") from err
+    if seg.n_rows != e["n_rows"]:
+        raise CorruptSegment(f, f"segment {f} holds {seg.n_rows} rows, "
+                                f"manifest says {e['n_rows']}")
+    if "sha" in e and segment_checksum(seg) != e["sha"]:
+        raise CorruptSegment(
+            f, f"segment {f} content hash does not match the "
+               f"manifest — swapped or corrupt segment file")
+    if seg.base != expect_base or int(e["base"]) != expect_base:
+        # segments concatenate in manifest order and their CSR ids
+        # embed the stored base — any disagreement (reordered entries,
+        # corrupt base) would silently map global ids to the WRONG
+        # signature rows, so fail loudly instead
+        raise CorruptSegment(
+            f, f"segment {f} claims base {seg.base} "
+               f"(manifest {e['base']}) but {expect_base} rows precede "
+               f"it — manifest reordered or corrupt")
+    return seg
+
+
+def _quarantine(root: str, entries: list[dict]) -> list[str]:
+    """Move the given manifest entries' files into ``quarantine/``
+    (keeping the evidence — nothing is deleted) and count them."""
+    qdir = os.path.join(root, "quarantine")
+    os.makedirs(qdir, exist_ok=True)
+    moved = []
+    for e in entries:
+        src = os.path.join(root, e["file"])
+        if os.path.exists(src):
+            shutil.move(src, os.path.join(qdir, e["file"]))
+            moved.append(e["file"])
+            _M_QUARANTINED.inc()
+    return moved
+
+
+def load_segmented(path, *, recover: bool = False
+                   ) -> tuple[dict, list[Segment], dict | None]:
+    """Read manifest + every segment file; returns
+    ``(meta, segments, recovery)``.
+
+    Default: any damaged segment raises :class:`CorruptSegment` naming
+    the file — a load either serves exactly what was saved or refuses.
+    With ``recover=True`` the longest valid segment *prefix* is served
+    instead: the first damaged segment and every segment after it (their
+    global ids assume the damaged rows exist) move to ``quarantine/``,
+    the manifest is rewritten (atomically) to the surviving prefix, and
+    ``recovery`` reports what was dropped — degraded-but-correct beats
+    refusing the whole index.
+    """
     mpath = manifest_path(path)
     root = os.path.dirname(mpath)
     with open(mpath) as fh:
@@ -254,29 +354,25 @@ def load_segmented(path) -> tuple[dict, list[Segment]]:
             f"{MANIFEST_VERSION}")
     n_bands = 1 if manifest["layout"] == "flip" else int(manifest["bands"])
     segments = []
+    recovery = None
     total = 0
-    for e in manifest["segments"]:
-        with np.load(os.path.join(root, e["file"])) as z:
-            csr = [(z[f"band{b}_keys"], z[f"band{b}_offsets"],
-                    z[f"band{b}_ids"]) for b in range(n_bands)]
-            seg = Segment(int(z["base"]), z["sigs"],
-                          np.asarray(z["valid"], bool), csr)
-        if seg.n_rows != e["n_rows"]:
-            raise ValueError(f"segment {e['file']} holds {seg.n_rows} rows, "
-                             f"manifest says {e['n_rows']}")
-        if "sha" in e and segment_checksum(seg) != e["sha"]:
-            raise ValueError(
-                f"segment {e['file']} content hash does not match the "
-                f"manifest — swapped or corrupt segment file")
-        if seg.base != total or int(e["base"]) != total:
-            # segments concatenate in manifest order and their CSR ids
-            # embed the stored base — any disagreement (reordered entries,
-            # corrupt base) would silently map global ids to the WRONG
-            # signature rows, so fail loudly instead
-            raise ValueError(
-                f"segment {e['file']} claims base {seg.base} "
-                f"(manifest {e['base']}) but {total} rows precede it — "
-                f"manifest reordered or corrupt")
+    entries = manifest["segments"]
+    for i, e in enumerate(entries):
+        try:
+            seg = _load_segment_file(root, e, n_bands, total)
+        except CorruptSegment as err:
+            if not recover:
+                raise
+            quarantined = _quarantine(root, entries[i:])
+            manifest["segments"] = entries[:i]
+            blob = json.dumps(manifest, sort_keys=True, indent=1).encode()
+            atomic_write(mpath, lambda fh: fh.write(blob))
+            recovery = dict(
+                file=err.file, reason=str(err), quarantined=quarantined,
+                n_segments_dropped=len(entries) - i,
+                n_rows_dropped=sum(int(x["n_rows"]) for x in entries[i:]),
+                n_rows_served=total)
+            break
         total += seg.n_rows
         segments.append(seg)
-    return manifest, segments
+    return manifest, segments, recovery

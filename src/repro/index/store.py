@@ -49,15 +49,17 @@ import dataclasses
 import hashlib
 import json
 import os
+import zipfile
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.pipeline import LSHConfig, ScalLoPS
 from ..core.join import band_keys
+from ..faults import atomic_write
 from ..obs import span
 from . import segments as seglib
-from .segments import Segment
+from .segments import CorruptSegment, Segment
 
 FORMAT_VERSION = 1
 
@@ -141,6 +143,8 @@ class SignatureIndex:
                                     # collapsed — delta consumers re-place)
         self._merged_stale = True   # merged CSR needs a (re)merge
         self._csr_np = None         # merged per-band CSR (lazy)
+        self.recovery = None        # set by load(recover=True) when a
+                                    # damaged tail was quarantined
         self._partitions = {}       # n_shards -> BucketPartition (slabs)
         self._dev_sigs = None
         self._dev_valid = None
@@ -366,7 +370,8 @@ class SignatureIndex:
                 payload[f"band{b}_keys"] = keys
                 payload[f"band{b}_offsets"] = offsets
                 payload[f"band{b}_ids"] = ids
-            np.savez_compressed(path, **payload)
+            atomic_write(os.fspath(path),
+                         lambda fh: np.savez_compressed(fh, **payload))
             return 1
         self.seal()                 # segments only — no merge needed
         return seglib.save_segmented(path, self._meta(), self.segments,
@@ -406,7 +411,8 @@ class SignatureIndex:
 
     @classmethod
     def load(cls, path: str | os.PathLike,
-             expected_cfg: LSHConfig | None = None) -> "SignatureIndex":
+             expected_cfg: LSHConfig | None = None, *,
+             recover: bool = False) -> "SignatureIndex":
         """Load a persisted index; fails loudly on config mismatch.
 
         One entry point for both containers: segment directories load
@@ -418,10 +424,18 @@ class SignatureIndex:
         one — a stale index built under different LSH parameters raises
         :class:`IndexConfigMismatch` instead of silently serving wrong
         buckets.
+
+        Damaged segment files raise a typed
+        :class:`~repro.index.segments.CorruptSegment` naming the file;
+        with ``recover=True`` the damaged tail is quarantined instead and
+        the longest valid segment prefix is served, with the drop report
+        on ``idx.recovery`` (see :func:`repro.index.segments.
+        load_segmented`).
         """
         if seglib.is_segmented(path) and os.path.exists(
                 seglib.manifest_path(path)):
-            meta, segments = seglib.load_segmented(path)
+            meta, segments, recovery = seglib.load_segmented(
+                path, recover=recover)
             if meta.get("format") != FORMAT_VERSION:
                 raise IndexConfigMismatch(
                     f"index format {meta.get('format')} != {FORMAT_VERSION}")
@@ -435,8 +449,19 @@ class SignatureIndex:
             idx = cls(cfg, sigs, valid, **kw)
             idx._pending = []
             idx.segments = segments
+            idx.recovery = recovery
             return idx
-        with np.load(path) as z:
+        try:
+            z = np.load(path)
+        except (OSError, EOFError, ValueError,
+                zipfile.BadZipFile) as err:
+            # the monolithic container has no prefix to fall back to —
+            # a torn legacy npz is typed, named, and unrecoverable
+            raise CorruptSegment(
+                os.fspath(path),
+                f"legacy index {path} is unreadable (truncated or torn "
+                f"write): {type(err).__name__}: {err}") from err
+        with z:
             meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
             if meta.get("format") != FORMAT_VERSION:
                 raise IndexConfigMismatch(

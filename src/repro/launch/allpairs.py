@@ -186,7 +186,9 @@ def main(argv=None):
             msg = f"[index]  persisted to {args.index} ({n_seg} file(s))"
             if not str(args.index).endswith(".npz"):
                 fpath = os.path.join(args.index, "families.npz")
-                forest.save(fpath)      # the forest lives beside the manifest
+                # the forest lives beside the manifest, stamped with the
+                # generation it was clustered against
+                forest.save(fpath, generation=res.index.generation)
                 msg += f" + forest {fpath}"
             print(msg)
         if args.out:

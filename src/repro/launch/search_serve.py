@@ -56,6 +56,20 @@ def _serve_async(args, data, loaded, mesh, ref_seqs, scfg, path):
                          mesh=mesh, ref_seqs=ref_seqs)
     eng = AsyncEngine(fleet, max_wait_ms=args.max_wait_ms,
                       default_deadline_ms=args.deadline_ms)
+    plan = None
+    if args.chaos:
+        # a small scripted demo of the PR 8 fault machinery: two replica
+        # crashes (each retried on the other replica, bit-exact) and one
+        # slow call — deterministic because the dispatch thread serializes
+        # fleet calls, so per-site call numbers are reproducible
+        from ..faults import FaultPlan
+        plan = (FaultPlan()
+                .add("replica.query", "raise", on=2)
+                .add("replica.query", "raise", on=5)
+                .add("replica.query", "latency", on=6, delay_s=0.03)
+                .install())
+        print("[chaos] fault plan installed: replica.query raise@{2,5} "
+              "latency@6 (expect 2 router retries, 0 degraded)")
     print(f"[async] {args.replicas} replica(s) x "
           f"{fleet._replicas[0].sharded.n_shards} shard(s), "
           f"max_wait={args.max_wait_ms}ms, "
@@ -82,9 +96,12 @@ def _serve_async(args, data, loaded, mesh, ref_seqs, scfg, path):
     results = [f.result(timeout=120) for f in futures]
     wall = time.time() - t0
 
-    hits = served = shed = 0
+    hits = served = shed = degraded = 0
     epochs = {}
     for r, (parent, _rate) in zip(results, data["truth"]):
+        if getattr(r, "degraded", False):
+            degraded += 1
+            continue
         if not r.ok:
             shed += 1
             continue
@@ -108,9 +125,30 @@ def _serve_async(args, data, loaded, mesh, ref_seqs, scfg, path):
           f"p50={lat['p50_ms']:.1f}ms p95={lat['p95_ms']:.1f}ms "
           f"p99={lat['p99_ms']:.1f}ms (queue p95={qlat['p95_ms']:.1f}ms, "
           f"{s['counters']['batches']} batches, "
-          f"shed={shed}, k={args.k})")
+          f"shed={shed}, degraded={degraded}, k={args.k})")
     print(f"[quality] planted homologs in top-{args.k}: "
           f"{hits}/{n_hom} ({hits / max(n_hom, 1):.0%})")
+
+    fs = fleet.stats()
+    health = " ".join(
+        f"{r['name']}:{'QUAR' if r['health']['quarantined'] else 'up'}"
+        f"(fails={r['health']['fails']})" for r in fs["replicas"])
+    print(f"[health] coverage={fs['coverage']:.0%} {health} — "
+          f"retries={fs['counters'].get('retries', 0)} "
+          f"retry_ok={fs['counters'].get('retry_success', 0)} "
+          f"quarantines={fs['counters'].get('replica_quarantines', 0)} "
+          f"degraded_batches={fs['counters'].get('degraded_batches', 0)}; "
+          f"dispatch crashes="
+          f"{s.get('dispatch', {}).get('crashes', 0)}, "
+          f"wedged={s['wedged']}")
+    if plan is not None:
+        plan.uninstall()
+        missed = plan.unfired()
+        n_scripted = sum(plan.summary()["scripted"].values())
+        print(f"[chaos] fired {plan.fired()} of {n_scripted} "
+              f"scripted faults"
+              + ("" if not missed else
+                 f" — UNFIRED (traffic too short?): {missed}"))
 
     if args.compact:
         before = fleet.query_batch(qids[:args.batch], qlens[:args.batch])
@@ -186,6 +224,20 @@ def main(argv=None):
                     help="async dispatch policy: a micro-batch launches "
                          "at --batch requests or when its oldest request "
                          "has waited this long (0 = greedy)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="install a small scripted FaultPlan during the "
+                         "async serving pass (needs --replicas >= 2): two "
+                         "replica crashes and one slow call, each retried "
+                         "or absorbed by the router; prints retry / "
+                         "quarantine / coverage accounting at the end. "
+                         "Deterministic — benchmarks/chaos_soak.py is the "
+                         "full closed-loop version")
+    ap.add_argument("--recover", action="store_true",
+                    help="load the index with crash recovery enabled: a "
+                         "torn or checksum-failed trailing segment is "
+                         "QUARANTINED (moved to quarantine/, manifest "
+                         "rewritten) and serving continues on the longest "
+                         "valid prefix instead of refusing to start")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the process-wide metrics registry as "
                          "Prometheus text exposition on exit (merged "
@@ -196,6 +248,10 @@ def main(argv=None):
                          "span carries its queries' trace IDs; open in "
                          "chrome://tracing or ui.perfetto.dev)")
     args = ap.parse_args(argv)
+
+    if args.chaos and args.replicas < 2:
+        ap.error("--chaos needs --replicas >= 2 (the router retries a "
+                 "crashed call on a DIFFERENT replica)")
 
     if args.trace_out:
         from ..obs import enable as _trace_enable
@@ -245,9 +301,16 @@ def main(argv=None):
 
     # ---- load (fingerprint-verified) + serve
     t0 = time.time()
-    loaded = SignatureIndex.load(path, expected_cfg=cfg)
+    loaded = SignatureIndex.load(path, expected_cfg=cfg,
+                                 recover=args.recover)
     print(f"[load]  verified fingerprint in {time.time()-t0:.2f}s "
           f"(epoch={loaded.epoch})")
+    if getattr(loaded, "recovery", None):
+        rec = loaded.recovery
+        print(f"[recover] quarantined {rec['n_segments_dropped']} damaged "
+              f"segment(s) from {rec['file']} onward "
+              f"({rec['n_rows_dropped']} rows dropped, "
+              f"{rec['n_rows_served']} served): {rec['reason']}")
 
     mesh = None
     if args.shards > 1:

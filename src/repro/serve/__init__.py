@@ -28,15 +28,25 @@ rerank, so an exported trace reconstructs every request's full path;
 shape pre-traffic, and the recompile sentinel asserts steady state stays
 compile-free.
 
+Fault tolerance (PR 8, :mod:`repro.faults`): dispatch and ingest loops
+run supervised (crash → typed resolution of every outstanding future or
+ticket → restart with backoff → visible ``degraded`` after bounded
+failures); the router tracks per-replica health, quarantines failing
+replicas with half-open probe readmission, retries a failed batch once
+on a healthy replica, and degrades to typed :class:`Degraded` partial
+results when the whole fleet is down.
+
 The closed-loop SLO benchmark lives in ``benchmarks/serve_slo.py``
-(offered-QPS sweep, latency knee, ``BENCH_serve.json``).
+(offered-QPS sweep, latency knee, ``BENCH_serve.json``); the chaos soak
+— the same closed loop under a scripted fault plan — in
+``benchmarks/chaos_soak.py``.
 """
-from .engine import AsyncEngine, Completed, Rejected
-from .fleet import ReplicaFleet
+from .engine import AsyncEngine, Completed, Degraded, Rejected
+from .fleet import DegradedBatch, IngestTicket, ReplicaFleet
 from .metrics import Counters, Rolling
 
 __all__ = [
-    "AsyncEngine", "Completed", "Rejected",
-    "ReplicaFleet",
+    "AsyncEngine", "Completed", "Degraded", "Rejected",
+    "DegradedBatch", "IngestTicket", "ReplicaFleet",
     "Counters", "Rolling",
 ]

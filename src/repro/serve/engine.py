@@ -20,7 +20,15 @@ policy and resolves each future with a typed outcome:
   request's deadline (the batch it would join cannot finish in time, so
   serving it would only waste device time that on-deadline requests need).
   Typed results — not exceptions — so closed-loop load generators count
-  sheds without try/except in the hot loop.
+  sheds without try/except in the hot loop. ``Rejected("internal")``
+  (PR 8) covers the serving path itself failing: a backend exception or
+  dispatch crash resolves every in-flight future typed, the supervised
+  dispatch loop restarts with backoff, and exhausting the restart budget
+  fails the queue and latches ``degraded`` — a future from this engine
+  ALWAYS resolves.
+* :class:`Degraded` — the fleet answered with no healthy replica left:
+  sentinel neighbors plus the coverage fraction, so callers distinguish
+  "no matches" from "nobody could look".
 
 Batch cost is predicted per padding-ladder rung with an EWMA of measured
 batch latencies — the ladder quantizes batch shapes anyway, so the rung
@@ -39,6 +47,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..core.alphabet import PAD, encode
+from ..faults import Supervisor, fault_point
 from ..obs import REGISTRY, instant, new_trace_id, span, trace_context
 from .metrics import Counters, Rolling
 
@@ -58,7 +67,8 @@ _M_TOTAL = REGISTRY.histogram(
     labelnames=("engine",))
 _M_REQS = REGISTRY.counter(
     "async_requests", "submitted requests by outcome (completed / "
-    "shed_queue_full / shed_deadline / shed_shutdown)",
+    "degraded / shed_queue_full / shed_deadline / shed_shutdown / "
+    "shed_internal)",
     labelnames=("engine", "outcome"))
 _M_DEPTH = REGISTRY.gauge(
     "async_queue_depth", "queued requests at last dispatch",
@@ -87,15 +97,44 @@ class Completed:
 class Rejected:
     """A shed request. ``reason`` is one of ``"queue_full"`` (bounded
     queue was full at submit), ``"deadline"`` (queue time + predicted
-    batch cost exceeded the request deadline at dispatch), or
-    ``"shutdown"`` (engine closed with the request still queued)."""
+    batch cost exceeded the request deadline at dispatch),
+    ``"shutdown"`` (engine closed with the request still queued), or
+    ``"internal"`` (the serving path itself failed — backend exception
+    or dispatch-thread crash; ``detail`` names the error). A future from
+    this engine ALWAYS resolves to a typed outcome: internal failures
+    are rejections, never stranded futures."""
     reason: str
     queued_ms: float = 0.0
     predicted_ms: float = 0.0
+    detail: str = ""
 
     @property
     def ok(self) -> bool:
         return False
+
+
+@dataclass(frozen=True)
+class Degraded:
+    """A request served while NO healthy replica remained: sentinel
+    ids/dists (no neighbors found), ``epoch=None``, the fleet's healthy
+    ``coverage`` fraction at decision time, and the last error. Not
+    ``ok`` — but not an exception either: closed-loop callers count
+    degraded answers exactly like sheds, without try/except."""
+    ids: np.ndarray
+    dists: np.ndarray
+    epoch: None
+    coverage: float
+    detail: str
+    queued_ms: float = 0.0
+    batch_ms: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return False
+
+    @property
+    def degraded(self) -> bool:
+        return True
 
 
 @dataclass
@@ -153,8 +192,9 @@ class AsyncEngine:
         self._q: queue.Queue = queue.Queue(maxsize=int(queue_depth))
         self._cost_ms: dict[int, float] = {}    # ladder rung -> EWMA ms
         self.name = name or f"async{next(_async_ids)}"
-        self.counters = Counters("submitted", "completed", "shed_queue_full",
-                                 "shed_deadline", "shed_shutdown",
+        self.counters = Counters("submitted", "completed", "degraded",
+                                 "shed_queue_full", "shed_deadline",
+                                 "shed_shutdown", "shed_internal",
                                  "batches")
         # exact window percentiles locally; merged histograms globally
         self.queue_lat = Rolling(window, _M_QUEUE.labels(engine=self.name))
@@ -162,16 +202,22 @@ class AsyncEngine:
         self._m_reqs = _M_REQS
         self._m_depth = _M_DEPTH.labels(engine=self.name)
         self._closed = threading.Event()
-        self._thread = None
+        self._sup: Supervisor | None = None
+        self._wedged = False
         if warmup is not None:      # compile every serving shape pre-traffic
             if isinstance(warmup, tuple):
                 self.warmup(*warmup)
             else:
                 self.warmup()
         if start:
-            self._thread = threading.Thread(
-                target=self._loop, name="serve-dispatch", daemon=True)
-            self._thread.start()
+            # supervised dispatch: a backend/dispatch crash resolves the
+            # in-flight batch typed (inside _drain_once), then the
+            # supervisor restarts the loop with backoff; exhausting the
+            # restart budget fails the whole queue and latches degraded
+            self._sup = Supervisor(
+                f"dispatch-{self.name}",
+                lambda: self._drain_once(timeout=0.02),
+                on_giveup=self._fail_queue).start()
 
     # ------------------------------------------------------------ submit
     def submit(self, seq, *, deadline_ms: float | None = None) -> Future:
@@ -198,6 +244,12 @@ class AsyncEngine:
         if self._closed.is_set():
             self._shed(req, "shutdown")
             return req.future
+        if self._sup is not None and self._sup.degraded:
+            # the dispatch loop gave up: nobody will ever drain the
+            # queue — reject at the door instead of stranding the future
+            self._shed(req, "internal",
+                       detail=f"dispatch degraded: {self._sup.last_error}")
+            return req.future
         try:
             self._q.put_nowait(req)
         except queue.Full:
@@ -209,6 +261,18 @@ class AsyncEngine:
         self._m_reqs.inc(engine=self.name, outcome=f"shed_{reason}")
         instant("shed", trace=[req.trace], reason=reason)
         _resolve(req.future, Rejected(reason, **kw))
+
+    def _fail_queue(self, exc: Exception | None = None) -> None:
+        """Resolve every queued future with Rejected("internal") — runs
+        when the supervised dispatch loop exhausts its restart budget
+        (nothing may strand) and from close() for leftovers."""
+        detail = f"{type(exc).__name__}: {exc}" if exc is not None else ""
+        while True:
+            try:
+                r = self._q.get_nowait()
+            except queue.Empty:
+                return
+            self._shed(r, "internal", detail=detail)
 
     def pending(self) -> int:
         return self._q.qsize()
@@ -287,11 +351,37 @@ class AsyncEngine:
         t0 = self._clock()
         # every span beneath (route, query_batch, probe, ring, rerank) is
         # tagged with this batch's query trace IDs via the contextvar
-        with trace_context(tids):
-            with span("dispatch", n=n, engine=self.name,
-                      predicted_ms=round(predicted, 3)):
-                out = self.backend.query_batch(ids, lens)
+        try:
+            with trace_context(tids):
+                with span("dispatch", n=n, engine=self.name,
+                          predicted_ms=round(predicted, 3)):
+                    fault_point("engine.dispatch", n=n)
+                    out = self.backend.query_batch(ids, lens)
+        except Exception as e:          # noqa: BLE001 — the batch must
+            # resolve typed BEFORE the crash propagates: the supervisor
+            # restarts the loop, but these futures' fate is sealed here
+            detail = f"{type(e).__name__}: {e}"
+            for r in admitted:
+                self._shed(r, "internal", detail=detail,
+                           queued_ms=(t0 - r.t_submit) * 1e3)
+            raise
         dt = self._clock() - t0
+        done = self._clock()
+        if getattr(out, "degraded", False):
+            # the fleet had no healthy replica: typed partial answers
+            # with the coverage fraction, not Completed (and not a cost
+            # sample — nothing was actually served)
+            for j, r in enumerate(admitted):
+                self.counters.bump("degraded")
+                self._m_reqs.inc(engine=self.name, outcome="degraded")
+                self.total_lat.add(done - r.t_submit)
+                instant("resolve_degraded", trace=[r.trace],
+                        engine=self.name, coverage=out.coverage)
+                _resolve(r.future, Degraded(
+                    out.ids[j], out.dists[j], None, out.coverage,
+                    out.detail, queued_ms=(t0 - r.t_submit) * 1e3,
+                    batch_ms=dt * 1e3))
+            return len(batch)
         if len(out) == 3:
             nid, nd, epoch = out
         else:
@@ -300,7 +390,6 @@ class AsyncEngine:
             epoch = idx.epoch if idx is not None else None
         self._update_cost(n, dt)
         self.counters.bump("batches")
-        done = self._clock()
         for j, r in enumerate(admitted):
             self.counters.bump("completed")
             self._m_reqs.inc(engine=self.name, outcome="completed")
@@ -311,10 +400,6 @@ class AsyncEngine:
                 nid[j], nd[j], epoch,
                 queued_ms=(t0 - r.t_submit) * 1e3, batch_ms=dt * 1e3))
         return len(batch)
-
-    def _loop(self) -> None:
-        while not self._closed.is_set():
-            self._drain_once(timeout=0.02)
 
     # ------------------------------------------------------------ warmup
     def warmup(self, q_ids=None, q_lens=None, *,
@@ -331,21 +416,29 @@ class AsyncEngine:
         return wu(q_ids, q_lens, max_len=max_len)
 
     # ------------------------------------------------------------ lifecycle
-    def close(self, timeout: float = 30.0) -> None:
+    def close(self, timeout: float = 30.0) -> bool:
         """Stop dispatch; queued-but-unserved requests resolve to
         ``Rejected("shutdown")`` (a future from this engine always
-        resolves)."""
+        resolves). Returns False — and latches ``wedged`` in stats —
+        when the dispatch thread failed to join within ``timeout``: a
+        wedged thread is reported, never silently abandoned."""
         if self._closed.is_set():
-            return
+            return not self._wedged
         self._closed.set()
-        if self._thread is not None:
-            self._thread.join(timeout=timeout)
+        clean = True
+        if self._sup is not None:
+            clean = self._sup.stop(timeout=timeout)
+            if not clean:
+                self._wedged = True
+                instant("close_wedged", cat="fault", engine=self.name,
+                        timeout_s=timeout)
         while True:
             try:
                 r = self._q.get_nowait()
             except queue.Empty:
                 break
             self._shed(r, "shutdown")
+        return clean
 
     def __enter__(self):
         return self
@@ -358,12 +451,16 @@ class AsyncEngine:
         """Engine-level counters + rolling queue/total latency percentiles
         + the cost model, with the backend's own stats() nested under
         ``backend`` (per-stage timers, truncations, replica epochs)."""
-        return dict(
+        out = dict(
             pending=self.pending(),
             counters=self.counters.snapshot(),
             queue=self.queue_lat.snapshot(),
             latency=self.total_lat.snapshot(),
             cost_model_ms={str(k): round(v, 3)
                            for k, v in sorted(self._cost_ms.items())},
+            wedged=self._wedged,
             backend=self.backend.stats(),
         )
+        if self._sup is not None:
+            out["dispatch"] = self._sup.stats()
+        return out

@@ -1,0 +1,56 @@
+"""Shared test configuration: a per-test wall-clock cap.
+
+PR 8 exists because background threads can wedge; a wedged thread must
+fail its test, not hang the whole suite. CI installs ``pytest-timeout``
+(a dev extra) and the ``timeout`` ini in pyproject.toml does the rest.
+This conftest covers the environment where the plugin is NOT installed
+(the ini key would be unknown, and nothing would enforce the cap): it
+registers the ini key itself and enforces the cap with SIGALRM — an
+in-process approximation that catches the common case (a test blocked
+on a join/wait on the main thread).
+"""
+from __future__ import annotations
+
+import importlib.util
+import signal
+import threading
+
+import pytest
+
+_HAVE_PLUGIN = importlib.util.find_spec("pytest_timeout") is not None
+
+
+def pytest_addoption(parser):
+    if not _HAVE_PLUGIN:
+        # pytest-timeout owns this ini key when installed; declaring it
+        # twice would be a duplicate-ini error
+        parser.addini("timeout", "per-test timeout in seconds "
+                      "(SIGALRM fallback; pytest-timeout not installed)",
+                      default="0")
+
+
+if not _HAVE_PLUGIN:
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_call(item):
+        seconds = float(item.config.getini("timeout") or 0)
+        use_alarm = (seconds > 0
+                     and threading.current_thread()
+                     is threading.main_thread()
+                     and hasattr(signal, "SIGALRM"))
+        if not use_alarm:
+            yield
+            return
+
+        def _on_alarm(signum, frame):
+            raise TimeoutError(
+                f"test exceeded {seconds:.0f}s wall-clock cap "
+                f"(SIGALRM fallback — a background thread is likely "
+                f"wedged; see the supervisor stats in the failure)")
+
+        old = signal.signal(signal.SIGALRM, _on_alarm)
+        signal.alarm(int(seconds))
+        try:
+            yield
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, old)

@@ -1,0 +1,390 @@
+"""repro.faults: deterministic fault injection, supervised workers, and
+the fault paths they exercise in the serving tier.
+
+The invariants pinned here:
+
+* **the plan is a script, not a dice roll** — per-site call counting is
+  1-based and exact, every fired fault lands in the ledger, and a plan
+  replayed over the same call sequence fires identically;
+* **atomic_write is all-or-nothing** — a crash mid-write (including the
+  plan's scripted ``torn`` kind, the deliberately non-atomic writer)
+  never leaves a half-new destination behind the happy path;
+* **supervised workers never die silently** — a crash restarts the loop
+  with deterministic seeded backoff, bounded consecutive failures latch
+  a visible ``degraded``, and every outstanding future/ticket resolves
+  typed (``Rejected("internal")`` / ``IngestTicket.error``) first;
+* **the router degrades, never throws** — replica failures are retried
+  once on a healthy replica, repeat offenders are quarantined with
+  half-open probe readmission, and a fully-down fleet answers with a
+  typed coverage-carrying :class:`DegradedBatch`.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import LSHConfig
+from repro.data import SyntheticProteinConfig, make_protein_sets
+from repro.faults import (FaultPlan, FaultSpec, InjectedFault, Supervisor,
+                          ThreadKilled, atomic_write, fault_point)
+from repro.index import QueryEngine, ServingConfig, SignatureIndex
+from repro.serve import (AsyncEngine, Completed, Degraded, DegradedBatch,
+                         Rejected, ReplicaFleet)
+
+CFG = LSHConfig(k=3, T=13, f=32, d=1)
+SCFG = ServingConfig(k=5, max_batch=8, mode="probe")
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_protein_sets(SyntheticProteinConfig(
+        n_refs=120, n_homolog_queries=8, n_decoy_queries=8,
+        ref_len_mean=90, ref_len_std=12, sub_rates=(0.04, 0.1), seed=77))
+
+
+@pytest.fixture(scope="module")
+def index(data):
+    idx = SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"])
+    idx._ensure_built()
+    return idx
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ------------------------------------------------------------ the plan
+def test_plan_counts_calls_and_fires_exactly():
+    plan = FaultPlan().add("a.site", "raise", on={2, 4})
+    with plan:
+        assert fault_point("a.site") is None            # call 1
+        with pytest.raises(InjectedFault) as ei:
+            fault_point("a.site")                       # call 2 fires
+        assert ei.value.site == "a.site" and ei.value.call == 2
+        assert fault_point("a.site") is None            # call 3
+        with pytest.raises(InjectedFault):
+            fault_point("a.site")                       # call 4 fires
+        assert fault_point("other.site") is None        # independent counter
+    assert plan.calls("a.site") == 4
+    assert plan.calls("other.site") == 1
+    assert plan.fired("a.site") == 2 and plan.fired() == 2
+    assert plan.ledger() == [("a.site", 2, "raise"), ("a.site", 4, "raise")]
+    assert plan.unfired() == []
+    s = plan.summary()
+    assert s["scripted"] == {"a.site:raise": 2}
+    assert s["fired"] == {"a.site:raise": 2}
+
+
+def test_plan_unfired_flags_unreached_calls():
+    plan = FaultPlan().add("s", "raise", on=5)
+    with plan:
+        fault_point("s")                                # only call 1
+    unfired = plan.unfired()
+    assert len(unfired) == 1 and unfired[0].site == "s"
+
+
+def test_plan_kinds():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("s", "explode")
+    with pytest.raises(ValueError, match="1-based"):
+        FaultSpec("s", on=0)
+    slept = []
+    plan = FaultPlan(sleep=slept.append)
+    plan.add("k", "kill", on=1).add("l", "latency", on=1, delay_s=0.25)
+    plan.add("t", "torn", on=1, frac=0.3)
+    with plan:
+        with pytest.raises(ThreadKilled) as ei:
+            fault_point("k")
+        assert isinstance(ei.value, InjectedFault)      # handled like any
+        assert fault_point("l") is None                 # latency: no error,
+        assert slept == [0.25]                          # just the delay
+        spec = fault_point("t")                         # torn: RETURNED for
+        assert spec is not None and spec.frac == 0.3    # the writer to enact
+
+
+def test_plan_install_is_exclusive_and_scoped():
+    assert fault_point("nowhere") is None   # no plan: no counting, no cost
+    p1, p2 = FaultPlan(), FaultPlan()
+    with p1:
+        with pytest.raises(RuntimeError, match="already installed"):
+            p2.install()
+    with p2:                                # p1 exited: p2 may install
+        fault_point("s")
+    assert p2.calls("s") == 1
+    assert p1.calls("nowhere") == 0         # pre-install call never counted
+
+
+# ------------------------------------------------------------ atomic_write
+def test_atomic_write_writes_and_cleans_tmp(tmp_path):
+    dest = tmp_path / "out.bin"
+    atomic_write(dest, lambda fh: fh.write(b"hello"))
+    assert dest.read_bytes() == b"hello"
+    assert list(tmp_path.iterdir()) == [dest]           # no tmp droppings
+
+
+def test_atomic_write_crash_preserves_old_content(tmp_path):
+    dest = tmp_path / "out.bin"
+    dest.write_bytes(b"old-and-complete")
+
+    def boom(fh):
+        fh.write(b"new-but-")
+        raise RuntimeError("writer died mid-payload")
+
+    with pytest.raises(RuntimeError):
+        atomic_write(dest, boom)
+    assert dest.read_bytes() == b"old-and-complete"     # untouched
+    assert list(tmp_path.iterdir()) == [dest]
+
+
+def test_atomic_write_scripted_torn_write(tmp_path):
+    dest = tmp_path / "seg.bin"
+    dest.write_bytes(b"previous")
+    payload = b"0123456789" * 10
+    with FaultPlan().add("store.write", "torn", on=1, frac=0.5):
+        with pytest.raises(InjectedFault) as ei:
+            atomic_write(dest, lambda fh: fh.write(payload))
+    assert ei.value.kind == "torn"
+    torn = dest.read_bytes()
+    # the tear bypassed the tmp+rename discipline ON PURPOSE: partial
+    # new bytes landed straight on the destination (the damage recovery
+    # tests need), not the old content and not the full payload
+    assert torn == payload[:50]
+
+
+# ------------------------------------------------------------ supervisor
+def test_supervisor_restarts_then_recovers():
+    crashes, delays = [], []
+    state = {"n": 0}
+
+    def run_once():
+        state["n"] += 1
+        if state["n"] <= 3:
+            raise RuntimeError(f"boom {state['n']}")
+        return 1
+
+    sup = Supervisor("t", run_once, on_crash=crashes.append,
+                     max_consecutive_failures=5, sleep=delays.append,
+                     idle_sleep_s=0.001).start()
+    deadline = time.monotonic() + 10
+    while sup.crashes < 3 or sup.consecutive != 0:
+        assert time.monotonic() < deadline, sup.stats()
+        time.sleep(0.005)
+    assert sup.stop(timeout=5)
+    s = sup.stats()
+    assert s["crashes"] == 3 and s["consecutive_failures"] == 0
+    assert not s["degraded"] and "boom 3" in s["last_error"]
+    assert len(crashes) == 3
+    assert len([d for d in delays if d > 0]) >= 3       # backoff each crash
+
+
+def test_supervisor_gives_up_visibly():
+    gave_up = []
+    sup = Supervisor("t", lambda: (_ for _ in ()).throw(RuntimeError("x")),
+                     on_giveup=gave_up.append,
+                     max_consecutive_failures=3, sleep=lambda s: None).start()
+    deadline = time.monotonic() + 10
+    while not sup.degraded:
+        assert time.monotonic() < deadline, sup.stats()
+        time.sleep(0.005)
+    sup._thread.join(timeout=5)
+    s = sup.stats()
+    assert s["degraded"] and not s["alive"]             # died VISIBLY
+    assert s["crashes"] == 3                            # bounded, not a spin
+    assert len(gave_up) == 1
+
+
+def test_supervisor_backoff_is_seeded_and_capped():
+    a = Supervisor("a", lambda: 0, seed=42, backoff_base_s=0.01,
+                   backoff_cap_s=0.08)
+    b = Supervisor("b", lambda: 0, seed=42, backoff_base_s=0.01,
+                   backoff_cap_s=0.08)
+    da = [a.backoff_s(n) for n in range(1, 8)]
+    db = [b.backoff_s(n) for n in range(1, 8)]
+    assert da == db                         # same seed -> same jitter
+    assert all(d <= 0.08 * 1.5 for d in da)             # capped (x jitter)
+    assert da[0] < da[2]                                # grows at first
+
+
+# ------------------------------------------------------------ async engine
+class _FakeBackend:
+    """Minimal AsyncEngine backend: fails the first ``fail_first`` calls,
+    then answers with constant neighbors."""
+
+    def __init__(self, fail_first=0, block_on=None):
+        self.cfg = SCFG
+        self.calls = 0
+        self.fail_first = fail_first
+        self.block_on = block_on
+        self.index = None
+
+    def query_batch(self, ids, lens):
+        self.calls += 1
+        if self.block_on is not None:
+            self.block_on.wait()
+        if self.calls <= self.fail_first:
+            raise RuntimeError(f"backend down (call {self.calls})")
+        n = len(lens)
+        return (np.zeros((n, SCFG.k), np.int32),
+                np.zeros((n, SCFG.k), np.float32), 7)
+
+    def stats(self):
+        return {}
+
+
+def test_engine_internal_failure_resolves_futures_typed():
+    eng = AsyncEngine(_FakeBackend(fail_first=99), start=False)
+    f1 = eng.submit(np.zeros(8, np.int8))
+    f2 = eng.submit(np.zeros(8, np.int8))
+    with pytest.raises(RuntimeError):       # the crash still propagates
+        eng._drain_once(timeout=0.01)       # (the supervisor's signal) —
+    r1, r2 = f1.result(timeout=1), f2.result(timeout=1)
+    assert isinstance(r1, Rejected) and r1.reason == "internal"
+    assert "backend down" in r1.detail      # — but the futures were
+    assert r2.reason == "internal"          # already resolved, typed
+    assert eng.counters["shed_internal"] == 2
+
+
+def test_engine_supervised_dispatch_restarts():
+    eng = AsyncEngine(_FakeBackend(fail_first=1), max_wait_ms=0.0)
+    try:
+        r1 = eng.submit(np.zeros(8, np.int8)).result(timeout=30)
+        assert isinstance(r1, Rejected) and r1.reason == "internal"
+        r2 = eng.submit(np.zeros(8, np.int8)).result(timeout=30)
+        assert isinstance(r2, Completed) and r2.epoch == 7
+        d = eng.stats()["dispatch"]
+        assert d["crashes"] == 1 and d["alive"] and not d["degraded"]
+    finally:
+        assert eng.close(timeout=10)
+
+
+def test_engine_dispatch_giveup_drains_queue_and_sheds_new():
+    eng = AsyncEngine(_FakeBackend(fail_first=10 ** 9), max_wait_ms=0.0)
+    try:
+        futs = [eng.submit(np.zeros(8, np.int8)) for _ in range(4)]
+        deadline = time.monotonic() + 30
+        while not eng._sup.degraded:
+            # keep the loop fed: an empty queue is an idle (not failing)
+            # iteration and would never exhaust the restart budget
+            futs.append(eng.submit(np.zeros(8, np.int8)))
+            assert time.monotonic() < deadline, eng.stats()["dispatch"]
+            time.sleep(0.01)
+        outs = [f.result(timeout=30) for f in futs]
+        assert all(o.reason == "internal" for o in outs)    # none stranded
+        late = eng.submit(np.zeros(8, np.int8)).result(timeout=1)
+        assert late.reason == "internal"    # degraded: shed at the door
+        assert "degraded" in late.detail
+    finally:
+        eng.close(timeout=10)
+
+
+def test_engine_close_reports_wedged_thread():
+    gate = threading.Event()
+    eng = AsyncEngine(_FakeBackend(block_on=gate), max_wait_ms=0.0)
+    fut = eng.submit(np.zeros(8, np.int8))
+    deadline = time.monotonic() + 10
+    while not eng.counters["batches"] and fut.done() is False \
+            and eng.pending():
+        assert time.monotonic() < deadline
+        time.sleep(0.005)
+    time.sleep(0.05)                        # let dispatch enter the backend
+    assert eng.close(timeout=0.2) is False  # wedged: REPORTED, not hidden
+    assert eng.stats()["wedged"]
+    gate.set()                              # release the stuck thread
+
+
+# ------------------------------------------------------------ fleet health
+def test_fleet_retries_failed_batch_on_other_replica(data, index):
+    fleet = ReplicaFleet(index, SCFG, n_replicas=2, start_ingest=False)
+    q, ql = data["query_ids"][:4], data["query_lens"][:4]
+    want = ReplicaFleet(index, SCFG, n_replicas=1,
+                        start_ingest=False).query_batch(q, ql)
+    with FaultPlan().add("replica.query", "raise", on=1):
+        nid, nd, epoch = fleet.query_batch(q, ql)
+    np.testing.assert_array_equal(nid, want[0])
+    np.testing.assert_array_equal(nd, want[1])
+    assert epoch == want[2]
+    c = fleet.counters
+    assert (c["retries"], c["retry_success"]) == (1, 1)
+    assert c["replica_failures"] == 1 and c["replica_quarantines"] == 0
+    assert fleet.coverage() == 1.0          # one blip quarantines nobody
+
+
+def test_fleet_quarantine_halfopen_probe_readmission(data, index):
+    clock = FakeClock()
+    fleet = ReplicaFleet(index, SCFG, n_replicas=2, start_ingest=False,
+                         fail_threshold=1, quarantine_s=10.0, clock=clock)
+    q, ql = data["query_ids"][:2], data["query_lens"][:2]
+    with FaultPlan().add("replica.query", "raise", on={1, 2}) as plan:
+        out = fleet.query_batch(q, ql)      # both replicas fail -> degraded
+        assert isinstance(out, DegradedBatch) and out.coverage == 0.0
+        assert (out.ids == -1).all() and np.isinf(out.dists).all()
+        assert out.epoch is None and "injected" in out.detail
+        out2 = fleet.query_batch(q, ql)     # still quarantined: no attempt
+        assert isinstance(out2, DegradedBatch)
+        assert plan.calls("replica.query") == 2     # no replica was touched
+        clock.advance(10.5)                 # quarantine expires
+        nid, nd, _ = fleet.query_batch(q, ql)       # half-open probe #1
+        assert (nid != -2).all()
+        fleet.query_batch(q, ql)                    # half-open probe #2
+    c = fleet.counters
+    assert c["replica_quarantines"] == 2 and c["degraded_batches"] == 2
+    assert c["replica_probes"] == 2 and c["replica_readmissions"] == 2
+    assert fleet.coverage() == 1.0          # fully readmitted
+    health = [r["health"] for r in fleet.stats()["replicas"]]
+    assert all(not h["quarantined"] and h["fails"] == 0 for h in health)
+
+
+def test_fleet_degraded_flows_through_engine_typed(data, index):
+    fleet = ReplicaFleet(index, SCFG, n_replicas=2, start_ingest=False,
+                         fail_threshold=1, quarantine_s=60.0,
+                         clock=FakeClock())
+    eng = AsyncEngine(fleet, start=False)
+    with FaultPlan().add("replica.query", "raise", on={1, 2}):
+        fut = eng.submit(np.asarray(data["query_ids"][0]
+                                    [:data["query_lens"][0]], np.int8))
+        eng._drain_once(timeout=0.01)
+    out = fut.result(timeout=5)
+    assert isinstance(out, Degraded) and not out.ok and out.degraded
+    assert out.coverage == 0.0 and out.epoch is None
+    assert eng.counters["degraded"] == 1
+
+
+def test_fleet_ingest_crash_resolves_ticket_and_restarts(data):
+    # fresh index: this test MUTATES it (the module fixture stays pure)
+    index = SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"])
+    index._ensure_built()
+    epoch0 = index.epoch
+    fleet = ReplicaFleet(index, SCFG, n_replicas=2)
+    try:
+        with FaultPlan().add("ingest.apply", "kill", on=1):
+            t1 = fleet.ingest(data["ref_ids"][:4], data["ref_lens"][:4])
+            assert t1.wait(timeout=30)      # resolved, not stranded
+            assert not t1.ok and "injected" in t1.error
+            t2 = fleet.ingest(data["ref_ids"][:4], data["ref_lens"][:4])
+            assert t2.wait(timeout=30) and t2.ok and t2.error is None
+        st = fleet.stats()
+        assert st["counters"]["ingest_failures"] == 1
+        assert st["counters"]["ingests"] == 1
+        assert st["ingest"]["crashes"] == 1 and st["ingest"]["alive"]
+        assert not st["ingest"]["degraded"]
+        assert index.epoch == epoch0 + 1    # the retry actually landed
+    finally:
+        assert fleet.close(timeout=10)
+
+
+def test_fleet_close_resolves_queued_tickets(data):
+    index = SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"])
+    index._ensure_built()
+    fleet = ReplicaFleet(index, SCFG, n_replicas=1, start_ingest=False)
+    t = fleet.ingest(data["ref_ids"][:4], data["ref_lens"][:4])
+    assert fleet.close(timeout=5)           # no loop ever ran: still queued
+    assert t.is_set() and not t.ok and "Shutdown" in t.error

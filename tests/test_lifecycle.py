@@ -281,6 +281,110 @@ def test_manifest_rejects_reordered_segments(tmp_path, data):
         SignatureIndex.load(d)
 
 
+def test_truncated_segment_raises_typed_error_naming_file(tmp_path, data):
+    """A torn/truncated segment file raises CorruptSegment carrying the
+    offending filename — the operator knows WHICH file to restore."""
+    from repro.index.segments import CorruptSegment
+    d = tmp_path / "idx"
+    _segmented(data, 3).save(d)
+    victim = d / "seg-g000-00001.npz"
+    blob = victim.read_bytes()
+    victim.write_bytes(blob[:len(blob) // 3])        # torn write of old
+    with pytest.raises(CorruptSegment) as ei:
+        SignatureIndex.load(d)
+    assert "seg-g000-00001.npz" in ei.value.file
+    assert "seg-g000-00001.npz" in str(ei.value)
+
+
+def test_checksum_mismatch_is_typed_with_file(tmp_path, data):
+    """The PR 5 checksum rejection is now a typed CorruptSegment (still a
+    ValueError — older handlers keep working) that names the file."""
+    from repro.index.segments import CorruptSegment
+    d = tmp_path / "idx"
+    _segmented(data, 2).save(d)
+    seg1 = d / "seg-g000-00001.npz"
+    z = dict(np.load(seg1))
+    z["sigs"] = z["sigs"][::-1].copy()
+    np.savez_compressed(seg1, **z)
+    with pytest.raises(CorruptSegment) as ei:
+        SignatureIndex.load(d)
+    assert isinstance(ei.value, ValueError)
+    assert "seg-g000-00001.npz" in ei.value.file
+
+
+def test_recovery_quarantines_tail_serves_valid_prefix(tmp_path, data,
+                                                       q_sigs):
+    """load(recover=True) on a damaged middle segment quarantines it AND
+    everything after it (later global ids assume the damaged rows exist),
+    rewrites the manifest to the valid prefix, and serves that prefix
+    bit-exact with a from-scratch rebuild of the same rows."""
+    d = tmp_path / "idx"
+    _segmented(data, 3).save(d)              # 3 segments: 40 rows each
+    victim = d / "seg-g000-00001.npz"
+    blob = victim.read_bytes()
+    victim.write_bytes(blob[: len(blob) // 3])
+    idx = SignatureIndex.load(d, recover=True)
+    rec = idx.recovery
+    assert rec is not None and "seg-g000-00001.npz" in rec["file"]
+    assert rec["n_segments_dropped"] == 2    # the damaged one AND its tail
+    assert rec["n_rows_served"] == idx.size == 40
+    assert sorted(rec["quarantined"]) == ["seg-g000-00001.npz",
+                                          "seg-g000-00002.npz"]
+    for f in rec["quarantined"]:             # evidence moved, not deleted
+        assert (d / "quarantine" / f).exists()
+        assert not (d / f).exists()
+    # the served prefix is bit-exact with a rebuild of those rows
+    prefix = SignatureIndex.build(CFG, data["ref_ids"][:40],
+                                  data["ref_lens"][:40])
+    want = topk_probe(prefix, q_sigs, k=5, cap=64)
+    got = topk_probe(idx, q_sigs, k=5, cap=64)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the rewritten manifest loads CLEAN now — recovery is durable
+    again = SignatureIndex.load(d)
+    assert again.recovery is None and again.size == 40
+
+
+def test_legacy_npz_torn_write_is_typed(tmp_path, data):
+    """A truncated monolithic .npz (no prefix to fall back to) raises a
+    typed CorruptSegment naming the path instead of a bare zipfile/OSError
+    from deep inside numpy."""
+    from repro.index.segments import CorruptSegment
+    p = tmp_path / "idx.npz"
+    SignatureIndex.build(CFG, data["ref_ids"], data["ref_lens"]).save(p)
+    blob = p.read_bytes()
+    p.write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(CorruptSegment) as ei:
+        SignatureIndex.load(p)
+    assert "idx.npz" in ei.value.file
+
+
+def test_forest_generation_and_size_mismatch_typed(tmp_path, data):
+    """A persisted family forest that does not belong to the index it is
+    loaded for (stale generation, wrong corpus size, torn file) raises
+    ForestMismatch naming the file — a stale forest silently mislabeling
+    families is the failure this guards against."""
+    from repro.allpairs import ForestMismatch
+    fpath = tmp_path / "families.npz"
+    forest = FamilyForest(12)
+    forest.union_edges(np.array([[0, 1], [2, 3]]))
+    forest.save(fpath, generation=2)
+    ok = FamilyForest.load(fpath, expect_n=12, expect_generation=2)
+    np.testing.assert_array_equal(ok.labels(), forest.labels())
+    with pytest.raises(ForestMismatch) as ei:
+        FamilyForest.load(fpath, expect_generation=3)
+    assert "families.npz" in ei.value.file and "generation" in str(ei.value)
+    with pytest.raises(ForestMismatch, match="stale forest"):
+        FamilyForest.load(fpath, expect_n=99)
+    blob = fpath.read_bytes()                # torn forest file: typed too
+    fpath.write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(ForestMismatch, match="unreadable"):
+        FamilyForest.load(fpath)
+    # pre-PR 8 files carry no metadata: load fine, skip the gen check
+    np.savez_compressed(fpath, parent=forest.parent, size=forest._size)
+    FamilyForest.load(fpath, expect_generation=7)
+
+
 def test_compact_noop_when_already_compact(data):
     """compact() on a single-sealed-segment index must not bump the
     generation (a replica would pay a full re-place for zero change)."""
