@@ -11,6 +11,9 @@ Acceptance criteria of the `repro.allpairs` subsystem, measured on a
   loop, synchronous, no prefilter) by >= 3x end-to-end (index build +
   self-join + scoring), with survivor SW scores bit-exact against the PR 2
   path and prefilter recall >= 99% at the family score threshold;
+* the wavefront DP (anti-diagonal sweep, `repro.align.gotoh`) must
+  deliver >= 2x the row wave's pairs/s at the acceptance shape B=64,
+  Lq=Lr=192 (the ``--dp-kernel``/``--gap-mode`` sweep, asserted);
 * the tiled pipeline must beat naive all-pairs per-pair Smith-Waterman by
   >= 10x wall-clock (timed on a sample, extrapolated). The naive baseline
   deliberately pays the per-shape jit retrace on every ragged pair — that
@@ -31,7 +34,8 @@ import time
 
 import numpy as np
 
-from repro.align.smith_waterman import sw_score
+from repro.align import gotoh
+from repro.align.smith_waterman import sw_score, sw_scores_device
 from repro.allpairs import (brute_force_collisions, lsh_self_join,
                             score_pairs, wave_plan, WaveConfig)
 from repro.core import LSHConfig
@@ -44,8 +48,13 @@ from repro.index import SignatureIndex
 # them with margin on both sides (see tests/test_allpairs.py recall test).
 FAMILY_SCORE_T = 150
 
+# (dp_kernel, gap_mode) pairs of the score-phase sweep; rowwave+affine is
+# rejected by the router and so not a sweep point
+DP_SWEEP = (("rowwave", "linear"), ("wavefront", "linear"),
+            ("wavefront", "affine"))
+
 PR2_WAVE = WaveConfig(wave_batch=64, device_gather=False, prefilter=False,
-                      inflight=0)
+                      inflight=0, dp_kernel="rowwave")
 DEVICE_WAVE = WaveConfig(wave_batch=64, device_gather=True, prefilter=True,
                          prefilter_min=40, inflight=2)
 
@@ -63,9 +72,54 @@ def _warm(ids, lens, pairs, cfg: WaveConfig):
     score_pairs(ids, lens, pairs[sample], wc)
 
 
+def dp_kernel_sweep(csv=print, *, n: int, B: int = 64, L: int = 192,
+                    reps: int = 20, dp_kernel: str = "all",
+                    gap_mode: str = "all", seed: int = 17) -> dict:
+    """Score-phase microbenchmark at the acceptance shape (B=64,
+    Lq=Lr=192): warmed steady-state pairs/s of each (dp_kernel, gap_mode)
+    sweep point on one device-resident block. The wavefront's win over the
+    row wave is an acceptance criterion (>= 2x pairs/s), asserted whenever
+    both linear sweep points run."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    qs = jnp.asarray(rng.integers(0, 20, (B, L), dtype=np.int8))
+    rs = jnp.asarray(rng.integers(0, 20, (B, L), dtype=np.int8))
+    fns = {("rowwave", "linear"): lambda: sw_scores_device(qs, rs),
+           ("wavefront", "linear"): lambda: gotoh.sw_wave_linear(qs, rs),
+           ("wavefront", "affine"): lambda: gotoh.sw_wave_affine(qs, rs)}
+    out = {"shape": {"B": B, "Lq": L, "Lr": L}}
+    for kernel, mode in DP_SWEEP:
+        if dp_kernel != "all" and kernel != dp_kernel:
+            continue
+        if gap_mode != "all" and mode != gap_mode:
+            continue
+        fn = fns[(kernel, mode)]
+        fn().block_until_ready()                        # warm the shape
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn().block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        key = f"{kernel}_{mode}"
+        out[key] = {"wave_ms": round(dt * 1e3, 3),
+                    "pairs_per_sec": round(B / dt, 1)}
+        csv(f"allpairs,{n},dp_{key},wave_ms,{dt * 1e3:.3f}")
+        csv(f"allpairs,{n},dp_{key},pairs_per_sec,{B / dt:.0f}")
+    row, wav = out.get("rowwave_linear"), out.get("wavefront_linear")
+    if row and wav:
+        speedup = wav["pairs_per_sec"] / row["pairs_per_sec"]
+        out["speedup_wavefront_vs_rowwave"] = round(speedup, 2)
+        csv(f"allpairs,{n},dp_wavefront_linear,speedup_vs_rowwave,"
+            f"{speedup:.2f}")
+        assert speedup >= 2.0, (
+            f"wavefront must deliver >= 2x row-wave pairs/s at B={B}, "
+            f"Lq=Lr={L} (got {speedup:.2f}x)")
+    return out
+
+
 def run(csv=print, n_seqs: int = 2048, naive_sample: int = 192,
         use_pallas: bool = False, profile: bool = False,
-        json_path: str | None = None):
+        json_path: str | None = None, dp_kernel: str = "all",
+        gap_mode: str = "all"):
     csv("bench,n_seqs,method,metric,value")
     n_fam = n_seqs // 8                    # 4-member families, half singletons
     corpus = make_family_corpus(FamilyCorpusConfig(
@@ -173,6 +227,9 @@ def run(csv=print, n_seqs: int = 2048, naive_sample: int = 192,
         assert wave_sc[row] == sw_score(ids[a][: lens[a]], ids[b][: lens[b]])
     csv(f"allpairs,{n},pr2,wave_score_parity,1")
 
+    # ---- score-phase DP sweep: rowwave vs wavefront, linear vs affine ----
+    dp = dp_kernel_sweep(csv, n=n, dp_kernel=dp_kernel, gap_mode=gap_mode)
+
     # ---- attribution: host-gather vs device-DP split (--profile) ---------
     if profile:
         for name, wc in (("pr2", pr2), ("device", devw)):
@@ -197,6 +254,7 @@ def run(csv=print, n_seqs: int = 2048, naive_sample: int = 192,
             "speedup": {"score_vs_pr2": round(speedup_score, 2),
                         "e2e_vs_pr2": round(speedup_e2e, 2),
                         "vs_naive_extrapolated": round(speedup_naive, 1)},
+            "dp_kernels": dp,
             "exactness": {"collision_exact": bool(exact),
                           "survivor_bitexact": True,
                           "family_threshold": FAMILY_SCORE_T,
@@ -219,12 +277,19 @@ def main(argv=None):
                     help="report host-gather vs device-DP time split")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable summary here")
+    ap.add_argument("--dp-kernel", default="all",
+                    choices=["all", "rowwave", "wavefront"],
+                    help="restrict the score-phase DP sweep")
+    ap.add_argument("--gap-mode", default="all",
+                    choices=["all", "linear", "affine"],
+                    help="restrict the score-phase DP sweep")
     args = ap.parse_args(argv)
     n = args.n_seqs or (256 if args.smoke else 2048)
     sample = 32 if args.smoke else 192
     json_path = args.json or ("BENCH_allpairs.json" if args.smoke else None)
     run(n_seqs=n, naive_sample=sample, use_pallas=args.pallas,
-        profile=args.profile, json_path=json_path)
+        profile=args.profile, json_path=json_path,
+        dp_kernel=args.dp_kernel, gap_mode=args.gap_mode)
 
 
 if __name__ == "__main__":

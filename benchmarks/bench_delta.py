@@ -48,10 +48,43 @@ def compare_chaos(fresh: dict, base: dict) -> list[str]:
     return warnings
 
 
+def compare_allpairs(fresh: dict, base: dict,
+                     threshold: float = 0.20) -> list[str]:
+    """All-pairs artifacts: score-phase throughput (device + per-DP-kernel
+    pairs/s) down more than the threshold is flagged; so is the wavefront
+    speedup slipping under its 2x acceptance floor."""
+    warnings = []
+    for sect in ("pr2", "device"):
+        fv = (fresh.get(sect) or {}).get("pairs_per_sec", 0.0)
+        bv = (base.get(sect) or {}).get("pairs_per_sec", 0.0)
+        if bv > 0 and fv < (1 - threshold) * bv:
+            warnings.append(
+                f"{sect} score-phase pairs/s regressed "
+                f"{100 * (1 - fv / bv):.0f}%: {fv:.0f} vs baseline {bv:.0f}")
+    fd, bd = fresh.get("dp_kernels") or {}, base.get("dp_kernels") or {}
+    for key in sorted(set(fd) | set(bd)):
+        fv, bv = fd.get(key), bd.get(key)
+        if not (isinstance(fv, dict) and isinstance(bv, dict)):
+            continue
+        fp, bp = fv.get("pairs_per_sec", 0.0), bv.get("pairs_per_sec", 0.0)
+        if bp > 0 and fp < (1 - threshold) * bp:
+            warnings.append(
+                f"dp kernel {key} pairs/s regressed "
+                f"{100 * (1 - fp / bp):.0f}%: {fp:.0f} vs baseline {bp:.0f}")
+    sp = fd.get("speedup_wavefront_vs_rowwave")
+    if sp is not None and sp < 2.0:
+        warnings.append(
+            f"wavefront speedup vs rowwave at {sp:.2f}x — under the 2x "
+            f"acceptance floor")
+    return warnings
+
+
 def compare(fresh: dict, base: dict, threshold: float = 0.20) -> list[str]:
     """Return warning strings for every knee metric past the threshold."""
     if fresh.get("bench") == "chaos_soak" or "fault_counters" in fresh:
         return compare_chaos(fresh, base)
+    if fresh.get("bench") == "allpairs":
+        return compare_allpairs(fresh, base, threshold)
     warnings = []
     fk, bk = fresh.get("knee"), base.get("knee")
     if not fk or not bk:
@@ -91,12 +124,22 @@ def main(argv=None) -> int:
         return 0    # missing artifact: nothing to compare, never block
     warnings = compare(fresh, base, args.threshold)
     chaos = fresh.get("bench") == "chaos_soak" or "fault_counters" in fresh
-    title = "chaos fault-count drift" if chaos else "serve_slo knee regression"
+    allpairs = fresh.get("bench") == "allpairs"
+    title = ("chaos fault-count drift" if chaos
+             else "allpairs throughput regression" if allpairs
+             else "serve_slo knee regression")
     for w in warnings:
         print(f"::warning title={title}::{w}")
     if not warnings and chaos:
         print(f"bench_delta: chaos fault counters identical to baseline "
               f"({len(fresh.get('fault_counters', {}))} counters)")
+    elif not warnings and allpairs:
+        dv = (fresh.get("device") or {}).get("pairs_per_sec", 0.0)
+        sp = (fresh.get("dp_kernels") or {}).get(
+            "speedup_wavefront_vs_rowwave")
+        print(f"bench_delta: allpairs throughput within "
+              f"{args.threshold:.0%} of baseline (device {dv:.0f} pairs/s"
+              + (f", wavefront {sp:.2f}x rowwave" if sp else "") + ")")
     elif not warnings:
         fk, bk = fresh["knee"], base["knee"]
         print(f"bench_delta: knee within {args.threshold:.0%} of baseline "

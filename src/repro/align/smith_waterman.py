@@ -23,6 +23,11 @@ The O(L) traceback that extracts matched positions runs host-side in numpy
 
 Linear gap penalty (the paper's quality analysis uses ungapped/simple-gap
 BLAST alignments; gap open == extend keeps the DP a 3-way max).
+
+The anti-diagonal *wavefront* sweep (:mod:`repro.align.gotoh`) has since
+superseded this row wave as the default score-only kernel
+(``dp_kernel="wavefront"``, ~2.8x on CPU, affine gaps supported); the row
+wave remains the ``"rowwave"`` fallback and the PID/matrix path.
 """
 from __future__ import annotations
 
@@ -39,33 +44,27 @@ GAP = -4     # linear gap penalty (BLOSUM62-compatible default)
 NEG = -10**6  # masked-substitution sentinel (padded positions never win)
 
 
-def _sub_matrix(q, r, dtype=jnp.int32):
-    """(Lq,) x (Lr,) int8 -> (Lq, Lr) ``dtype`` substitution scores,
-    PAD-masked. The int16 sentinel -(1<<14) is "negative enough": H never
-    exceeds 11*L (the largest BLOSUM62 diagonal), which the int16 guard
-    caps below 2^14, so a masked cell can neither win the 3-way max nor
-    underflow the dtype (same argument as the ungapped prefilter's)."""
-    neg = dtype(-(1 << 14)) if dtype == jnp.int16 else jnp.int32(NEG)
-    B = jnp.asarray(BLOSUM62_PADDED, dtype)
+def _sub_matrix(q, r):
+    """(Lq,) x (Lr,) int8 -> (Lq, Lr) int32 substitution scores,
+    PAD-masked (a masked cell can never win the 3-way max)."""
+    B = jnp.asarray(BLOSUM62_PADDED)
     sub = B[q.astype(jnp.int32)][:, r.astype(jnp.int32)]
     valid = (q[:, None] != PAD) & (r[None, :] != PAD)
-    return jnp.where(valid, sub, neg)
+    return jnp.where(valid, sub, NEG)
 
 
-def _wave_row(prev_row, sub_row, dtype=jnp.int32):
+def _wave_row(prev_row, sub_row):
     """One DP row via the max-plus prefix scan (see module docstring).
 
-    prev_row: H[i-1, :] (Lr+1,);  sub_row: s[i, :] (Lr,), both ``dtype``.
-    Returns H[i, :] (Lr+1,) ``dtype``, cell-exact with the classic
-    recurrence (int16 carries are exact under the 11*L < 2^14 guard: the
-    scan argument a + c*t is bounded by 11*L + 4*L < 2^15).
+    prev_row: H[i-1, :] (Lr+1,);  sub_row: s[i, :] (Lr,), both int32.
+    Returns H[i, :] (Lr+1,) int32, cell-exact with the classic recurrence.
     """
-    c = dtype(-GAP)
-    a = jnp.maximum(dtype(0), jnp.maximum(prev_row[:-1] + sub_row,
-                                          prev_row[1:] + dtype(GAP)))
-    t = jnp.arange(1, a.shape[0] + 1, dtype=dtype)
+    c = jnp.int32(-GAP)
+    a = jnp.maximum(0, jnp.maximum(prev_row[:-1] + sub_row,
+                                   prev_row[1:] + GAP))
+    t = jnp.arange(1, a.shape[0] + 1, dtype=jnp.int32)
     p = jax.lax.cummax(a + c * t)
-    return jnp.concatenate([jnp.zeros(1, dtype), p - c * t])
+    return jnp.concatenate([jnp.zeros(1, jnp.int32), p - c * t])
 
 
 @functools.partial(jax.jit, static_argnames=("return_matrix",))
@@ -75,10 +74,12 @@ def _sw_dp(q, r, return_matrix: bool = False):
     Returns (best_score, H) where H is the (Lq+1, Lr+1) DP matrix if
     requested (int32), else a dummy scalar.
 
-    The matrix path stays int32 (the PID traceback reads H cell-exact and
-    is host-bound anyway); the score-only path narrows to int16 carries +
-    an unrolled scan when the guard holds — the same treatment that bought
-    the ungapped prefilter its 5-10x on CPU, applied to the gapped wave.
+    Both paths are plain int32 scans. The row wave is the *fallback* DP
+    (``dp_kernel="rowwave"``); the int16-carry + unrolled-scan variant it
+    once had is retired — the anti-diagonal wavefront (`repro.align.gotoh`)
+    replaced it as the fast path and the narrowing bought nothing on top
+    of the int32 row wave worth its guard plumbing (1.13x, vs 2.8x for
+    the wavefront; see ROADMAP "Perf ledger").
     """
     if return_matrix:
         sub = _sub_matrix(q, r)
@@ -89,22 +90,17 @@ def _sw_dp(q, r, return_matrix: bool = False):
             H0, sub)
         H = jnp.concatenate([H0[None], rows], axis=0)   # (Lq+1, Lr+1)
         return jnp.max(H), H
-    # score-only: carry a running max instead of materializing H. int16 is
-    # exact while 11*L < 2^14 (L = max side, static shape); above that the
-    # carries fall back to int32.
-    small = 11 * max(q.shape[0], r.shape[0]) < (1 << 14)
-    dtype = jnp.int16 if small else jnp.int32
-    sub = _sub_matrix(q, r, dtype)
-    H0 = jnp.zeros(r.shape[0] + 1, dtype)
+    # score-only: carry a running max instead of materializing H
+    sub = _sub_matrix(q, r)
+    H0 = jnp.zeros(r.shape[0] + 1, jnp.int32)
 
     def step(carry, s):
         prev, best = carry
-        row = _wave_row(prev, s, dtype)
+        row = _wave_row(prev, s)
         return (row, jnp.maximum(best, jnp.max(row))), None
 
-    (_, best), _ = jax.lax.scan(step, (H0, jnp.zeros((), dtype)), sub,
-                                unroll=_UNROLL)
-    return best.astype(jnp.int32), jnp.int32(0)
+    (_, best), _ = jax.lax.scan(step, (H0, jnp.zeros((), jnp.int32)), sub)
+    return best, jnp.int32(0)
 
 
 def sw_score(q, r) -> int:
@@ -141,17 +137,55 @@ def gather_rows(ids_dev, lens_dev, idx, L: int):
     return jnp.where(pos < ln[:, None], rows, PAD)
 
 
-@functools.partial(jax.jit, static_argnames=("Lq", "Lr"))
+def dp_scores_block(qm, rm, *, dp_kernel: str = "wavefront",
+                    gap_mode: str = "linear", gap_open: int | None = None,
+                    gap_extend: int | None = None) -> jax.Array:
+    """Route a gathered (B, Lq) x (B, Lr) pair block to a DP sweep.
+
+    ``dp_kernel`` picks the sweep order — ``"wavefront"`` (anti-diagonal,
+    `repro.align.gotoh`, the fast default) or ``"rowwave"`` (the int32
+    row-wave fallback, linear-gap only). ``gap_mode`` picks the penalty
+    model — ``"linear"`` (scores identical under both kernels) or
+    ``"affine"`` (Gotoh; wavefront-only). Traceable: safe to call under an
+    enclosing jit with the knobs static.
+    """
+    if gap_mode not in ("linear", "affine"):
+        raise ValueError(f"unknown gap_mode {gap_mode!r}")
+    if dp_kernel not in ("wavefront", "rowwave"):
+        raise ValueError(f"unknown dp_kernel {dp_kernel!r}")
+    from .gotoh import GAP_EXTEND, GAP_OPEN, _wave_affine_impl, \
+        _wave_linear_impl
+    if gap_mode == "affine":
+        if dp_kernel == "rowwave":
+            raise ValueError("affine gaps need dp_kernel='wavefront' "
+                             "(the row wave's prefix-scan closed form "
+                             "only holds for linear penalties)")
+        return _wave_affine_impl(
+            qm, rm, GAP_OPEN if gap_open is None else gap_open,
+            GAP_EXTEND if gap_extend is None else gap_extend)
+    if dp_kernel == "rowwave":
+        return _sw_scores_batch(qm, rm)
+    return _wave_linear_impl(qm, rm, GAP if gap_open is None else gap_open)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "Lq", "Lr", "dp_kernel", "gap_mode", "gap_open", "gap_extend"))
 @trace_sentinel("sw_gather")
 def sw_gather_scores(q_ids, q_lens, r_ids, r_lens, qi, ri, *,
-                     Lq: int, Lr: int) -> jax.Array:
+                     Lq: int, Lr: int, dp_kernel: str = "wavefront",
+                     gap_mode: str = "linear", gap_open: int | None = None,
+                     gap_extend: int | None = None) -> jax.Array:
     """ONE jitted program: gather both pair sides from device-resident
     corpora and run the full SW wave. (qi, ri) (B,) int32 with -1 padding;
     padding slots score 0. Used by the all-pairs scheduler (q_ids is r_ids)
-    and the serving re-rank (queries vs the reference store)."""
+    and the serving re-rank (queries vs the reference store). DP routing
+    knobs are static (see :func:`dp_scores_block`); defaults — wavefront
+    sweep, linear gaps — keep scores bit-exact with the historical
+    row-wave path."""
     qm = gather_rows(q_ids, q_lens, qi, Lq)
     rm = gather_rows(r_ids, r_lens, ri, Lr)
-    return _sw_scores_batch(qm, rm)
+    return dp_scores_block(qm, rm, dp_kernel=dp_kernel, gap_mode=gap_mode,
+                           gap_open=gap_open, gap_extend=gap_extend)
 
 
 # ------------------------------------------------------------ ungapped X-drop

@@ -32,7 +32,7 @@ from-scratch recluster of the grown corpus.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -41,8 +41,8 @@ from ..index.store import SignatureIndex
 from .graph import (FamilyForest, FamilyResult, ForestMismatch,
                     cluster_families, families_from_labels, threshold_edges,
                     union_find)
-from .selfjoin import (SelfJoinResult, brute_force_collisions,
-                       lsh_delta_join, lsh_self_join)
+from .selfjoin import (JoinPrefilter, SelfJoinResult,
+                       brute_force_collisions, lsh_delta_join, lsh_self_join)
 from .tiles import PairScores, WaveConfig, score_pairs, wave_plan
 
 
@@ -60,6 +60,12 @@ class AllPairsConfig:
     min_pid: float = 50.0        # family edge threshold (percent identity)
     min_score: int = 60          # edge threshold when waves skip PID
     max_pairs: int = 1 << 16     # initial self-join capacity (grows)
+    fuse_prefilter: bool = False  # run the ungapped X-drop prefilter INSIDE
+                                  # join emission (rejected pairs never reach
+                                  # the host; wave.prefilter_min/xdrop supply
+                                  # the threshold) — the surviving pair set
+                                  # is bit-exact with the unfused wave
+                                  # prefilter, which is then skipped
 
 
 @dataclass(frozen=True)
@@ -78,6 +84,18 @@ class AllPairsResult:
         return self.families.labels
 
 
+def _join_prefilter(cfg: AllPairsConfig, ids, lens):
+    """The fused in-join prefilter (and the prefilter-free wave to pair it
+    with): thresholds come from the SAME WaveConfig knobs as the unfused
+    wave prefilter, so fusing never changes which pairs survive."""
+    if not cfg.fuse_prefilter:
+        return None, cfg.wave
+    pf = JoinPrefilter(ids=ids, lens=lens, min_score=cfg.wave.prefilter_min,
+                       x=cfg.wave.xdrop, batch=cfg.wave.prefilter_batch,
+                       len_quantum=cfg.wave.len_quantum)
+    return pf, replace(cfg.wave, prefilter=False)
+
+
 def all_pairs_search(ids, lens, cfg: AllPairsConfig | None = None,
                      *, index: SignatureIndex | None = None) -> AllPairsResult:
     """Corpus in, protein families out (the subsystem's one-call driver).
@@ -94,9 +112,11 @@ def all_pairs_search(ids, lens, cfg: AllPairsConfig | None = None,
     elif index.size != len(lens):
         raise ValueError(f"index covers {index.size} sequences, corpus has "
                          f"{len(lens)}")
+    pf, wave = _join_prefilter(cfg, ids, lens)
     join = lsh_self_join(index, d=cfg.lsh.d if cfg.hamming_filter else None,
-                         max_pairs=cfg.max_pairs, n_shards=cfg.n_shards)
-    scored = score_pairs(ids, lens, join.pairs, cfg.wave)
+                         max_pairs=cfg.max_pairs, n_shards=cfg.n_shards,
+                         prefilter=pf)
+    scored = score_pairs(ids, lens, join.pairs, wave)
     if cfg.wave.with_pid:
         families = cluster_families(index.size, join.pairs, scored.pid,
                                     min_pid=cfg.min_pid)
@@ -169,10 +189,11 @@ def all_pairs_ingest(ids, lens, base_size: int,
         raise ValueError(
             f"index covers {index.size} sequences; expected the resident "
             f"{base_size} (add() pending) or the grown {len(lens)}")
+    pf, wave = _join_prefilter(cfg, ids, lens)
     join = lsh_delta_join(index, base_size=base_size,
                           d=cfg.lsh.d if cfg.hamming_filter else None,
-                          max_pairs=cfg.max_pairs)
-    scored = score_pairs(ids, lens, join.pairs, cfg.wave)
+                          max_pairs=cfg.max_pairs, prefilter=pf)
+    scored = score_pairs(ids, lens, join.pairs, wave)
     mask = _edge_mask(scored, cfg, join.pairs)
     forest.grow(index.size)
     forest.union_edges(join.pairs[mask])
@@ -183,7 +204,7 @@ def all_pairs_ingest(ids, lens, base_size: int,
 __all__ = [
     "AllPairsConfig", "AllPairsResult", "all_pairs_search",
     "IngestResult", "all_pairs_ingest", "forest_from_result",
-    "SelfJoinResult", "lsh_self_join", "lsh_delta_join",
+    "SelfJoinResult", "JoinPrefilter", "lsh_self_join", "lsh_delta_join",
     "brute_force_collisions",
     "WaveConfig", "PairScores", "score_pairs", "wave_plan",
     "FamilyResult", "FamilyForest", "cluster_families", "threshold_edges",

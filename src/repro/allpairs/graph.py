@@ -13,6 +13,16 @@ edges into the standing components — labels are canonicalized to the
 component's smallest member id, so the incremental forest is EXACTLY the
 from-scratch :func:`union_find` over the concatenated edge set (union
 order never changes components, and the canonical label is order-free).
+
+With the fused in-join prefilter (``AllPairsConfig.fuse_prefilter``) the
+candidate edges entering this module are already X-drop survivors — the
+fused and the wave prefilter share one threshold, so the surviving pair
+set (and therefore every component) is identical under both routes. The
+``min_score`` floor applies to whichever gap mode scored the edges:
+BLOSUM62 thresholds calibrated under linear gaps carry over to affine
+(-11/-1) wherever family alignments are gapless, since the two modes
+score gapless alignments identically (Gotoh with no gap opened is the
+plain match recurrence).
 """
 from __future__ import annotations
 

@@ -53,6 +53,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..align.smith_waterman import gather_rows, ungapped_xdrop_scores
 from ..core.hamming import hamming_distance
 from ..core.join import compact_pairs, dedup_pairs
 from ..index.partition import BucketPartition, pad_slabs_pow2
@@ -261,12 +262,96 @@ def _dedup_filter(cand, sigs, *, max_pairs: int, d: int | None):
 
 
 @dataclass(frozen=True)
+class JoinPrefilter:
+    """Fused in-join ungapped X-drop prefilter (see :func:`lsh_self_join`).
+
+    With this attached, the deduplicated candidate buffer is scored by the
+    ungapped diagonal scan ON DEVICE, straight off the device pair buffer,
+    and only survivors (ungapped >= ``min_score``) are compacted and copied
+    to host — rejected pairs never materialize as host pair arrays. The
+    ungapped score is padding-invariant and a lower bound of the SW score,
+    so the surviving pair set is bit-exact with filtering
+    ``score_pairs(..., prefilter=True)`` output post hoc (same
+    ``min_score``/``x``).
+    """
+    ids: np.ndarray         # (N, L) int8 PAD-padded corpus
+    lens: np.ndarray        # (N,) int32
+    min_score: int = 40     # survivors: ungapped score >= this (must be >= 1
+                            # so the -1 padding slots, which gather all-PAD
+                            # rows and score 0, can never survive)
+    x: int | None = None    # X-drop margin (None = inf, plain best segment)
+    batch: int = 256        # pairs per prefilter chunk (one program shape)
+    len_quantum: int = 64   # gathered-length quantization (jit-cache ladder)
+
+
+@functools.partial(jax.jit, static_argnames=("x", "L", "B"))
+@trace_sentinel("join_prefilter")
+def _join_prefilter_chunk(ids_dev, lens_dev, pairs_dev, start, *,
+                          x: int | None, L: int, B: int):
+    """Score one fixed-size chunk of the device pair buffer: fused
+    dynamic-slice + gather + ungapped diagonal scan, no host round-trip.
+    ``start`` is a traced scalar, so every chunk offset reuses ONE
+    compiled program per (x, L, B)."""
+    chunk = jax.lax.dynamic_slice(pairs_dev, (start, 0), (B, 2))
+    qm = gather_rows(ids_dev, lens_dev, chunk[:, 0], L)
+    rm = gather_rows(ids_dev, lens_dev, chunk[:, 1], L)
+    return ungapped_xdrop_scores(qm, rm, x=x)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+@trace_sentinel("join_prefilter_pack")
+def _prefilter_pack(pairs_dev, scores, min_score, *, cap: int):
+    """Compact prefilter survivors (and their ungapped scores) to the
+    front of the fixed buffer; (pairs+score (cap, 3) int32, count)."""
+    keep = (pairs_dev[:, 0] >= 0) & (scores >= min_score)
+    return compact_pairs((pairs_dev[:, 0], pairs_dev[:, 1], scores),
+                         keep, cap)
+
+
+def _prefilter_join(pairs_dev, n_cand: int, pf: JoinPrefilter):
+    """Run the fused prefilter over a deduplicated device pair buffer.
+
+    Returns (kept_pairs (K, 2), kept_ungapped (K,) int32) host arrays —
+    the only D2H copy of pair data, already survivor-compacted."""
+    if pf.min_score < 1:
+        raise ValueError("JoinPrefilter.min_score must be >= 1 (padding "
+                         "slots score 0 and must never survive)")
+    lens_np = np.asarray(pf.lens, np.int32)
+    ids_dev = jnp.asarray(pf.ids)
+    lens_dev = jnp.asarray(lens_np)
+    q = pf.len_quantum
+    L = int(max(q, -(-int(lens_np.max(initial=1)) // q) * q))
+    cap, B = pairs_dev.shape[0], pf.batch
+    # only chunks that can contain real rows are scored; rows past the
+    # count are -1 (all-PAD gathers scoring 0) and can never survive
+    n_eff = min(cap, -(-max(n_cand, 1) // B) * B)
+    pp = (jnp.pad(pairs_dev, ((0, (-cap) % B), (0, 0)), constant_values=-1)
+          if cap % B else pairs_dev)
+    chunks = [_join_prefilter_chunk(ids_dev, lens_dev, pp,
+                                    jnp.asarray(s, jnp.int32),
+                                    x=pf.x, L=L, B=B)
+              for s in range(0, n_eff, B)]
+    scores = jnp.concatenate(chunks)[:cap] if chunks else \
+        jnp.zeros(cap, jnp.int32)
+    if scores.shape[0] < cap:
+        scores = jnp.pad(scores, (0, cap - scores.shape[0]))
+    out, cnt = _prefilter_pack(pairs_dev, scores,
+                               jnp.asarray(pf.min_score, jnp.int32), cap=cap)
+    k = int(cnt)
+    host = np.asarray(out[:k])
+    return np.ascontiguousarray(host[:, :2]), np.ascontiguousarray(host[:, 2])
+
+
+@dataclass(frozen=True)
 class SelfJoinResult:
     """Deduplicated upper-triangular candidate set as a CSR adjacency."""
     pairs: np.ndarray      # (P, 2) int32, i < j, lexicographically sorted
     indptr: np.ndarray     # (N+1,) int64 — CSR row offsets over corpus ids
     indices: np.ndarray    # (P,) int32 — CSR column ids (the j of each pair)
     n_candidates: int      # == P
+    ungapped: np.ndarray | None = None  # (P,) int32 prefilter scores of the
+                                        # SURVIVING pairs (fused prefilter)
+    n_prefiltered: int = 0  # candidates dropped in-join by the prefilter
 
     @property
     def n_rows(self) -> int:
@@ -276,12 +361,14 @@ class SelfJoinResult:
         return self.indices[self.indptr[i]:self.indptr[i + 1]]
 
 
-def _pairs_to_csr(pairs: np.ndarray, n: int) -> SelfJoinResult:
+def _pairs_to_csr(pairs: np.ndarray, n: int, *, ungapped=None,
+                  n_prefiltered: int = 0) -> SelfJoinResult:
     rows = pairs[:, 0]
     indptr = np.searchsorted(rows, np.arange(n + 1)).astype(np.int64)
     return SelfJoinResult(pairs=pairs, indptr=indptr,
                           indices=np.ascontiguousarray(pairs[:, 1]),
-                          n_candidates=len(pairs))
+                          n_candidates=len(pairs), ungapped=ungapped,
+                          n_prefiltered=n_prefiltered)
 
 
 def _grow_overflow(scope: str, max_grow: int):
@@ -292,16 +379,25 @@ def _grow_overflow(scope: str, max_grow: int):
 
 
 def _dedup_and_pack(cand: np.ndarray, index: SignatureIndex,
-                    d: int | None, cap: int, max_grow: int,
-                    scope: str) -> SelfJoinResult:
+                    d: int | None, cap: int, max_grow: int, scope: str,
+                    prefilter: JoinPrefilter | None = None
+                    ) -> SelfJoinResult:
     """Shared tail of both joins: cross-band/-shard dedup + optional exact
-    Hamming filter under the grow-and-retry capacity discipline."""
+    Hamming filter under the grow-and-retry capacity discipline. With a
+    :class:`JoinPrefilter`, the deduplicated device buffer is additionally
+    X-drop-prefiltered before the host copy — only survivors come back."""
     while True:
         pairs, count = _dedup_filter(cand, index.device_sigs,
                                      max_pairs=cap, d=d)
         if int(count) <= cap:
-            p = np.asarray(pairs[:int(count)])
-            return _pairs_to_csr(p, index.size)
+            n_cand = int(count)
+            if prefilter is None:
+                p = np.asarray(pairs[:n_cand])
+                return _pairs_to_csr(p, index.size)
+            with span("join_prefilter", cat="allpairs", candidates=n_cand):
+                kept, ung = _prefilter_join(pairs, n_cand, prefilter)
+            return _pairs_to_csr(kept, index.size, ungapped=ung,
+                                 n_prefiltered=n_cand - len(kept))
         if cap >= max_grow:         # dedup union overran the buffer
             _grow_overflow(scope, max_grow)
         cap = min(cap * 2, max_grow)    # grow-and-retry
@@ -311,7 +407,8 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
                   max_pairs: int = 1 << 16,
                   max_grow: int = 1 << 24,
                   n_shards: int | None = None,
-                  mesh=None, axis_name: str = "data") -> SelfJoinResult:
+                  mesh=None, axis_name: str = "data",
+                  prefilter: JoinPrefilter | None = None) -> SelfJoinResult:
     """All-pairs candidate generation over the indexed corpus.
 
     Emits every within-bucket pair of every band, deduplicates across bands
@@ -329,6 +426,12 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
     OWN demand (:func:`_shard_caps` — skew-bounded); the deduplicated
     cross-band union still grow-and-retries. Either demand beyond
     ``max_grow`` raises — never a silent cap.
+
+    ``prefilter=`` fuses the ungapped X-drop prefilter into the join
+    (:class:`JoinPrefilter`): candidates are scored off the deduplicated
+    DEVICE pair buffer and rejected pairs never reach the host — the
+    returned pairs are exactly the survivors (``result.ungapped`` holds
+    their prefilter scores, ``result.n_prefiltered`` the rejected count).
     """
     n = int(n_shards) if n_shards is not None else index.n_shards
     part = index.partition(n)
@@ -359,7 +462,8 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
               spmd=mesh is not None, need=need):
         cand = _emit_partition(part, caps, mesh, axis_name)
     cap = max(max_pairs, int(caps.max()))
-    return _dedup_and_pack(cand, index, d, cap, max_grow, "self-join")
+    return _dedup_and_pack(cand, index, d, cap, max_grow, "self-join",
+                           prefilter=prefilter)
 
 
 def _segment_stack(seg):
@@ -403,7 +507,9 @@ def _cross_totals(dseg, rseg) -> np.ndarray:
 def lsh_delta_join(index: SignatureIndex, *, base_size: int,
                    d: int | None = None,
                    max_pairs: int = 1 << 16,
-                   max_grow: int = 1 << 24) -> SelfJoinResult:
+                   max_grow: int = 1 << 24,
+                   prefilter: JoinPrefilter | None = None
+                   ) -> SelfJoinResult:
     """Incremental self-join: only the pairs touching rows >= ``base_size``.
 
     ``base_size`` must be a segment boundary (the corpus size before the
@@ -464,7 +570,8 @@ def lsh_delta_join(index: SignatureIndex, *, base_size: int,
     # ragged host merge (buffers differ in cap); dedup lexsorts downstream
     cand = np.concatenate([np.asarray(b).reshape(-1, 2) for b in bufs],
                           axis=0)
-    return _dedup_and_pack(cand, index, d, max_pairs, max_grow, "delta join")
+    return _dedup_and_pack(cand, index, d, max_pairs, max_grow, "delta join",
+                           prefilter=prefilter)
 
 
 def brute_force_collisions(index: SignatureIndex) -> set[tuple[int, int]]:

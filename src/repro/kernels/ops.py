@@ -18,7 +18,7 @@ from . import ref as kref
 from .hamming import hamming_count_kernel, hamming_dist_kernel
 from .siggen import siggen_accumulate_kernel
 from .sw import (on_tpu, resolve_interpret, sw_scores_kernel,
-                 ungapped_scores_kernel)
+                 ungapped_scores_kernel, wave_scores_kernel)
 
 _on_tpu = on_tpu  # back-compat alias
 
@@ -80,6 +80,36 @@ def sw_wave_scores(qs, rs, *, bb: int = 8, prefer_ref: bool = False,
     qp, B = _pad_rows(jnp.asarray(qs), bb, value=PAD)
     rp, _ = _pad_rows(jnp.asarray(rs), bb, value=PAD)
     out = sw_scores_kernel(qp, rp, bb=bb, interpret=resolve_interpret(interpret))
+    return out[:B, 0]
+
+
+def wavefront_scores(qs, rs, *, gap_mode: str = "linear",
+                     gap_open: int | None = None,
+                     gap_extend: int | None = None, bb: int = 8,
+                     prefer_ref: bool = False,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Batched SW best scores for a (B, Lq) x (B, Lr) pair block via the
+    anti-diagonal wavefront kernel (padded + cropped), linear or affine
+    (Gotoh) gaps; score-exact with the row wave under ``"linear"`` and
+    with `kernels.ref.sw_affine_ref` under ``"affine"``. The jnp sweep
+    (`align.gotoh`) is the ``prefer_ref`` fallback (also the fast path
+    off-TPU). ``interpret=None`` autodetects by backend."""
+    if prefer_ref:
+        from ..align import gotoh
+        if gap_mode == "affine":
+            return gotoh.sw_wave_affine(
+                qs, rs,
+                gap_open=gotoh.GAP_OPEN if gap_open is None else gap_open,
+                gap_extend=(gotoh.GAP_EXTEND if gap_extend is None
+                            else gap_extend))
+        from ..align.smith_waterman import GAP
+        return gotoh.sw_wave_linear(
+            qs, rs, gap=GAP if gap_open is None else gap_open)
+    qp, B = _pad_rows(jnp.asarray(qs), bb, value=PAD)
+    rp, _ = _pad_rows(jnp.asarray(rs), bb, value=PAD)
+    out = wave_scores_kernel(qp, rp, gap_mode=gap_mode, gap_open=gap_open,
+                             gap_extend=gap_extend, bb=bb,
+                             interpret=resolve_interpret(interpret))
     return out[:B, 0]
 
 

@@ -24,6 +24,40 @@ def siggen_accumulate_ref(rows, cb, H, T: int) -> jnp.ndarray:
     return wts @ H.astype(jnp.int32)                           # (S, f)
 
 
+def sw_affine_ref(q, r, gap_open: int = -11, gap_extend: int = -1):
+    """Host Gotoh oracle: best local alignment score of one encoded pair
+    (unpadded int8 arrays) under affine gaps, walking every cell of the
+    three-lane DP. Convention: ``gap_open`` is the cost of the FIRST gap
+    residue and ``gap_extend`` of each further one, so
+    ``gap_open == gap_extend`` degenerates exactly to the linear-gap SW
+    recurrence of ``align.smith_waterman`` (cell-exact on H).
+
+    Returns (best_score, H) with H the (Lq+1, Lr+1) int64 DP matrix.
+    """
+    import numpy as np
+
+    from ..core.alphabet import BLOSUM62_PADDED
+
+    q = np.asarray(q, np.int64)
+    r = np.asarray(r, np.int64)
+    sub = BLOSUM62_PADDED[q][:, r].astype(np.int64)
+    Lq, Lr = len(q), len(r)
+    NEGI = -(1 << 40)           # true -inf boundary for the gap lanes
+    H = np.zeros((Lq + 1, Lr + 1), np.int64)
+    E = np.full((Lq + 1, Lr + 1), NEGI, np.int64)
+    F = np.full((Lq + 1, Lr + 1), NEGI, np.int64)
+    best = 0
+    for i in range(1, Lq + 1):
+        for j in range(1, Lr + 1):
+            E[i, j] = max(E[i, j - 1] + gap_extend, H[i, j - 1] + gap_open)
+            F[i, j] = max(F[i - 1, j] + gap_extend, H[i - 1, j] + gap_open)
+            H[i, j] = max(0, H[i - 1, j - 1] + sub[i - 1, j - 1],
+                          E[i, j], F[i, j])
+            if H[i, j] > best:
+                best = int(H[i, j])
+    return best, H
+
+
 def ungapped_xdrop_ref(q, r, x: int) -> int:
     """Host oracle for the ungapped X-drop diagonal scan: one encoded pair
     (unpadded int8 arrays), walking every diagonal cell-by-cell with the

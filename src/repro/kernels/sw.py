@@ -118,6 +118,84 @@ def sw_scores_kernel(qs, rs, *, bb: int = DEFAULT_BB,
     )(qs, qsub, rs)
 
 
+def _wave_sw_kernel(sk_ref, out_ref, *, gap_open: int, gap_extend: int,
+                    affine: bool):
+    """Anti-diagonal (wavefront) SW sweep over a (bb,) pair block. The
+    skewed substitution block sk[c, b, i] = s_b[i, c-i] arrives
+    precomputed and sentinel-padded (`align.gotoh`), so each diagonal
+    step is pure elementwise arithmetic over (bb, Lq) lanes — no prefix
+    scan, no gathers, no masking pass. ``affine`` threads the Gotoh E/F
+    gap lanes; with it off the step is the linear 3-way max."""
+    sk = sk_ref[...].astype(jnp.int32)        # (nd, bb, Lq)
+    nd, bb, Lq = sk.shape
+    z = jnp.zeros((bb, Lq), jnp.int32)
+
+    def shift(x):
+        return jnp.concatenate(
+            [jnp.zeros((bb, 1), jnp.int32), x[:, :-1]], axis=1)
+
+    if affine:
+        def step(c, carry):
+            h1, h2s, e1, f1, best = carry
+            s = jax.lax.dynamic_index_in_dim(sk, c, axis=0, keepdims=False)
+            h1s = shift(h1)
+            e = jnp.maximum(e1 + gap_extend, h1 + gap_open)
+            f = jnp.maximum(shift(f1) + gap_extend, h1s + gap_open)
+            h = jnp.maximum(jnp.maximum(h2s + s, 0), jnp.maximum(e, f))
+            return h, h1s, e, f, jnp.maximum(best, h)
+
+        init = (z, z, z, z, z)
+    else:
+        def step(c, carry):
+            h1, h2s, best = carry
+            s = jax.lax.dynamic_index_in_dim(sk, c, axis=0, keepdims=False)
+            h1s = shift(h1)
+            h = jnp.maximum(jnp.maximum(h2s + s, 0),
+                            jnp.maximum(h1, h1s) + gap_open)
+            return h, h1s, jnp.maximum(best, h)
+
+        init = (z, z, z)
+
+    out = jax.lax.fori_loop(0, nd, step, init)
+    out_ref[...] = jnp.max(out[-1], axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gap_mode", "gap_open", "gap_extend", "bb", "interpret"))
+def wave_scores_kernel(qs, rs, *, gap_mode: str = "linear",
+                       gap_open: int | None = None,
+                       gap_extend: int | None = None,
+                       bb: int = DEFAULT_BB,
+                       interpret: bool | None = None):
+    """(B, Lq) x (B, Lr) int8 pair block -> (B, 1) int32 best local scores
+    via the wavefront kernel. ``gap_mode="linear"`` (default gap = GAP) is
+    bit-exact with `sw_scores_kernel`; ``"affine"`` scores Gotoh gaps
+    (defaults -11/-1), bit-exact with `kernels.ref.sw_affine_ref`.
+
+    B % bb == 0 is handled by padding in ops.wavefront_scores.
+    """
+    from ..align.gotoh import GAP_EXTEND, GAP_OPEN, _skew_flat, _sub_block
+    B, Lq = qs.shape
+    assert B % bb == 0, "pad the pair block to a bb multiple"
+    if gap_mode == "affine":
+        go = GAP_OPEN if gap_open is None else int(gap_open)
+        ge = GAP_EXTEND if gap_extend is None else int(gap_extend)
+    else:
+        go = GAP if gap_open is None else int(gap_open)
+        ge = go
+    sk = jnp.transpose(_skew_flat(_sub_block(qs, rs)), (0, 2, 1))
+    nd = sk.shape[0]                          # (nd, B, Lq) int8
+    return pl.pallas_call(
+        functools.partial(_wave_sw_kernel, gap_open=go, gap_extend=ge,
+                          affine=(gap_mode == "affine")),
+        grid=(B // bb,),
+        in_specs=[pl.BlockSpec((nd, bb, Lq), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=resolve_interpret(interpret),
+    )(sk)
+
+
 def _ungapped_kernel(q_ref, qsub_ref, r_ref, out_ref, *, Lq: int, x: int):
     """Ungapped X-drop diagonal scan over a (bb,) pair block — the prefilter
     twin of `_sw_kernel`. Carries are indexed by reference column, so the

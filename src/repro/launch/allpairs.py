@@ -61,6 +61,25 @@ def main(argv=None):
                     help="ungapped score below which full SW is skipped")
     ap.add_argument("--xdrop", type=int, default=None,
                     help="finite X-drop margin (default: best ungapped run)")
+    ap.add_argument("--fuse-prefilter", action="store_true",
+                    help="run the ungapped prefilter INSIDE the self-join "
+                         "(rejected pairs never reach the host); same "
+                         "thresholds as --prefilter, identical survivors")
+    ap.add_argument("--dp-kernel", default="wavefront",
+                    choices=["wavefront", "rowwave"],
+                    help="DP sweep for score-only waves: anti-diagonal "
+                         "wavefront (default; no within-row prefix scan) "
+                         "or the legacy row wave")
+    ap.add_argument("--gap-mode", default="linear",
+                    choices=["linear", "affine"],
+                    help="gap model: linear (-4/residue) or affine Gotoh "
+                         "(open/extend; needs --dp-kernel wavefront and "
+                         "--pallas/--min-score scoring, PID waves stay "
+                         "linear)")
+    ap.add_argument("--gap-open", type=int, default=None,
+                    help="affine gap-open score (default -11)")
+    ap.add_argument("--gap-extend", type=int, default=None,
+                    help="affine gap-extend score (default -1)")
     ap.add_argument("--host-gather", action="store_true",
                     help="assemble waves with the host copy loop "
                          "(PR 2 behaviour, for comparison)")
@@ -148,7 +167,12 @@ def main(argv=None):
                         n_devices=args.shards,
                         prefilter=args.prefilter,
                         prefilter_min=args.prefilter_min,
-                        xdrop=args.xdrop))
+                        xdrop=args.xdrop,
+                        dp_kernel=args.dp_kernel,
+                        gap_mode=args.gap_mode,
+                        gap_open=args.gap_open,
+                        gap_extend=args.gap_extend),
+        fuse_prefilter=args.fuse_prefilter)
 
     # ---- incremental mode: batch the resident corpus, ingest the rest
     if args.incremental:

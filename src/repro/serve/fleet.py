@@ -147,6 +147,12 @@ class ReplicaFleet:
     Exposes the async-engine backend protocol: ``cfg`` and
     ``query_batch(ids, lens) -> (nid, nd, epoch)`` — plug a fleet
     straight into :class:`~repro.serve.engine.AsyncEngine`.
+
+    One :class:`ServingConfig` governs every replica, including the
+    re-rank DP routing knobs (``dp_kernel``/``gap_mode``/``gap_open``/
+    ``gap_extend``): replicas share the process-wide jit cache, so the
+    gather+DP program of a given (rung, quantum, DP route) compiles once
+    for the whole fleet, and ``warmup()`` through any replica warms all.
     """
 
     def __init__(self, index, cfg: ServingConfig | None = None, *,

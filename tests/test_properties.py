@@ -79,3 +79,33 @@ def test_hamming_count_property(Q, R, nw, d, seed):
     got = ops.hamming_counts(q, r, d, bq=8, br=16)
     want = ref.hamming_count_ref(q, r, d)[:, 0]
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    Lq=st.integers(1, 24), Lr=st.integers(1, 24),
+    gap=st.integers(-12, -1), seed=st.integers(0, 2**16),
+)
+def test_gotoh_open_eq_extend_is_linear_sw_cell_exact(Lq, Lr, gap, seed):
+    """Gotoh with open == extend degenerates to the linear-gap recurrence
+    CELL-exactly: the oracle's full H matrix equals the linear SW DP
+    matrix, not just the best score (the property the wavefront's E/F-lane
+    zero-init correctness proof leans on)."""
+    from repro.align.smith_waterman import _sw_dp
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 20, Lq, dtype=np.int8)
+    r = rng.integers(0, 20, Lr, dtype=np.int8)
+    best_a, H_a = ref.sw_affine_ref(q, r, gap_open=gap, gap_extend=gap)
+    best_l, H_l = _sw_dp(jnp.asarray(q), jnp.asarray(r), return_matrix=True)
+    # patched linear DP with the same gap penalty for the H comparison
+    H = np.zeros((Lq + 1, Lr + 1), np.int64)
+    sub = np.asarray(BLOSUM62)
+    for i in range(1, Lq + 1):
+        for j in range(1, Lr + 1):
+            H[i, j] = max(0, H[i - 1, j - 1] + sub[q[i - 1], r[j - 1]],
+                          H[i - 1, j] + gap, H[i, j - 1] + gap)
+    np.testing.assert_array_equal(H_a, H)
+    assert best_a == H.max()
+    if gap == -4:               # the module default: jnp path agrees too
+        np.testing.assert_array_equal(np.asarray(H_l), H)
+        assert int(best_l) == int(best_a)
