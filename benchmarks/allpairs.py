@@ -14,6 +14,12 @@ Acceptance criteria of the `repro.allpairs` subsystem, measured on a
 * the wavefront DP (anti-diagonal sweep, `repro.align.gotoh`) must
   deliver >= 2x the row wave's pairs/s at the acceptance shape B=64,
   Lq=Lr=192 (the ``--dp-kernel``/``--gap-mode`` sweep, asserted);
+* candidate emission through the fused SpGEMM join (``join_impl="spgemm"``)
+  must beat the legacy orchestration (host merge + grow-and-retry) by
+  >= 2x warmed steady-state at the FIXED 2048-sequence acceptance corpus —
+  the ``--join-impl`` sweep, asserted (like the DP sweep, it runs at the
+  acceptance shape even under ``--smoke``), with both impls' pair arrays
+  bit-identical;
 * the tiled pipeline must beat naive all-pairs per-pair Smith-Waterman by
   >= 10x wall-clock (timed on a sample, extrapolated). The naive baseline
   deliberately pays the per-shape jit retrace on every ragged pair — that
@@ -57,6 +63,11 @@ PR2_WAVE = WaveConfig(wave_batch=64, device_gather=False, prefilter=False,
                       inflight=0, dp_kernel="rowwave")
 DEVICE_WAVE = WaveConfig(wave_batch=64, device_gather=True, prefilter=True,
                          prefilter_min=40, inflight=2)
+
+# the emission sweep's fixed acceptance corpus — the full-size corpus of
+# run(); like the DP sweep's fixed (B, L) shape, it does NOT shrink under
+# --smoke, because the >= 2x emission criterion is defined at this size
+EMISSION_N = 2048
 
 
 def _warm(ids, lens, pairs, cfg: WaveConfig):
@@ -116,10 +127,62 @@ def dp_kernel_sweep(csv=print, *, n: int, B: int = 64, L: int = 192,
     return out
 
 
+def emission_sweep(csv=print, *, n: int, reps: int = 10,
+                   join_impl: str = "all",
+                   max_pairs: int = 1 << 14, seed: int = 42) -> dict:
+    """Candidate-emission microbenchmark at the FIXED acceptance corpus
+    (:data:`EMISSION_N` planted-family sequences — the corpus ``run()``
+    uses at full size): warmed steady-state self-join wall time per
+    ``join_impl``. ``max_pairs`` is deliberately a typical *starting*
+    capacity well below the true pair count, so the legacy orchestration
+    pays its documented grow-and-retry cost — eliminating that retry (and
+    the host merge) is exactly what the fused SpGEMM join is for. The
+    >= 2x criterion is asserted whenever both impls run, after checking
+    their pair arrays are bit-identical."""
+    n_fam = EMISSION_N // 8
+    corpus = make_family_corpus(FamilyCorpusConfig(
+        n_families=n_fam, family_size=4,
+        n_singletons=EMISSION_N - 4 * n_fam,
+        len_mean=150, len_std=25, sub_rate=0.03, seed=seed))
+    cfg = LSHConfig(k=3, T=13, f=32, d=1)
+    index = SignatureIndex.build(cfg, corpus["ids"], corpus["lens"])
+    index._ensure_built()
+    out = {"n_seqs": EMISSION_N, "max_pairs": max_pairs, "reps": reps}
+    impls = [i for i in ("legacy", "spgemm") if join_impl in ("all", i)]
+    pairs_ref = None
+    for impl in impls:
+        for _ in range(2):                              # warm both programs
+            join = lsh_self_join(index, max_pairs=max_pairs, join_impl=impl)
+        if pairs_ref is None:
+            pairs_ref = join.pairs
+        else:
+            np.testing.assert_array_equal(pairs_ref, join.pairs)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            join = lsh_self_join(index, max_pairs=max_pairs, join_impl=impl)
+        dt = (time.perf_counter() - t0) / reps
+        out[impl] = {"join_ms": round(dt * 1e3, 3),
+                     "cands_per_sec": round(join.n_candidates / dt, 1)}
+        csv(f"allpairs,{n},emission_{impl},join_ms,{dt * 1e3:.3f}")
+        csv(f"allpairs,{n},emission_{impl},cands_per_sec,"
+            f"{join.n_candidates / dt:.0f}")
+    out["candidates"] = int(join.n_candidates)
+    if "legacy" in out and "spgemm" in out:
+        speedup = out["legacy"]["join_ms"] / out["spgemm"]["join_ms"]
+        out["speedup_spgemm_vs_legacy"] = round(speedup, 2)
+        out["bitexact_vs_legacy"] = True
+        csv(f"allpairs,{n},emission_spgemm,speedup_vs_legacy,{speedup:.2f}")
+        assert speedup >= 2.0, (
+            f"fused SpGEMM emission must beat the legacy orchestration "
+            f">= 2x at the n={EMISSION_N} acceptance corpus "
+            f"(got {speedup:.2f}x)")
+    return out
+
+
 def run(csv=print, n_seqs: int = 2048, naive_sample: int = 192,
         use_pallas: bool = False, profile: bool = False,
         json_path: str | None = None, dp_kernel: str = "all",
-        gap_mode: str = "all"):
+        gap_mode: str = "all", join_impl: str = "all"):
     csv("bench,n_seqs,method,metric,value")
     n_fam = n_seqs // 8                    # 4-member families, half singletons
     corpus = make_family_corpus(FamilyCorpusConfig(
@@ -230,6 +293,9 @@ def run(csv=print, n_seqs: int = 2048, naive_sample: int = 192,
     # ---- score-phase DP sweep: rowwave vs wavefront, linear vs affine ----
     dp = dp_kernel_sweep(csv, n=n, dp_kernel=dp_kernel, gap_mode=gap_mode)
 
+    # ---- emission-phase sweep: fused SpGEMM join vs legacy orchestration -
+    emission = emission_sweep(csv, n=n, join_impl=join_impl)
+
     # ---- attribution: host-gather vs device-DP split (--profile) ---------
     if profile:
         for name, wc in (("pr2", pr2), ("device", devw)):
@@ -255,6 +321,7 @@ def run(csv=print, n_seqs: int = 2048, naive_sample: int = 192,
                         "e2e_vs_pr2": round(speedup_e2e, 2),
                         "vs_naive_extrapolated": round(speedup_naive, 1)},
             "dp_kernels": dp,
+            "emission": emission,
             "exactness": {"collision_exact": bool(exact),
                           "survivor_bitexact": True,
                           "family_threshold": FAMILY_SCORE_T,
@@ -283,13 +350,17 @@ def main(argv=None):
     ap.add_argument("--gap-mode", default="all",
                     choices=["all", "linear", "affine"],
                     help="restrict the score-phase DP sweep")
+    ap.add_argument("--join-impl", default="all",
+                    choices=["all", "spgemm", "legacy"],
+                    help="restrict the candidate-emission sweep")
     args = ap.parse_args(argv)
     n = args.n_seqs or (256 if args.smoke else 2048)
     sample = 32 if args.smoke else 192
     json_path = args.json or ("BENCH_allpairs.json" if args.smoke else None)
     run(n_seqs=n, naive_sample=sample, use_pallas=args.pallas,
         profile=args.profile, json_path=json_path,
-        dp_kernel=args.dp_kernel, gap_mode=args.gap_mode)
+        dp_kernel=args.dp_kernel, gap_mode=args.gap_mode,
+        join_impl=args.join_impl)
 
 
 if __name__ == "__main__":

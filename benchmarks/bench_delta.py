@@ -51,8 +51,9 @@ def compare_chaos(fresh: dict, base: dict) -> list[str]:
 def compare_allpairs(fresh: dict, base: dict,
                      threshold: float = 0.20) -> list[str]:
     """All-pairs artifacts: score-phase throughput (device + per-DP-kernel
-    pairs/s) down more than the threshold is flagged; so is the wavefront
-    speedup slipping under its 2x acceptance floor."""
+    pairs/s) and emission-phase candidate throughput (per join_impl) down
+    more than the threshold are flagged; so are the wavefront and SpGEMM
+    emission speedups slipping under their 2x acceptance floors."""
     warnings = []
     for sect in ("pr2", "device"):
         fv = (fresh.get(sect) or {}).get("pairs_per_sec", 0.0)
@@ -76,6 +77,19 @@ def compare_allpairs(fresh: dict, base: dict,
         warnings.append(
             f"wavefront speedup vs rowwave at {sp:.2f}x — under the 2x "
             f"acceptance floor")
+    fe, be = fresh.get("emission") or {}, base.get("emission") or {}
+    for impl in ("legacy", "spgemm"):
+        fv = (fe.get(impl) or {}).get("cands_per_sec", 0.0)
+        bv = (be.get(impl) or {}).get("cands_per_sec", 0.0)
+        if bv > 0 and fv < (1 - threshold) * bv:
+            warnings.append(
+                f"emission ({impl}) candidates/s regressed "
+                f"{100 * (1 - fv / bv):.0f}%: {fv:.0f} vs baseline {bv:.0f}")
+    esp = fe.get("speedup_spgemm_vs_legacy")
+    if esp is not None and esp < 2.0:
+        warnings.append(
+            f"SpGEMM emission speedup vs legacy at {esp:.2f}x — under the "
+            f"2x acceptance floor")
     return warnings
 
 

@@ -66,6 +66,10 @@ class AllPairsConfig:
                                   # the threshold) — the surviving pair set
                                   # is bit-exact with the unfused wave
                                   # prefilter, which is then skipped
+    join_impl: str = "spgemm"    # candidate-generation orchestration:
+                                 # "spgemm" (fused device-resident masked
+                                 # A^T A) or "legacy" (pre-SpGEMM host-merge
+                                 # path, kept one PR) — identical pair arrays
 
 
 @dataclass(frozen=True)
@@ -115,7 +119,7 @@ def all_pairs_search(ids, lens, cfg: AllPairsConfig | None = None,
     pf, wave = _join_prefilter(cfg, ids, lens)
     join = lsh_self_join(index, d=cfg.lsh.d if cfg.hamming_filter else None,
                          max_pairs=cfg.max_pairs, n_shards=cfg.n_shards,
-                         prefilter=pf)
+                         prefilter=pf, join_impl=cfg.join_impl)
     scored = score_pairs(ids, lens, join.pairs, wave)
     if cfg.wave.with_pid:
         families = cluster_families(index.size, join.pairs, scored.pid,
@@ -192,7 +196,8 @@ def all_pairs_ingest(ids, lens, base_size: int,
     pf, wave = _join_prefilter(cfg, ids, lens)
     join = lsh_delta_join(index, base_size=base_size,
                           d=cfg.lsh.d if cfg.hamming_filter else None,
-                          max_pairs=cfg.max_pairs, prefilter=pf)
+                          max_pairs=cfg.max_pairs, n_shards=cfg.n_shards,
+                          prefilter=pf, join_impl=cfg.join_impl)
     scored = score_pairs(ids, lens, join.pairs, wave)
     mask = _edge_mask(scored, cfg, join.pairs)
     forest.grow(index.size)

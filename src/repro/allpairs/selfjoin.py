@@ -11,35 +11,54 @@ The pigeonhole guarantee carries over: any pair within Hamming distance d of
 each other shares >= 1 band, so filtering candidates by packed Hamming
 distance (``d=``) yields the exact d-neighborhood graph.
 
+Candidate emission is the masked SpGEMM primitive of
+:mod:`repro.index.spgemm` — each bucket slab is the CSR of a
+sequence×bucket incidence matrix ``A``, the self-join is the strict upper
+triangle of ``AᵀA``, and the delta join is the ``Aᵀ_delta · A_resident``
+cross mask (resident×resident never forms). Two orchestrations share those
+products behind ``join_impl=``:
+
+* ``"spgemm"`` (default) — the fused path: per-band products, cross-band
+  dedup, the optional exact Hamming filter, and survivor compaction run
+  device-resident (one program when per-shard demand is uniform), the
+  output capacity is sized at the exact emission total so the dedup can
+  never overflow (no grow-and-retry), and the fused prefilter consumes
+  the pair buffer in place — the join pays ONE host sync (the count).
+* ``"legacy"`` — the pre-SpGEMM orchestration (emission programs → host
+  merge → separate dedup under grow-and-retry), kept for one PR as the
+  bit-exactness reference; both paths produce IDENTICAL result arrays
+  (the dedup output is the sorted unique pair set either way).
+
 Emission runs over the shard-owned bucket slabs of
 :class:`~repro.index.partition.BucketPartition` (``mix32(key) % n_shards``
 — the MapReduce shuffle): with ``n_shards > 1`` each mesh device emits its
 own buckets' pairs in parallel (``shard_map``; a vmap over the shard axis
 when the process has fewer devices), and the per-shard buffers are merged
-host-side with the cross-shard/cross-band dedup. Buckets are never split
-across shards, so the union of per-shard emissions is EXACTLY the
-single-device pair set — the result arrays are bit-identical for every
-``n_shards``.
+with the cross-shard/cross-band dedup. Buckets are never split across
+shards, so the union of per-shard emissions is EXACTLY the single-device
+pair set — the result arrays are bit-identical for every ``n_shards``.
 
 Capacity is **skew-bounded**: each shard's emission buffer is sized at its
 OWN per-(shard, band) within-bucket pair total (quantized to a power of
 two to bound recompiles), so one degenerate bucket inflates one shard's
 buffer, not every shard's. Uniform demand keeps the single SPMD
 ``shard_map`` program (one dispatch, the PR 4 lesson); skewed demand falls
-back to per-shard emission with a ragged host merge — the downstream
-dedup lexsorts, so the pair arrays are identical either way.
+back to per-shard emission with a ragged merge — the downstream dedup
+lexsorts, so the pair arrays are identical either way.
 
 Incremental growth joins incrementally too: :func:`lsh_delta_join` emits
 only the pairs that touch rows appended after ``base_size`` — each new
 segment's within-bucket pairs plus its cross pairs against every resident
-segment's matching buckets — so ingesting a segment never re-enumerates
-the resident corpus. The union of the old pair set and the delta is
-EXACTLY the from-scratch self-join over the grown corpus (any collision
-either has both rows resident, or its later row lives in a new segment).
+segment's matching buckets — and, like the batch join, runs per shard
+under the bucket partition (matching keys land on the same shard on both
+sides of the cross mask, so the per-shard union is exact). The union of
+the old pair set and the delta is EXACTLY the from-scratch self-join over
+the grown corpus (any collision either has both rows resident, or its
+later row lives in a new segment).
 
 Emission reuses the fixed-capacity buffer discipline of ``core/join.py``
 (rows past the count are -1; ``overflowed`` means rows were truncated), and
-:func:`lsh_self_join` wraps it in the same grow-and-retry loop as the
+the legacy orchestration wraps dedup in the same grow-and-retry loop as the
 serving layer — no silent caps.
 """
 from __future__ import annotations
@@ -54,108 +73,23 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..align.smith_waterman import gather_rows, ungapped_xdrop_scores
-from ..core.hamming import hamming_distance
-from ..core.join import compact_pairs, dedup_pairs
+from ..core.join import PACKED_KEY_MAX_ID, compact_pairs
 from ..index.partition import BucketPartition, pad_slabs_pow2
+from ..index.spgemm import (spgemm_cross_slab, spgemm_join_self,
+                            spgemm_join_self_keys, spgemm_pack,
+                            spgemm_self_slab)
 from ..index.store import SignatureIndex
 from ..obs import span, trace_sentinel
 from ..util import next_pow2, shard_map_compat
 
-
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _emit_bucket_pairs(offsets, ids, *, cap: int):
-    """Within-bucket upper-triangular pairs of one band's CSR buckets.
-
-    offsets (U+1,) int32, ids (E,) int32 (ids grouped by bucket). Element at
-    position p pairs with every later position of its bucket, so it owns
-    c[p] = bucket_end(p) - 1 - p pairs; a cumsum over c maps fixed buffer
-    slots back to (p, partner). Returns pairs (cap, 2) int32, -1 past the
-    band's true pair count. The caller guarantees cap >= that count (sized
-    host-side in int64 — the on-device int32 cumsum would wrap for a
-    degenerate bucket of ~66k members), so nothing here can truncate.
-    """
-    E = ids.shape[0]
-    pos = jnp.arange(E, dtype=jnp.int32)
-    b = jnp.searchsorted(offsets, pos, side="right").astype(jnp.int32) - 1
-    end = offsets[jnp.clip(b + 1, 0, offsets.shape[0] - 1)].astype(jnp.int32)
-    cnt = jnp.maximum(end - 1 - pos, 0)
-    cum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(cnt)])
-    total = cum[-1]
-    slots = jnp.arange(cap, dtype=jnp.int32)
-    p = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32) - 1
-    p = jnp.clip(p, 0, E - 1)
-    partner = p + 1 + (slots - cum[p])
-    valid = slots < total
-    a = ids[p]
-    c2 = ids[jnp.clip(partner, 0, E - 1)]
-    lo = jnp.minimum(a, c2)
-    hi = jnp.maximum(a, c2)
-    return jnp.stack([jnp.where(valid, lo, -1),
-                      jnp.where(valid, hi, -1)], axis=-1)
+JOIN_IMPLS = ("spgemm", "legacy")
 
 
-@functools.partial(jax.jit, static_argnames=("cap",))
-@trace_sentinel("emit_slab")
-def _emit_slab_pairs(offs_s, ids_s, *, cap: int):
-    """Within-bucket pairs of one shard's stacked slab: offsets (nb, U+1),
-    ids (nb, E) -> (nb, cap, 2) int32, -1 past each band's true count.
-    Padded bucket slots (offsets repeating the end) own zero pairs by
-    construction, so slab padding can never emit."""
-    return jax.vmap(
-        lambda o, i: _emit_bucket_pairs(o, i, cap=cap))(offs_s, ids_s)
-
-
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _emit_cross_pairs(dkeys, doffs, dids, rkeys, roffs, rids, *, cap: int):
-    """Cross pairs between one band's *delta* buckets and the matching
-    *resident* buckets (the delta-join primitive).
-
-    Each delta bucket entry pairs with every member of the resident bucket
-    sharing its key, so entry p owns c[p] = |resident bucket| pairs; the
-    same cumsum slot mapping as ``_emit_bucket_pairs`` turns that into a
-    fixed (cap, 2) buffer, -1 past the true count. Stacked-slab padding is
-    inert on both sides: padded delta entry slots sit past ``doffs[-1]``
-    (own zero pairs), padded resident keys repeat the last key with empty
-    offsets (match nothing). The caller sizes cap >= the true demand,
-    computed host-side in int64 — emission can never truncate.
-    """
-    Ud, Ed = dkeys.shape[0], dids.shape[0]
-    Ur, Er = rkeys.shape[0], rids.shape[0]
-    pos = jnp.arange(Ed, dtype=jnp.int32)
-    u = jnp.searchsorted(doffs, pos, side="right").astype(jnp.int32) - 1
-    u = jnp.clip(u, 0, max(Ud - 1, 0))
-    key = dkeys[u]
-    rpos = jnp.searchsorted(rkeys, key).astype(jnp.int32)
-    rpos_c = jnp.clip(rpos, 0, max(Ur - 1, 0))
-    match = (rpos < Ur) & (rkeys[rpos_c] == key)
-    rstart = roffs[rpos_c]
-    rend = jnp.where(match, roffs[jnp.clip(rpos_c + 1, 0, Ur)], rstart)
-    real = pos < doffs[-1]              # past-the-end delta slots own nothing
-    cnt = jnp.where(real & match, rend - rstart, 0)
-    cum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(cnt)])
-    total = cum[-1]
-    slots = jnp.arange(cap, dtype=jnp.int32)
-    p = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32) - 1
-    p = jnp.clip(p, 0, max(Ed - 1, 0))
-    partner = rids[jnp.clip(rstart[p] + (slots - cum[p]), 0,
-                            max(Er - 1, 0))]
-    a = dids[p]
-    valid = slots < total
-    lo = jnp.minimum(a, partner)
-    hi = jnp.maximum(a, partner)
-    return jnp.stack([jnp.where(valid, lo, -1),
-                      jnp.where(valid, hi, -1)], axis=-1)
-
-
-@functools.partial(jax.jit, static_argnames=("cap",))
-@trace_sentinel("emit_cross")
-def _emit_cross_slab(dkeys_s, doffs_s, dids_s, rkeys_s, roffs_s, rids_s,
-                     *, cap: int):
-    """Band-stacked cross emission: (nb, ...) delta + resident slabs ->
-    (nb, cap, 2) int32."""
-    return jax.vmap(lambda a, b, c, d, e, f: _emit_cross_pairs(
-        a, b, c, d, e, f, cap=cap))(dkeys_s, doffs_s, dids_s,
-                                    rkeys_s, roffs_s, rids_s)
+def _check_impl(join_impl: str) -> str:
+    if join_impl not in JOIN_IMPLS:
+        raise ValueError(f"unknown join_impl {join_impl!r} "
+                         f"(expected one of {JOIN_IMPLS})")
+    return join_impl
 
 
 @functools.lru_cache(maxsize=16)
@@ -177,7 +111,7 @@ def _emit_sharded_cached(devices: tuple, axis_name: str, cap: int):
 
     @trace_sentinel("emission_spmd", static_key=(devices, cap))
     def shard_fn(offs, ids):
-        return _emit_slab_pairs(offs[0], ids[0], cap=cap)
+        return spgemm_self_slab(offs[0], ids[0], cap=cap)
 
     return jax.jit(shard_map_compat(
         shard_fn, mesh, in_specs=(P(ax), P(ax)), out_specs=P(ax)))
@@ -187,6 +121,22 @@ def _emit_sharded_fn(mesh, axis_name: str, cap: int):
     """Resolve a mesh to the cached SPMD emission program (identity-stable
     across equal meshes — see :func:`_emit_sharded_cached`)."""
     return _emit_sharded_cached(tuple(mesh.devices.flat), axis_name, cap)
+
+
+@functools.lru_cache(maxsize=64)
+def _emit_cross_sharded_cached(devices: tuple, axis_name: str, cap: int):
+    """shard_map program for the per-shard delta×resident cross mask —
+    cached by device tuple like :func:`_emit_sharded_cached`."""
+    ax = axis_name
+    mesh = Mesh(np.array(devices), (ax,))
+
+    @trace_sentinel("delta_cross_spmd", static_key=(devices, cap))
+    def shard_fn(dk, do, di, rk, ro, ri):
+        return spgemm_cross_slab(dk[0], do[0], di[0], rk[0], ro[0], ri[0],
+                                 cap=cap)
+
+    return jax.jit(shard_map_compat(
+        shard_fn, mesh, in_specs=(P(ax),) * 6, out_specs=P(ax)))
 
 
 def _shard_caps(part: BucketPartition) -> np.ndarray:
@@ -202,17 +152,19 @@ def _shard_caps(part: BucketPartition) -> np.ndarray:
 
 
 def _emit_partition(part: BucketPartition, caps: np.ndarray, mesh,
-                    axis_name: str) -> np.ndarray:
+                    axis_name: str, *, to_host: bool = True):
     """Emit every shard's within-bucket pairs over the partition slabs;
     returns the merged (M, 2) candidate rows (-1 rows allowed — the
-    downstream dedup drops them).
+    downstream dedup drops them) — numpy when ``to_host`` (the legacy
+    orchestration), a device array otherwise (the spgemm pack consumes it
+    without a host round-trip).
 
     Uniform demand (all nonzero shard caps equal): ONE program — the
     ``shard_map`` SPMD emission on a mesh of ``part.n_shards`` devices, or
     a vmap over the shard axis on one device. Skewed demand: per-shard
     emission at each shard's own cap (placed on its owning mesh device
-    when a mesh is given) with a ragged host merge, so buffer memory
-    follows per-shard demand instead of the global max.
+    when a mesh is given) with a ragged merge, so buffer memory follows
+    per-shard demand instead of the global max.
     """
     live = caps[caps > 0]
     uniform = live.size == 0 or int(live.min()) == int(live.max())
@@ -227,11 +179,13 @@ def _emit_partition(part: BucketPartition, caps: np.ndarray, mesh,
             offs_s = jax.device_put(offs_np, sharding)
             ids_s = jax.device_put(ids_np, sharding)
             out = _emit_sharded_fn(mesh, axis_name, cap)(offs_s, ids_s)
-            return np.asarray(out).reshape(-1, 2)
-        _, offs_s, ids_s = part.device_slabs()
-        out = jax.vmap(
-            lambda o, i: _emit_slab_pairs(o, i, cap=cap))(offs_s, ids_s)
-        return np.asarray(out).reshape(-1, 2)
+        else:
+            _, offs_s, ids_s = part.device_slabs()
+            out = spgemm_self_slab(offs_s.reshape(-1, offs_s.shape[-1]),
+                                   ids_s.reshape(-1, ids_s.shape[-1]),
+                                   cap=cap)
+        return np.asarray(out).reshape(-1, 2) if to_host \
+            else out.reshape(-1, 2)
     _, offs_np, ids_np = part.host_slabs()
     devices = list(mesh.devices.flat) if mesh is not None else None
     bufs = []
@@ -242,23 +196,17 @@ def _emit_partition(part: BucketPartition, caps: np.ndarray, mesh,
         if devices is not None:         # emit on the shard's own device
             offs = jax.device_put(offs, devices[s])
             ids = jax.device_put(ids, devices[s])
-        bufs.append(_emit_slab_pairs(offs, ids, cap=int(caps[s])))
-    # ragged host merge: per-shard buffers differ in cap, so the merge is
-    # a host concat (the cross-shard dedup downstream lexsorts anyway)
-    return np.concatenate([np.asarray(b).reshape(-1, 2) for b in bufs],
-                          axis=0)
-
-
-@functools.partial(jax.jit, static_argnames=("max_pairs", "d"))
-def _dedup_filter(cand, sigs, *, max_pairs: int, d: int | None):
-    """Cross-band dedup (core.join machinery) + optional exact Hamming
-    filter, compacted to ``max_pairs`` rows. Returns (pairs, count)."""
-    cs, keep = dedup_pairs(cand)
-    if d is not None:
-        dist = hamming_distance(sigs[jnp.maximum(cs[:, 0], 0)],
-                                sigs[jnp.maximum(cs[:, 1], 0)])
-        keep = keep & (dist <= d)
-    return compact_pairs((cs[:, 0], cs[:, 1]), keep, max_pairs)
+        bufs.append(spgemm_self_slab(offs, ids, cap=int(caps[s])))
+    # ragged merge: per-shard buffers differ in cap, so the merge is a
+    # concat (the cross-shard dedup downstream lexsorts anyway)
+    if to_host:
+        return np.concatenate(
+            [np.asarray(b).reshape(-1, 2) for b in bufs], axis=0)
+    if devices is not None:
+        # the pack runs as ONE program: gather the per-shard buffers onto
+        # the lead device (device-to-device, still no host round-trip)
+        bufs = [jax.device_put(b, devices[0]) for b in bufs]
+    return jnp.concatenate([b.reshape(-1, 2) for b in bufs], axis=0)
 
 
 @dataclass(frozen=True)
@@ -378,72 +326,61 @@ def _grow_overflow(scope: str, max_grow: int):
         f"max_grow or increase bands/d selectivity")
 
 
-def _dedup_and_pack(cand: np.ndarray, index: SignatureIndex,
+def _finish_pairs(pairs_dev, n_cand: int, index: SignatureIndex,
+                  prefilter: JoinPrefilter | None) -> SelfJoinResult:
+    """Shared join tail off a deduplicated DEVICE pair buffer: either the
+    fused prefilter (survivors are the only D2H copy) or the plain host
+    copy of the first ``n_cand`` rows."""
+    if prefilter is None:
+        return _pairs_to_csr(np.asarray(pairs_dev[:n_cand]), index.size)
+    with span("join_prefilter", cat="allpairs", candidates=n_cand):
+        kept, ung = _prefilter_join(pairs_dev, n_cand, prefilter)
+    return _pairs_to_csr(kept, index.size, ungapped=ung,
+                         n_prefiltered=n_cand - len(kept))
+
+
+def _dedup_and_pack(cand, index: SignatureIndex,
                     d: int | None, cap: int, max_grow: int, scope: str,
                     prefilter: JoinPrefilter | None = None
                     ) -> SelfJoinResult:
-    """Shared tail of both joins: cross-band/-shard dedup + optional exact
-    Hamming filter under the grow-and-retry capacity discipline. With a
-    :class:`JoinPrefilter`, the deduplicated device buffer is additionally
-    X-drop-prefiltered before the host copy — only survivors come back."""
+    """Legacy-orchestration tail: cross-band/-shard dedup + optional exact
+    Hamming filter under the grow-and-retry capacity discipline (the
+    spgemm path sizes the output at the exact emission total instead and
+    never retries)."""
     while True:
-        pairs, count = _dedup_filter(cand, index.device_sigs,
-                                     max_pairs=cap, d=d)
+        pairs, count = spgemm_pack(cand, index.device_sigs,
+                                   out_cap=cap, d=d)
         if int(count) <= cap:
-            n_cand = int(count)
-            if prefilter is None:
-                p = np.asarray(pairs[:n_cand])
-                return _pairs_to_csr(p, index.size)
-            with span("join_prefilter", cat="allpairs", candidates=n_cand):
-                kept, ung = _prefilter_join(pairs, n_cand, prefilter)
-            return _pairs_to_csr(kept, index.size, ungapped=ung,
-                                 n_prefiltered=n_cand - len(kept))
+            return _finish_pairs(pairs, int(count), index, prefilter)
         if cap >= max_grow:         # dedup union overran the buffer
             _grow_overflow(scope, max_grow)
         cap = min(cap * 2, max_grow)    # grow-and-retry
 
 
-def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
-                  max_pairs: int = 1 << 16,
-                  max_grow: int = 1 << 24,
-                  n_shards: int | None = None,
-                  mesh=None, axis_name: str = "data",
-                  prefilter: JoinPrefilter | None = None) -> SelfJoinResult:
-    """All-pairs candidate generation over the indexed corpus.
+def _pack_exact(cand_dev, index: SignatureIndex, d: int | None,
+                total: int, max_grow: int, scope: str,
+                prefilter: JoinPrefilter | None,
+                limit: int | None = None) -> SelfJoinResult:
+    """SpGEMM-orchestration tail: the pack output is sized at the exact
+    emission total (survivors <= emitted always), so it can never
+    overflow — no grow-and-retry, one host sync (the count).
 
-    Emits every within-bucket pair of every band, deduplicates across bands
-    (and shards), and (optionally, ``d=``) exact-filters by packed Hamming
-    distance. ``n_shards`` (default: the index's own ``n_shards``) routes
-    emission through the bucket partition: with a mesh — ``mesh=`` or, when
-    the process has that many devices, the first ``n_shards`` of
-    ``jax.devices()`` — each shard emits its buckets' pairs on its own
-    device in parallel; the pair set (and the result arrays) are
-    bit-identical for every ``n_shards``.
+    ``limit`` is the legacy-equivalent capacity ceiling
+    (``max(starting cap, max_grow)``): legacy only raises when the dedup
+    union must GROW past ``max_grow``, so a count the starting buffer
+    already covers must succeed here too — never raise where legacy
+    would not."""
+    limit = max_grow if limit is None else limit
+    out_cap = next_pow2(max(1, min(total, limit)))
+    pairs, count = spgemm_pack(cand_dev, index.device_sigs,
+                               out_cap=out_cap, d=d)
+    n_cand = int(count)
+    if n_cand > limit:
+        _grow_overflow(scope, max_grow)
+    return _finish_pairs(pairs, n_cand, index, prefilter)
 
-    Capacity discipline: per-shard emission capacity is sized from host-side
-    int64 bucket totals (the device-side int32 count would wrap for a
-    degenerate ~66k-member bucket and truncate silently), each shard at its
-    OWN demand (:func:`_shard_caps` — skew-bounded); the deduplicated
-    cross-band union still grow-and-retries. Either demand beyond
-    ``max_grow`` raises — never a silent cap.
 
-    ``prefilter=`` fuses the ungapped X-drop prefilter into the join
-    (:class:`JoinPrefilter`): candidates are scored off the deduplicated
-    DEVICE pair buffer and rejected pairs never reach the host — the
-    returned pairs are exactly the survivors (``result.ungapped`` holds
-    their prefilter scores, ``result.n_prefiltered`` the rejected count).
-    """
-    n = int(n_shards) if n_shards is not None else index.n_shards
-    part = index.partition(n)
-    # the overflow check judges TRUE demand (the quantized caps below only
-    # size buffers — quantization must never turn a legal corpus into an
-    # error for non-pow2 max_grow values)
-    need = int(part.pair_totals.max()) if part.pair_totals.size else 0
-    if need > max_grow:
-        _grow_overflow("self-join", max_grow)
-    if need == 0:       # every bucket is a singleton: no collisions at all
-        return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
-    caps = _shard_caps(part)
+def _resolve_mesh(n: int, mesh, axis_name: str):
     if n > 1 and mesh is None and jax.device_count() >= n:
         mesh = _default_mesh(n, axis_name)
     if mesh is not None and (axis_name not in mesh.axis_names
@@ -455,73 +392,188 @@ def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
             f"axis {axis_name!r} (one per partition shard)")
     if n == 1:
         mesh = None     # a 1-ring shard_map would only add dispatch cost
+    return mesh
+
+
+def lsh_self_join(index: SignatureIndex, *, d: int | None = None,
+                  max_pairs: int = 1 << 16,
+                  max_grow: int = 1 << 24,
+                  n_shards: int | None = None,
+                  mesh=None, axis_name: str = "data",
+                  prefilter: JoinPrefilter | None = None,
+                  join_impl: str = "spgemm") -> SelfJoinResult:
+    """All-pairs candidate generation over the indexed corpus.
+
+    Emits every within-bucket pair of every band, deduplicates across bands
+    (and shards), and (optionally, ``d=``) exact-filters by packed Hamming
+    distance. ``n_shards`` (default: the index's own ``n_shards``) routes
+    emission through the bucket partition: with a mesh — ``mesh=`` or, when
+    the process has that many devices, the first ``n_shards`` of
+    ``jax.devices()`` — each shard emits its buckets' pairs on its own
+    device in parallel; the pair set (and the result arrays) are
+    bit-identical for every ``n_shards``.
+
+    ``join_impl="spgemm"`` (default) fuses emission + dedup + filter +
+    compaction device-resident and sizes the output at the exact emission
+    total (no grow-and-retry, one host sync); ``"legacy"`` is the
+    pre-SpGEMM orchestration (host merge + grow-and-retry), kept one PR as
+    the bit-exactness reference — both produce identical arrays.
+
+    Capacity discipline: per-shard emission capacity is sized from host-side
+    int64 bucket totals (the device-side int32 count would wrap for a
+    degenerate ~66k-member bucket and truncate silently), each shard at its
+    OWN demand (:func:`_shard_caps` — skew-bounded); demand beyond
+    ``max_grow`` raises — never a silent cap.
+
+    ``prefilter=`` fuses the ungapped X-drop prefilter into the join
+    (:class:`JoinPrefilter`): candidates are scored off the deduplicated
+    DEVICE pair buffer and rejected pairs never reach the host — the
+    returned pairs are exactly the survivors (``result.ungapped`` holds
+    their prefilter scores, ``result.n_prefiltered`` the rejected count).
+    """
+    _check_impl(join_impl)
+    n = int(n_shards) if n_shards is not None else index.n_shards
+    part = index.partition(n)
+    # the overflow check judges TRUE demand (the quantized caps below only
+    # size buffers — quantization must never turn a legal corpus into an
+    # error for non-pow2 max_grow values)
+    need = int(part.pair_totals.max()) if part.pair_totals.size else 0
+    if need > max_grow:
+        _grow_overflow("self-join", max_grow)
+    if need == 0:       # every bucket is a singleton: no collisions at all
+        return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
+    caps = _shard_caps(part)
+    mesh = _resolve_mesh(n, mesh, axis_name)
     # Emission runs ONCE at per-shard exact-or-2x capacity (it can never
-    # truncate); only the deduplicated cross-shard union below grows, so a
-    # retry re-runs just the dedup/compact step, never the emission.
-    with span("emission", cat="allpairs", shards=n,
+    # truncate); only the deduplicated cross-shard union can grow (legacy)
+    # — the spgemm pack is sized at the exact emission total instead.
+    with span("emission", cat="allpairs", shards=n, impl=join_impl,
               spmd=mesh is not None, need=need):
-        cand = _emit_partition(part, caps, mesh, axis_name)
-    cap = max(max_pairs, int(caps.max()))
-    return _dedup_and_pack(cand, index, d, cap, max_grow, "self-join",
-                           prefilter=prefilter)
+        if join_impl == "legacy":
+            cand = _emit_partition(part, caps, mesh, axis_name)
+            cap = max(max_pairs, int(caps.max()))
+            return _dedup_and_pack(cand, index, d, cap, max_grow,
+                                   "self-join", prefilter=prefilter)
+        total = int(part.pair_totals.sum())
+        # legacy-equivalent ceiling: legacy starts at max(max_pairs, caps)
+        # and only raises when the union must GROW past max_grow
+        limit = max(max_pairs, int(caps.max()), max_grow)
+        live = caps[caps > 0]
+        uniform = live.size == 0 or int(live.min()) == int(live.max())
+        if mesh is None and uniform:
+            # the fully fused program: products + dedup + filter + compact
+            _, offs_s, ids_s = part.device_slabs()
+            offs_f = offs_s.reshape(-1, offs_s.shape[-1])
+            ids_f = ids_s.reshape(-1, ids_s.shape[-1])
+            out_cap = next_pow2(max(1, min(total, limit)))
+            if index.layout == "band" and index.size <= PACKED_KEY_MAX_ID:
+                # band layout: duplicates only arise ACROSS bands and the
+                # band-key matrix detects them at emission, so the pack is
+                # one sort of packed keys — no dedup pass at all
+                band_f = jnp.tile(
+                    jnp.arange(offs_s.shape[1], dtype=jnp.int32),
+                    offs_s.shape[0])
+                pairs, count = spgemm_join_self_keys(
+                    offs_f, ids_f, band_f, index.device_band_keys,
+                    index.device_sigs, cap=int(caps.max()),
+                    out_cap=out_cap, d=d)
+            else:
+                pairs, count = spgemm_join_self(
+                    offs_f, ids_f, index.device_sigs,
+                    cap=int(caps.max()), out_cap=out_cap, d=d)
+            n_cand = int(count)
+            if n_cand > limit:
+                _grow_overflow("self-join", max_grow)
+            return _finish_pairs(pairs, n_cand, index, prefilter)
+        # SPMD or skewed demand: per-shard products, device-side merge,
+        # fused pack — still no host round-trip of candidate rows
+        cand = _emit_partition(part, caps, mesh, axis_name, to_host=False)
+        return _pack_exact(cand, index, d, total, max_grow, "self-join",
+                           prefilter, limit=limit)
 
 
-def _segment_stack(seg):
-    """One sealed segment's delta-join arrays, CACHED ON THE SEGMENT
-    (sealed = immutable, so they are built once per segment lifetime, not
-    once per ingest — resident segments stay cheap across ``--incremental``
-    rounds): the 1-way :class:`BucketPartition` (band-stacked slabs + exact
-    per-band pair totals, the single stacking code path) and its
-    pow2-quantized host slabs (:func:`~repro.index.partition.pad_slabs_pow2`
-    — shapes repeat across ingests, keeping the jitted emission programs
-    cache-hot)."""
-    cached = getattr(seg, "_join_stack", None)
+def _segment_stack(seg, n_shards: int = 1):
+    """One sealed segment's delta-join arrays for one shard count, CACHED
+    ON THE SEGMENT (sealed = immutable, so they are built once per segment
+    lifetime, not once per ingest — resident segments stay cheap across
+    ``--incremental`` rounds): the :class:`BucketPartition` (band-stacked
+    per-shard slabs + exact per-(shard, band) pair totals, the single
+    stacking code path) and its pow2-quantized host slabs
+    (:func:`~repro.index.partition.pad_slabs_pow2` — shapes repeat across
+    ingests, keeping the jitted emission programs cache-hot)."""
+    cache = getattr(seg, "_join_stacks", None)
+    if cache is None:
+        cache = {}
+        seg._join_stacks = cache
+    cached = cache.get(n_shards)
     if cached is None:
-        part = BucketPartition(seg.csr, 1)
+        part = BucketPartition(seg.csr, n_shards)
         keys_s, offs_s, ids_s = (np.asarray(a) for a in part.host_slabs())
-        slabs = pad_slabs_pow2(keys_s[0], offs_s[0], ids_s[0])
+        slabs = pad_slabs_pow2(keys_s, offs_s, ids_s)   # (S, nb, ...) stacks
         cached = (part, slabs)
-        seg._join_stack = cached
+        cache[n_shards] = cached
     return cached
 
 
-def _cross_totals(dseg, rseg) -> np.ndarray:
-    """Exact int64 cross-pair totals per band between a delta segment's
-    buckets and a resident segment's matching buckets (host-side — the
-    capacity sizing must never wrap)."""
-    out = np.zeros(len(dseg.csr), np.int64)
-    for b, ((dk, do, _), (rk, ro, _)) in enumerate(zip(dseg.csr, rseg.csr)):
-        if len(dk) == 0 or len(rk) == 0:
-            continue
-        dn = np.diff(do).astype(np.int64)
-        pos = np.searchsorted(rk, dk)
-        pos_c = np.clip(pos, 0, len(rk) - 1)
-        match = (pos < len(rk)) & (rk[pos_c] == dk)
-        rn = np.where(match,
-                      (np.asarray(ro)[pos_c + 1] - np.asarray(ro)[pos_c]
-                       ).astype(np.int64), 0)
-        out[b] = int((dn * rn).sum())
+def _cross_totals(dpart: BucketPartition, rpart: BucketPartition
+                  ) -> np.ndarray:
+    """Exact int64 cross-pair totals per (shard, band) between a delta
+    partition's buckets and a resident partition's matching buckets
+    (host-side — the capacity sizing must never wrap). Bucket ownership is
+    keyed on the bucket key, so matching buckets always land on the SAME
+    shard of both partitions — the per-shard cross products cover exactly
+    the unsharded cross product."""
+    out = np.zeros((dpart.n_shards, dpart.n_bands), np.int64)
+    for s in range(dpart.n_shards):
+        for b in range(dpart.n_bands):
+            dk, do, _ = dpart.shards[s][b]
+            rk, ro, _ = rpart.shards[s][b]
+            if len(dk) == 0 or len(rk) == 0:
+                continue
+            dn = np.diff(do).astype(np.int64)
+            pos = np.searchsorted(rk, dk)
+            pos_c = np.clip(pos, 0, len(rk) - 1)
+            match = (pos < len(rk)) & (rk[pos_c] == dk)
+            rn = np.where(match,
+                          (np.asarray(ro)[pos_c + 1] - np.asarray(ro)[pos_c]
+                           ).astype(np.int64), 0)
+            out[s, b] = int((dn * rn).sum())
     return out
+
+
+def _flat(a):
+    """(S, nb, X) slab -> (S*nb, X) for the band-stacked product programs."""
+    return a.reshape(-1, a.shape[-1])
 
 
 def lsh_delta_join(index: SignatureIndex, *, base_size: int,
                    d: int | None = None,
                    max_pairs: int = 1 << 16,
                    max_grow: int = 1 << 24,
-                   prefilter: JoinPrefilter | None = None
-                   ) -> SelfJoinResult:
+                   n_shards: int | None = None,
+                   mesh=None, axis_name: str = "data",
+                   prefilter: JoinPrefilter | None = None,
+                   join_impl: str = "spgemm") -> SelfJoinResult:
     """Incremental self-join: only the pairs touching rows >= ``base_size``.
 
     ``base_size`` must be a segment boundary (the corpus size before the
     ``add()`` calls being ingested). For each new segment the join emits
-    its within-bucket pairs plus its cross pairs against the matching
-    buckets of every earlier segment — resident-vs-resident pairs are
-    never re-enumerated, so ingest cost scales with the delta's bucket
-    footprint, not the corpus. The result unions with the pre-ingest pair
-    set to EXACTLY the from-scratch :func:`lsh_self_join` over the grown
-    corpus (same dedup, same optional Hamming filter, same sort order);
-    tests/test_lifecycle.py asserts the equality.
+    its within-bucket pairs (upper mask over the delta slab) plus its
+    cross pairs against the matching buckets of every earlier segment
+    (the ``Aᵀ_delta · A_resident`` cross mask) — resident-vs-resident
+    pairs are never re-enumerated, so ingest cost scales with the delta's
+    bucket footprint, not the corpus. With ``n_shards > 1`` (default: the
+    index's own) both masks run per shard under the segment bucket
+    partitions — matching keys own the same shard on both sides, so the
+    per-shard union is exactly the unsharded pair set; with a mesh each
+    shard emits on its own device (``shard_map``). The result unions with
+    the pre-ingest pair set to EXACTLY the from-scratch
+    :func:`lsh_self_join` over the grown corpus (same dedup, same optional
+    Hamming filter, same sort order); tests/test_lifecycle.py asserts the
+    equality. ``join_impl="legacy"`` keeps the pre-SpGEMM single-device
+    orchestration for one PR (identical arrays).
     """
+    _check_impl(join_impl)
     index.seal()
     segs = index.segments
     boundaries = [s.base for s in segs] + [index.size]
@@ -532,46 +584,73 @@ def lsh_delta_join(index: SignatureIndex, *, base_size: int,
     if base_size == index.size:     # nothing new
         return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
     k = boundaries.index(base_size)
+    n = 1 if join_impl == "legacy" else (
+        int(n_shards) if n_shards is not None else index.n_shards)
+    mesh = _resolve_mesh(n, mesh, axis_name)
 
     def part(i) -> BucketPartition:
-        return _segment_stack(segs[i])[0]
+        return _segment_stack(segs[i], n)[0]
 
     def slabs(i):
         # pow2-quantized shapes + pow2 caps keep the jitted emission
         # programs cache-hot across successive ingests (exact shapes/caps
         # would retrace per segment — the recompile trap this PR fixes
         # everywhere else)
-        return _segment_stack(segs[i])[1]
+        return _segment_stack(segs[i], n)[1]
+
+    def emit_within(i, cap: int):
+        keys_s, offs_s, ids_s = slabs(i)
+        if mesh is not None:
+            sharding = NamedSharding(mesh, P(axis_name))
+            return _emit_sharded_fn(mesh, axis_name, cap)(
+                jax.device_put(offs_s, sharding),
+                jax.device_put(ids_s, sharding))
+        return spgemm_self_slab(_flat(offs_s), _flat(ids_s), cap=cap)
+
+    def emit_cross(s, r, cap: int):
+        dk, do, di = slabs(s)
+        rk, ro, ri = slabs(r)
+        if mesh is not None:
+            sh = NamedSharding(mesh, P(axis_name))
+            args = [jax.device_put(a, sh) for a in (dk, do, di, rk, ro, ri)]
+            return _emit_cross_sharded_cached(
+                tuple(mesh.devices.flat), axis_name, cap)(*args)
+        return spgemm_cross_slab(_flat(dk), _flat(do), _flat(di),
+                                 _flat(rk), _flat(ro), _flat(ri), cap=cap)
 
     bufs = []
-    with span("delta_emission", cat="allpairs",
+    total = 0
+    with span("delta_emission", cat="allpairs", shards=n, impl=join_impl,
               new_segments=len(segs) - k, resident_segments=k):
         for s in range(k, len(segs)):
-            need_w = int(part(s).pair_totals[0].max(initial=0))
+            within = part(s).pair_totals
+            need_w = int(within.max(initial=0))
             if need_w > max_grow:
                 _grow_overflow("delta join", max_grow)
             if need_w > 0:
-                _, doffs, dids = slabs(s)
-                bufs.append(_emit_slab_pairs(doffs, dids,
-                                             cap=next_pow2(need_w)))
+                total += int(within.sum())
+                bufs.append(emit_within(s, next_pow2(need_w)))
             for r in range(s):      # every earlier segment is resident
-                totals = _cross_totals(segs[s], segs[r])
+                totals = _cross_totals(part(s), part(r))
                 need_c = int(totals.max(initial=0))
                 if need_c > max_grow:
                     _grow_overflow("delta join", max_grow)
                 if need_c == 0:
                     continue
-                dk, do, di = slabs(s)
-                rk, ro, ri = slabs(r)
-                bufs.append(_emit_cross_slab(dk, do, di, rk, ro, ri,
-                                             cap=next_pow2(need_c)))
-    if not bufs:
-        return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
-    # ragged host merge (buffers differ in cap); dedup lexsorts downstream
-    cand = np.concatenate([np.asarray(b).reshape(-1, 2) for b in bufs],
-                          axis=0)
-    return _dedup_and_pack(cand, index, d, max_pairs, max_grow, "delta join",
-                           prefilter=prefilter)
+                total += int(totals.sum())
+                bufs.append(emit_cross(s, r, next_pow2(need_c)))
+        if not bufs:
+            return _pairs_to_csr(np.zeros((0, 2), np.int32), index.size)
+        if join_impl == "legacy":
+            # ragged host merge (buffers differ in cap); dedup lexsorts
+            cand = np.concatenate(
+                [np.asarray(b).reshape(-1, 2) for b in bufs], axis=0)
+            return _dedup_and_pack(cand, index, d, max_pairs, max_grow,
+                                   "delta join", prefilter=prefilter)
+        # spgemm: device-side ragged merge + exact-sized fused pack
+        cand = jnp.concatenate([b.reshape(-1, 2) for b in bufs], axis=0)
+    return _pack_exact(cand, index, d, total, max_grow, "delta join",
+                       prefilter, limit=max(max_pairs, max_grow))
 
 
 def brute_force_collisions(index: SignatureIndex) -> set[tuple[int, int]]:

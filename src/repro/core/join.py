@@ -129,7 +129,15 @@ def mix32(keys) -> jnp.ndarray:
 
 def band_keys(sigs, f: int, bands: int, *, interleave: bool = False,
               key_hash: str = "none") -> jnp.ndarray:
-    """Per-band integer keys: (N, bands) uint32 (band width <= 32 bits).
+    """Per-band integer keys: (N, bands) uint32.
+
+    Bands up to 32 bits wide pack exactly into the uint32 key. Wider bands
+    (f=64/128 signatures at low band counts) FOLD: the band's 32-bit words
+    are chained through the :func:`mix32` bijection
+    (``acc = mix32(acc) ^ word``) — equal band bits always produce equal
+    keys, so bucket co-membership and the pigeonhole guarantee are intact;
+    a ~2^-32 accidental key collision between unequal bands can only ADD a
+    candidate, which the exact Hamming filter downstream removes.
 
     ``key_hash="splitmix"`` mixes each band key through :func:`mix32`
     before bucketing (exactness-preserving — the mix is bijective).
@@ -139,8 +147,14 @@ def band_keys(sigs, f: int, bands: int, *, interleave: bool = False,
     for grp in band_bit_groups(f, bands, interleave=interleave):
         seg = bits[:, grp].astype(jnp.uint32)
         w = seg.shape[-1]
-        assert w <= 32, "band width must fit a uint32 key"
-        keys.append(jnp.sum(seg << jnp.arange(w, dtype=jnp.uint32), axis=-1))
+        acc = None
+        for s0 in range(0, w, 32):
+            wordbits = seg[:, s0:s0 + 32]
+            ww = wordbits.shape[-1]
+            word = jnp.sum(wordbits << jnp.arange(ww, dtype=jnp.uint32),
+                           axis=-1)
+            acc = word if acc is None else mix32(acc) ^ word
+        keys.append(acc)
     out = jnp.stack(keys, axis=-1)
     if key_hash == "splitmix":
         return mix32(out)
@@ -149,19 +163,83 @@ def band_keys(sigs, f: int, bands: int, *, interleave: bool = False,
     return out
 
 
+# largest id for which the packed int32 sort key c0*(B+1)+c1 stays exact:
+# (B-1)*(B+1) + (B-1) = B^2 + B - 2 must fit int32
+PACKED_KEY_MAX_ID = 46340
+
+
 def dedup_pairs(cand):
-    """Lexsort a (M, 2) candidate buffer and mark first occurrences.
+    """Sort a (M, 2) candidate buffer lexicographically and mark first
+    occurrences.
 
     Returns (cand_sorted, keep): ``keep`` is True on the first copy of each
-    valid (qid >= 0) pair. (lexsort avoids the q*R+r code, which overflows
-    int32 for big sets.) Shared by the query join (band_join) and the
-    corpus self-join (repro.allpairs.selfjoin).
+    valid (qid >= 0) pair. One multi-key ``lax.sort`` pass; shared by the
+    query join (band_join) and — as the wide-id fallback of
+    :func:`pack_unique_pairs` — the corpus self-join.
     """
-    order = jnp.lexsort((cand[:, 1], cand[:, 0]))
-    cs = cand[order]
+    c0, c1 = jax.lax.sort((cand[:, 0], cand[:, 1]), num_keys=2)
+    cs = jnp.stack([c0, c1], axis=-1)
     same = (cs[1:, 0] == cs[:-1, 0]) & (cs[1:, 1] == cs[:-1, 1])
     keep = jnp.concatenate([jnp.ones(1, bool), ~same]) & (cs[:, 0] >= 0)
     return cs, keep
+
+
+def pack_unique_pairs(cand, *, out_cap: int, id_bound: int, sigs=None,
+                      d: int | None = None):
+    """Dedup + optional exact Hamming filter + front-compaction of a (M, 2)
+    candidate buffer — the shared pack tail of every join.
+
+    Returns (pairs (out_cap, 2) int32 with -1 past the survivors, count —
+    the TRUE survivor count, which exceeds ``out_cap`` when the buffer
+    truncated; truncation keeps the canonically-first survivors).
+
+    With ``id_bound <= PACKED_KEY_MAX_ID`` (every id < bound — e.g. the
+    corpus size, static at trace) the whole tail runs as two SINGLE-key
+    sorts of the packed int32 key ``c0*(bound+1) + c1`` (exact and
+    order-preserving; -1 invalid rows go negative and sort first): sort
+    once to make duplicates adjacent, mark survivors, remap dropped keys to
+    int32-max and sort again — the second sort IS the compaction, and both
+    ids reconstruct from the key by one divide. On the pack's critical
+    path this beats the generic multi-key sort + scatter several-fold:
+    payload columns triple a CPU/TPU sort's data movement, and the cumsum
+    scatter a compaction otherwise needs is the single most expensive op
+    in the tail. Ids at or past ``id_bound`` would alias keys, so wide
+    corpora fall back to :func:`dedup_pairs` + :func:`compact_pairs` —
+    bit-identical output, same buffer contract.
+    """
+    if id_bound > PACKED_KEY_MAX_ID:
+        cs, keep = dedup_pairs(cand)
+        if d is not None:
+            dist = hamming_distance(sigs[jnp.maximum(cs[:, 0], 0)],
+                                    sigs[jnp.maximum(cs[:, 1], 0)])
+            keep = keep & (dist <= d)
+        return compact_pairs((cs[:, 0], cs[:, 1]), keep, out_cap)
+    stride = jnp.int32(id_bound + 1)
+    ks = jax.lax.sort(cand[:, 0] * stride + cand[:, 1])
+    same = ks[1:] == ks[:-1]
+    keep = jnp.concatenate([jnp.ones(1, bool), ~same]) & (ks >= 0)
+    if d is not None:
+        c0 = ks // stride
+        c1 = ks - c0 * stride
+        dist = hamming_distance(sigs[jnp.maximum(c0, 0)],
+                                sigs[jnp.maximum(c1, 0)])
+        keep = keep & (dist <= d)
+    count = jnp.sum(keep.astype(jnp.int32))
+    # max valid key is bound^2 + bound - 2 < int32-max for bound <= 46340,
+    # so int32-max is a safe past-the-end sentinel
+    sentinel = jnp.iinfo(jnp.int32).max
+    ks2 = jax.lax.sort(jnp.where(keep, ks, sentinel))
+    M = ks2.shape[0]
+    if out_cap <= M:
+        ks2 = ks2[:out_cap]
+    else:
+        ks2 = jnp.concatenate(
+            [ks2, jnp.full(out_cap - M, sentinel, jnp.int32)])
+    o0 = ks2 // stride
+    pairs = jnp.stack(
+        [jnp.where(ks2 == sentinel, -1, o0),
+         jnp.where(ks2 == sentinel, -1, ks2 - o0 * stride)], axis=-1)
+    return pairs, count
 
 
 def compact_pairs(cols, keep, max_pairs: int):
@@ -170,12 +248,20 @@ def compact_pairs(cols, keep, max_pairs: int):
     cols: per-column (M,) arrays; rows where ``keep`` is False become -1.
     Returns (out (max_pairs, len(cols)) int32, count — the TRUE kept count,
     which exceeds max_pairs when the buffer truncated).
+
+    Compaction is a cumsum scatter, not a sort: kept row i lands at
+    ``sum(keep[:i])`` (order-preserving by construction — exactly what the
+    stable ``argsort(~keep)`` computed, at O(M) instead of a second
+    O(M log M) sort on the pack's critical path); dropped and overflowing
+    rows scatter into a discard slot past the buffer.
     """
     count = jnp.sum(keep.astype(jnp.int32))
-    order = jnp.argsort(~keep, stable=True)[:max_pairs]
-    ok = keep[order]
-    out = jnp.stack([jnp.where(ok, c[order], -1) for c in cols], axis=-1)
-    return out.astype(jnp.int32), count
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    dst = jnp.where(keep & (pos < max_pairs), pos, max_pairs)
+    rows = jnp.stack([c.astype(jnp.int32) for c in cols], axis=-1)
+    out = jnp.full((max_pairs + 1, rows.shape[-1]), -1, jnp.int32)
+    out = out.at[dst].set(rows, mode="drop")
+    return out[:max_pairs], count
 
 
 def band_join(q_sigs, r_sigs, *, f: int, d: int, max_pairs: int,

@@ -39,29 +39,19 @@ from ..core.pipeline import ScalLoPS
 from ..kernels import ops
 from ..obs import REGISTRY, Histogram, span, trace_sentinel
 from ..obs.trace import record as record_span
+from .spgemm import row_product_positions
 from .store import SignatureIndex
 
 BIG = 1 << 30  # sentinel distance for masked slots (int32-safe)
 
 
 # ---------------------------------------------------------------- primitives
-def _probe_csr_positions(qkeys, csr_keys, csr_offsets, *, cap: int, E: int):
-    """Searchsorted core of every bucket probe: qkeys (B,) uint32 ->
-    (entry positions (B, cap) int32 clipped into [0, E), ok (B, cap) —
-    position is a real member of the matched bucket, size (B,) int32 —
-    the *true* matched-bucket size, which may exceed cap). Shared by the
-    id-returning probe below and the sharded ring's sig-gathering probe
-    (repro.index.shard), so the probe semantics can never diverge."""
-    U = csr_keys.shape[0]
-    pos = jnp.searchsorted(csr_keys, qkeys)
-    pos_c = jnp.clip(pos, 0, U - 1)
-    match = (pos < U) & (csr_keys[pos_c] == qkeys)
-    start = csr_offsets[pos_c]
-    end = jnp.where(match, csr_offsets[pos_c + 1], start)
-    size = (end - start).astype(jnp.int32)
-    idx = start[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
-    ok = idx < end[:, None]
-    return jnp.clip(idx, 0, max(E - 1, 0)), ok, size
+# The searchsorted core of every bucket probe is the row slice of the
+# SpGEMM candidate product (repro.index.spgemm): a query's product row IS
+# the matched bucket's member window. Shared by the id-returning probe
+# below and the sharded ring's sig-gathering probe (repro.index.shard),
+# so probe and join semantics can never diverge.
+_probe_csr_positions = row_product_positions
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))

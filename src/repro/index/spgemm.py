@@ -1,0 +1,305 @@
+"""Candidate generation as ONE masked sparse-matrix product (SpGEMM).
+
+Every band's bucket CSR ``(keys, offsets, ids)`` is the bucket-major CSR of
+a sequence×bucket incidence matrix ``A`` (PASTIS: *Distributed Many-to-Many
+Protein Sequence Alignment using Sparse Matrices*): bucket ``u``'s member
+list is the nonzero pattern of column ``u``. Candidate discovery — which
+sequences share a bucket — is the Boolean-semiring product ``AᵀA``, and the
+three hand-rolled emission paths this module replaces are structural masks
+over that one product:
+
+* **self-join** — the strict upper triangle of ``AᵀA`` over one slab
+  (``mask="upper"``): entry ``p`` of a bucket pairs with every *later*
+  member of its own bucket, so each unordered pair is emitted exactly once;
+* **delta-join** — ``Aᵀ_delta · A_resident`` (``mask="cross"``): the
+  resident×resident block is masked off by never forming it, and the
+  delta×delta block is the upper mask over the delta slab;
+* **probe** — a row slice of ``Aᵀ_query · A_index``: each query contributes
+  one incidence column per band, so its product row is exactly the matched
+  bucket's member window (:func:`row_product_positions`).
+
+The structural join on bucket key (:func:`match_buckets`) and the
+cumsum-based flattening of per-entry partner windows into a fixed pair
+buffer (:func:`_window_pairs`) are each written ONCE here; the legacy
+``repro.allpairs.selfjoin`` emission loops and the serving probe both
+resolve to them, so the semantics cannot diverge.
+
+Buffer discipline is unchanged from ``core/join.py``: outputs are
+fixed-capacity ``(cap, 2)`` int32 buffers with -1 past the true count,
+capacities are sized host-side in int64 (the on-device int32 cumsum would
+wrap for a degenerate ~66k-member bucket) and quantized to powers of two
+(jit-cache stability), and nothing here can truncate when the caller sizes
+``cap >= true demand``.
+
+:func:`spgemm_join_self` is the fused fast path (the PR 10 throughput
+play): per-band products, cross-band dedup, the optional exact Hamming
+filter, and survivor compaction run in ONE jitted program — the pair
+buffer stays device-resident end to end, so the fused ungapped prefilter
+(PR 9, ``JoinPrefilter``) consumes SpGEMM output with zero host round-trip
+and the whole join costs a single host sync (the survivor count).
+:func:`spgemm_join_self_keys` sharpens it further for the band layout:
+duplicates and Hamming failures are masked at emission (a pair can only
+repeat ACROSS bands, and ``index.device_band_keys`` makes that checkable
+per slot), so the pack collapses to one ``lax.sort`` of packed int32 keys
+plus a clipped gather — no dedup sort, no scatter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.hamming import hamming_distance
+from ..core.join import pack_unique_pairs
+from ..obs import trace_sentinel
+
+
+# ------------------------------------------------------------ structural join
+def match_buckets(keys, csr_keys, csr_offsets):
+    """The structural key join under every mask: for each query key, the
+    member window ``[start, end)`` of the right CSR bucket with that key
+    (empty when no bucket matches).
+
+    ``keys`` may be per-query probe keys (B,) or per-entry keys of a left
+    slab (E,) — the math is identical, which is what makes the probe a row
+    slice of the same product as the cross join.
+    """
+    U = csr_keys.shape[0]
+    pos = jnp.searchsorted(csr_keys, keys).astype(jnp.int32)
+    pos_c = jnp.clip(pos, 0, max(U - 1, 0))
+    match = (pos < U) & (csr_keys[pos_c] == keys)
+    start = csr_offsets[pos_c]
+    end = jnp.where(match, csr_offsets[jnp.clip(pos_c + 1, 0, U)], start)
+    return start, end
+
+
+def entry_buckets(offsets, n_entries: int):
+    """Owning bucket of each CSR entry position: (E,) int32 (entries past
+    ``offsets[-1]`` — slab padding — resolve past the last bucket and own
+    empty windows under every mask)."""
+    pos = jnp.arange(n_entries, dtype=jnp.int32)
+    return jnp.searchsorted(offsets, pos, side="right").astype(jnp.int32) - 1
+
+
+def _window_pairs(left_ids, win_start, cnt, right_ids, *, cap: int):
+    """Flatten per-entry partner windows into a fixed (cap, 2) pair buffer.
+
+    Entry ``p`` owns ``cnt[p]`` pairs against ``right_ids[win_start[p] +
+    j]`` for ``j < cnt[p]``; a cumsum over ``cnt`` maps fixed buffer slots
+    back to (entry, partner). Rows past the true total are -1. The caller
+    guarantees ``cap >= sum(cnt)`` (host-side int64 sizing), so nothing
+    truncates. Pairs come out as (lo, hi) = (min, max) of the two ids —
+    the upper-triangular orientation every consumer dedups on.
+    """
+    E = left_ids.shape[0]
+    Er = right_ids.shape[0]
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(cnt)])
+    total = cum[-1]
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    p = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32) - 1
+    p = jnp.clip(p, 0, max(E - 1, 0))
+    partner = right_ids[jnp.clip(win_start[p] + (slots - cum[p]), 0,
+                                 max(Er - 1, 0))]
+    a = left_ids[p]
+    valid = slots < total
+    lo = jnp.minimum(a, partner)
+    hi = jnp.maximum(a, partner)
+    return jnp.stack([jnp.where(valid, lo, -1),
+                      jnp.where(valid, hi, -1)], axis=-1)
+
+
+def masked_pair_product(loffs, lids, *, cap: int, mask: str = "upper",
+                        lkeys=None, rkeys=None, roffs=None, rids=None):
+    """One band's masked semiring product as a flat pair buffer.
+
+    ``mask="upper"``: strict upper triangle of AᵀA over the (loffs, lids)
+    slab — entry ``p`` pairs with the later members of its own bucket
+    (``cnt[p] = bucket_end(p) - 1 - p``), so each unordered within-bucket
+    pair is emitted exactly once (the batch self-join).
+
+    ``mask="cross"``: ``Aᵀ_left · A_right`` — each left entry pairs with
+    every member of the right bucket sharing its key (the delta-join's
+    new-vs-resident block; never forming the resident×resident block IS
+    the mask). Requires ``lkeys/rkeys/roffs/rids``.
+
+    Slab padding is inert under both masks: padded entry slots sit past
+    ``loffs[-1]`` and own empty windows; padded right keys repeat the last
+    key with empty offsets and match nothing.
+    """
+    E = lids.shape[0]
+    if mask == "upper":
+        U = loffs.shape[0] - 1
+        pos = jnp.arange(E, dtype=jnp.int32)
+        b = entry_buckets(loffs, E)
+        end = loffs[jnp.clip(b + 1, 0, U)].astype(jnp.int32)
+        cnt = jnp.maximum(end - 1 - pos, 0)
+        return _window_pairs(lids, pos + 1, cnt, lids, cap=cap)
+    if mask != "cross":
+        raise ValueError(f"unknown SpGEMM mask {mask!r}")
+    Ul = lkeys.shape[0]
+    pos = jnp.arange(E, dtype=jnp.int32)
+    u = jnp.clip(entry_buckets(loffs, E), 0, max(Ul - 1, 0))
+    start, end = match_buckets(lkeys[u], rkeys, roffs)
+    real = pos < loffs[-1]          # past-the-end left slots own nothing
+    cnt = jnp.where(real, end - start, 0)
+    return _window_pairs(lids, start, cnt, rids, cap=cap)
+
+
+# ------------------------------------------------------- band-stacked slabs
+@functools.partial(jax.jit, static_argnames=("cap",))
+@trace_sentinel("spgemm_self")
+def spgemm_self_slab(offs_s, ids_s, *, cap: int):
+    """Upper-mask products of one shard's band-stacked slab: offsets
+    (nb, U+1), ids (nb, E) -> (nb, cap, 2) int32, -1 past each band's true
+    count. Dispatches through `kernels.ops.emit_upper_pairs`: the Pallas
+    kernel lowers natively on TPU, the vmapped jnp product is the fast
+    path elsewhere — bit-exact either way."""
+    from ..kernels.ops import emit_upper_pairs
+    return emit_upper_pairs(offs_s, ids_s, cap=cap)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+@trace_sentinel("spgemm_cross")
+def spgemm_cross_slab(dkeys_s, doffs_s, dids_s, rkeys_s, roffs_s, rids_s,
+                      *, cap: int):
+    """Cross-mask products of band-stacked delta × resident slabs ->
+    (nb, cap, 2) int32."""
+    return jax.vmap(lambda dk, do, di, rk, ro, ri: masked_pair_product(
+        do, di, cap=cap, mask="cross", lkeys=dk, rkeys=rk, roffs=ro,
+        rids=ri))(dkeys_s, doffs_s, dids_s, rkeys_s, roffs_s, rids_s)
+
+
+# ------------------------------------------------- dup-free keyed self-join
+def upper_keys_dupfree(loffs, lids, band, band_keys_nb, sigs, d,
+                       *, cap: int, stride: int):
+    """One band's upper-mask product emitted as PACKED SORT KEYS
+    ``lo*stride + hi`` (-1 on empty slots) with cross-band duplicates and
+    Hamming failures masked AT THE SOURCE.
+
+    Under the band layout a sequence occupies exactly one bucket per band,
+    so a pair can collide at most once *within* a band — duplicates only
+    arise across bands. ``band_keys_nb`` (N, nb) makes that structure
+    checkable per emitted slot: the pair is a duplicate iff its two rows
+    agree in any band *earlier* than this one (two gathers + a compare),
+    so each surviving key is globally unique by construction and the pack
+    needs no dedup sort at all. The optional exact Hamming filter rides
+    the same mask (the sigs rows are already gathered conceptually — one
+    more gather), which is the fully fused form of the semiring: multiply,
+    mask, and filter in one emission pass.
+    """
+    E = lids.shape[0]
+    U = loffs.shape[0] - 1
+    pos = jnp.arange(E, dtype=jnp.int32)
+    b = entry_buckets(loffs, E)
+    end = loffs[jnp.clip(b + 1, 0, U)].astype(jnp.int32)
+    cnt = jnp.maximum(end - 1 - pos, 0)
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(cnt)])
+    total = cum[-1]
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    p = jnp.clip(jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
+                 - 1, 0, max(E - 1, 0))
+    a = lids[p]
+    q = lids[jnp.clip(pos[p] + 1 + (slots - cum[p]), 0, max(E - 1, 0))]
+    valid = slots < total
+    ac = jnp.maximum(a, 0)
+    qc = jnp.maximum(q, 0)
+    eq = band_keys_nb[ac] == band_keys_nb[qc]                  # (cap, nb)
+    earlier = jnp.arange(band_keys_nb.shape[1],
+                         dtype=jnp.int32)[None, :] < band
+    keep = valid & ~jnp.any(eq & earlier, axis=-1)
+    if d is not None:
+        keep = keep & (hamming_distance(sigs[ac], sigs[qc]) <= d)
+    lo = jnp.minimum(a, q)
+    hi = jnp.maximum(a, q)
+    return jnp.where(keep, lo * jnp.int32(stride) + hi, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "out_cap", "d"))
+@trace_sentinel("spgemm_join_keys")
+def spgemm_join_self_keys(offs_f, ids_f, band_f, band_keys_nb, sigs,
+                          *, cap: int, out_cap: int, d: int | None):
+    """The dup-free fused batch self-join (band layout, ids packable into
+    one int32 key — ``sigs.shape[0] <= PACKED_KEY_MAX_ID``).
+
+    Because :func:`upper_keys_dupfree` masks cross-band duplicates and
+    Hamming failures at emission, the whole pack tail collapses to ONE
+    ``lax.sort`` of the key stream: the -1 empty/masked slots sort to the
+    front, survivors follow in canonical order, and compaction is a single
+    clipped gather (no dedup sort, no cumsum scatter). ``band_f`` (G,) is
+    each flattened slab row's band number (``tile(arange(nb), S)``).
+    Returns (pairs (out_cap, 2) int32, count) under the same buffer
+    contract as :func:`spgemm_join_self` — bit-identical output.
+    """
+    stride = sigs.shape[0] + 1          # static at trace
+    ks = jax.lax.sort(jax.vmap(
+        lambda o, i, bb: upper_keys_dupfree(
+            o, i, bb, band_keys_nb, sigs, d, cap=cap, stride=stride)
+    )(offs_f, ids_f, band_f).reshape(-1))
+    M = ks.shape[0]
+    n_inv = jnp.searchsorted(ks, 0, side="left").astype(jnp.int32)
+    count = M - n_inv
+    j = jnp.arange(out_cap, dtype=jnp.int32)
+    o = ks[jnp.clip(j + n_inv, 0, M - 1)]
+    ok = j < count
+    o0 = o // jnp.int32(stride)
+    pairs = jnp.stack([jnp.where(ok, o0, -1),
+                       jnp.where(ok, o - o0 * jnp.int32(stride), -1)],
+                      axis=-1)
+    return pairs, count
+
+
+# ------------------------------------------------------------ probe row slice
+def row_product_positions(qkeys, csr_keys, csr_offsets, *, cap: int, E: int):
+    """Row slice of the query×index product: qkeys (B,) uint32 -> (entry
+    positions (B, cap) int32 clipped into [0, E), ok (B, cap) — position
+    is a real member of the matched bucket, size (B,) int32 — the *true*
+    matched-bucket size, which may exceed cap). Shared by the id-returning
+    serving probe and the sharded ring's sig-gathering probe
+    (repro.index.shard), so the probe semantics can never diverge from the
+    join's structural key match."""
+    start, end = match_buckets(qkeys, csr_keys, csr_offsets)
+    size = (end - start).astype(jnp.int32)
+    idx = start[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    ok = idx < end[:, None]
+    return jnp.clip(idx, 0, max(E - 1, 0)), ok, size
+
+
+# --------------------------------------------------------------- fused join
+def _pack_body(cand, sigs, out_cap: int, d: int | None):
+    """Shared pack tail: cross-band/-shard dedup + optional exact Hamming
+    filter, compacted to ``out_cap`` rows. Returns (pairs, count); count
+    is the TRUE survivor count (may exceed out_cap — caller detects).
+    Every id < the corpus size (static at trace), so small corpora run the
+    packed single-key sort path of :func:`pack_unique_pairs`."""
+    return pack_unique_pairs(cand, out_cap=out_cap, id_bound=sigs.shape[0],
+                             sigs=sigs, d=d)
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap", "d"))
+@trace_sentinel("spgemm_pack")
+def spgemm_pack(cand, sigs, *, out_cap: int, d: int | None):
+    """Dedup + filter + compact an already-emitted device candidate buffer
+    (the ragged/SPMD merge tail — emission buffers differ in shape, so the
+    product ran in separate programs)."""
+    return _pack_body(cand, sigs, out_cap=out_cap, d=d)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "out_cap", "d"))
+@trace_sentinel("spgemm_join")
+def spgemm_join_self(offs_f, ids_f, sigs, *, cap: int, out_cap: int,
+                     d: int | None):
+    """The fused batch self-join: upper-mask AᵀA over every (shard, band)
+    slab + cross-band dedup + optional exact Hamming filter + survivor
+    compaction in ONE jitted program.
+
+    offs_f (G, U+1), ids_f (G, E) — the (S, nb) slab axes flattened to
+    G = S*nb. Returns (pairs (out_cap, 2) int32, count). The pair buffer
+    never leaves the device: the fused prefilter chunks it in place and
+    the only host sync the join pays is ``int(count)``. With
+    ``out_cap >= total emitted`` (host-side int64 sizing) the dedup can
+    never overflow, so the grow-and-retry loop of the legacy
+    orchestration disappears entirely.
+    """
+    cand = spgemm_self_slab(offs_f, ids_f, cap=cap).reshape(-1, 2)
+    return _pack_body(cand, sigs, out_cap=out_cap, d=d)

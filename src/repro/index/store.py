@@ -148,6 +148,7 @@ class SignatureIndex:
         self._partitions = {}       # n_shards -> BucketPartition (slabs)
         self._dev_sigs = None
         self._dev_valid = None
+        self._dev_band_keys = None
         self._pipeline = None
 
     # ------------------------------------------------------------ properties
@@ -190,6 +191,22 @@ class SignatureIndex:
     def device_valid(self) -> jnp.ndarray:
         self.device_sigs
         return self._dev_valid
+
+    @property
+    def device_band_keys(self) -> jnp.ndarray:
+        """(N, n_bands) uint32 — every sequence's bucket key in every band
+        (band layout only; a sequence occupies exactly ONE bucket per band).
+        This is the duplicate-structure oracle of the fused self-join: a
+        candidate pair is a cross-band duplicate iff the two rows agree in
+        an earlier band (``repro.index.spgemm.spgemm_join_self_keys``)."""
+        if self.layout != "band":
+            raise ValueError("band keys are only defined for layout='band'")
+        if (self._dev_band_keys is None
+                or self._dev_band_keys.shape[0] != self.size):
+            self._dev_band_keys = band_keys(
+                self.device_sigs, self.cfg.f, self.bands,
+                interleave=self.interleave, key_hash=self.key_hash)
+        return self._dev_band_keys
 
     # ------------------------------------------------------------ build
     @classmethod

@@ -130,6 +130,27 @@ def ungapped_wave_scores(qs, rs, *, x: int = 20, bb: int = 8,
     return out[:B, 0]
 
 
+def emit_upper_pairs(offs_s, ids_s, *, cap: int,
+                     prefer_ref: bool | None = None,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Band-stacked upper-mask SpGEMM candidate emission: offsets (G, U+1),
+    ids (G, E) -> (G, cap, 2) int32 pair buffers (-1 past each band's true
+    count) — the strict upper triangle of each band's AᵀA incidence
+    product. On TPU the Pallas kernel (`kernels/spgemm.py`) lowers
+    natively; elsewhere the jnp product of `repro.index.spgemm` is the
+    fast path (``prefer_ref`` default autodetects). Bit-exact across all
+    three paths (same pairs, same slot order)."""
+    if prefer_ref is None:
+        prefer_ref = not _on_tpu()
+    if prefer_ref:
+        from ..index.spgemm import masked_pair_product
+        return jax.vmap(
+            lambda o, i: masked_pair_product(o, i, cap=cap))(offs_s, ids_s)
+    from .spgemm import upper_pairs_kernel
+    return upper_pairs_kernel(offs_s, ids_s, cap=cap,
+                              interpret=resolve_interpret(interpret))
+
+
 def signatures_fused(rows, cb, H, *, T: int, bs: int = 256, bw: int = 512,
                      prefer_ref: bool = False) -> jnp.ndarray:
     """Fused SimHash accumulation V (S, f); pad shingle rows with zeros

@@ -58,6 +58,27 @@ def sw_affine_ref(q, r, gap_open: int = -11, gap_extend: int = -1):
     return best, H
 
 
+def spgemm_upper_ref(offsets, ids, cap: int):
+    """Host oracle for the upper-mask SpGEMM emission of ONE band: walk the
+    bucket CSR and enumerate each unordered within-bucket pair once, in
+    entry-major slot order — (cap, 2) int32, -1 past the true count.
+    Independent of the jnp/Pallas implementations (plain loops)."""
+    import numpy as np
+
+    offsets = np.asarray(offsets)
+    ids = np.asarray(ids)
+    out = np.full((cap, 2), -1, np.int32)
+    n = 0
+    for u in range(len(offsets) - 1):
+        members = ids[offsets[u]:offsets[u + 1]]
+        for a in range(len(members)):
+            for b in range(a + 1, len(members)):
+                i, j = int(members[a]), int(members[b])
+                out[n] = (min(i, j), max(i, j))
+                n += 1
+    return out
+
+
 def ungapped_xdrop_ref(q, r, x: int) -> int:
     """Host oracle for the ungapped X-drop diagonal scan: one encoded pair
     (unpadded int8 arrays), walking every diagonal cell-by-cell with the

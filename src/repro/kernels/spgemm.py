@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: batched masked-SpGEMM candidate emission.
+
+The device inner loop of ``repro.index.spgemm``: each band's bucket CSR is
+the sequence×bucket incidence matrix ``A``, and the strict upper triangle
+of the Boolean-semiring ``AᵀA`` — every unordered within-bucket pair,
+emitted once — is flattened into a fixed-capacity pair buffer. The grid is
+2-D over (band slab, slot block); each program holds one band's offsets
+``(1, U+1)`` and entry ids ``(1, E)`` in VMEM and materializes one block
+of output slots.
+
+Everything is expressed in the Pallas-friendly subset the SW kernels
+established (`kernels/sw.py`): ``broadcasted_iota`` instead of captured
+``arange`` constants, searchsorted as a comparison-sum reduction, gathers
+as one-hot compare-and-reduce, and the per-band prefix sum (slot -> owning
+entry) as a log-doubling shifted add (Hillis-Steele) — ``lax.cumsum`` does
+not lower inside Pallas TPU kernels. The per-program working set is the
+(U+1, E) bucket-membership comparison and an (E, SB) one-hot block, so
+slabs up to a few thousand entries per band fit VMEM comfortably (the
+pow2-padded slabs of `index/partition.py` are exactly that size at the
+benchmark corpora).
+
+``interpret`` defaults to autodetect (native lowering on TPU, interpret
+elsewhere — this CPU container). Output is bit-exact with the jnp
+reference ``repro.index.spgemm.masked_pair_product(mask="upper")`` and the
+host oracle `kernels.ref.spgemm_upper_ref`: same pairs in the same slot
+order ((lo, hi)-oriented, -1 past each band's true count).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sw import resolve_interpret
+
+DEFAULT_SLOT_BLOCK = 512
+
+
+def _upper_kernel(offs_ref, ids_ref, lo_ref, hi_ref, *, SB: int):
+    offs = offs_ref[...].astype(jnp.int32)        # (1, U1)
+    ids = ids_ref[...].astype(jnp.int32)          # (1, E)
+    U1 = offs.shape[1]
+    E = ids.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, E), 1)
+    # owning bucket of each entry: searchsorted(offs, pos, 'right') - 1,
+    # as a comparison-sum (slab padding repeats the last offset, so padded
+    # entry positions resolve past the last real bucket and own nothing)
+    le = (offs[0, :, None] <= pos[0, None, :]).astype(jnp.int32)  # (U1, E)
+    b = jnp.sum(le, axis=0, keepdims=True) - 1                    # (1, E)
+    # bucket end of each entry: offs[b + 1] via one-hot reduce (no gathers)
+    row = jax.lax.broadcasted_iota(jnp.int32, (U1, E), 0)
+    bp1 = jnp.clip(b + 1, 0, U1 - 1)
+    end = jnp.sum(jnp.where(row == bp1, offs[0, :, None], 0), axis=0,
+                  keepdims=True)                                  # (1, E)
+    # upper mask: entry p pairs with the LATER members of its own bucket
+    cnt = jnp.maximum(end - 1 - pos, 0)                           # (1, E)
+    # inclusive prefix sum over entries: log-doubling shifted add
+    inc = cnt
+    s = 1
+    while s < E:
+        shifted = jnp.concatenate(
+            [jnp.zeros((1, s), jnp.int32), inc[:, :-s]], axis=1)
+        inc = inc + shifted
+        s *= 2
+    total = jnp.max(inc)          # == inc[0, -1]: cumsum is non-decreasing
+    exc = inc - cnt               # exclusive prefix = first slot of entry p
+    # this block's global slot indices
+    sl = (jax.lax.broadcasted_iota(jnp.int32, (1, SB), 1)
+          + pl.program_id(1) * SB)                                # (1, SB)
+    # owning entry of each slot: searchsorted(inc, slot, 'right')
+    p = jnp.sum((inc[0, :, None] <= sl[0, None, :]).astype(jnp.int32),
+                axis=0, keepdims=True)                            # (1, SB)
+    p = jnp.clip(p, 0, E - 1)
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (E, SB), 0) == p)  # one-hot
+    a = jnp.sum(jnp.where(sel, ids[0, :, None], 0), axis=0,
+                keepdims=True)                                    # left id
+    exc_p = jnp.sum(jnp.where(sel, exc[0, :, None], 0), axis=0,
+                    keepdims=True)
+    # upper-mask window starts at the NEXT entry: win_start[p] = p + 1
+    j = jnp.clip(p + 1 + (sl - exc_p), 0, E - 1)
+    selj = (jax.lax.broadcasted_iota(jnp.int32, (E, SB), 0) == j)
+    partner = jnp.sum(jnp.where(selj, ids[0, :, None], 0), axis=0,
+                      keepdims=True)
+    valid = sl < total
+    lo_ref[...] = jnp.where(valid, jnp.minimum(a, partner), -1)
+    hi_ref[...] = jnp.where(valid, jnp.maximum(a, partner), -1)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "slot_block",
+                                             "interpret"))
+def upper_pairs_kernel(offs_s, ids_s, *, cap: int,
+                       slot_block: int = DEFAULT_SLOT_BLOCK,
+                       interpret: bool | None = None):
+    """Band-stacked upper-mask SpGEMM emission: offsets (G, U+1) int32,
+    ids (G, E) int32 -> (G, cap, 2) int32 pair buffers, -1 past each
+    band's true count. ``cap`` must be a power of two (the emission caps
+    of `allpairs/selfjoin.py` always are), so the slot grid divides
+    evenly. Bit-exact with the jnp reference (same slot order)."""
+    G, E = ids_s.shape
+    U1 = offs_s.shape[1]
+    SB = min(cap, slot_block)
+    assert cap % SB == 0, "cap must be a pow2 multiple of the slot block"
+    lo, hi = pl.pallas_call(
+        functools.partial(_upper_kernel, SB=SB),
+        grid=(G, cap // SB),
+        in_specs=[
+            pl.BlockSpec((1, U1), lambda g, s: (g, 0)),
+            pl.BlockSpec((1, E), lambda g, s: (g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, SB), lambda g, s: (g, s)),
+            pl.BlockSpec((1, SB), lambda g, s: (g, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, cap), jnp.int32),
+            jax.ShapeDtypeStruct((G, cap), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(offs_s.astype(jnp.int32), ids_s.astype(jnp.int32))
+    return jnp.stack([lo, hi], axis=-1)

@@ -111,10 +111,29 @@ def main(argv=None):
                          "and ingest them afterwards via the delta "
                          "self-join + persistent family forest (families "
                          "equal the from-scratch recluster, at delta cost)")
+    ap.add_argument("--join-impl", default="spgemm",
+                    choices=["spgemm", "legacy"],
+                    help="candidate-generation orchestration: the fused "
+                         "device-resident masked-SpGEMM path (default) or "
+                         "the pre-SpGEMM host-merge path (identical pair "
+                         "arrays; kept one PR for comparison)")
     ap.add_argument("--out", default=None,
                     help="write edges + labels npz here")
     ap.add_argument("--stats", action="store_true",
                     help="print per-band bucket occupancy before joining")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write this process's metrics registry here: "
+                         ".json = mergeable registry_state snapshot (what "
+                         "--metrics-merge consumes), anything else = "
+                         "Prometheus text exposition")
+    ap.add_argument("--metrics-merge", nargs="*", default=None,
+                    metavar="JSON",
+                    help="fold worker registry_state JSON snapshots "
+                         "(written by their --metrics-out *.json) into "
+                         "this process's registry before rendering "
+                         "--metrics-out — histogram buckets add exactly, "
+                         "so N workers aggregate into the true fleet "
+                         "histogram")
     args = ap.parse_args(argv)
 
     import os
@@ -172,7 +191,27 @@ def main(argv=None):
                         gap_mode=args.gap_mode,
                         gap_open=args.gap_open,
                         gap_extend=args.gap_extend),
-        fuse_prefilter=args.fuse_prefilter)
+        fuse_prefilter=args.fuse_prefilter,
+        join_impl=args.join_impl)
+
+    def _emit_metrics():
+        from ..obs import REGISTRY, merge_registry_state, registry_state
+        if args.metrics_merge:
+            import json
+            for path in args.metrics_merge:
+                with open(path) as fh:
+                    merge_registry_state(json.load(fh))
+            print(f"[metrics] merged {len(args.metrics_merge)} worker "
+                  f"snapshot(s)")
+        if args.metrics_out:
+            if str(args.metrics_out).endswith(".json"):
+                import json
+                with open(args.metrics_out, "w") as fh:
+                    json.dump(registry_state(REGISTRY), fh)
+            else:
+                with open(args.metrics_out, "w") as fh:
+                    fh.write(REGISTRY.prometheus())
+            print(f"[metrics] wrote {args.metrics_out}")
 
     # ---- incremental mode: batch the resident corpus, ingest the rest
     if args.incremental:
@@ -225,6 +264,7 @@ def main(argv=None):
                                                  ing.scored.pid])
             np.savez_compressed(args.out, **payload)
             print(f"[out]    wrote {args.out}")
+        _emit_metrics()
         return
 
     t0 = time.time()
@@ -263,6 +303,7 @@ def main(argv=None):
             payload["pid"] = sc.pid
         np.savez_compressed(args.out, **payload)
         print(f"[out]   wrote {args.out}")
+    _emit_metrics()
 
 
 if __name__ == "__main__":

@@ -176,6 +176,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--d", type=int, default=1)
+    ap.add_argument("--f", type=int, default=32,
+                    help="signature width in bits (multiple of 32; 64/128 "
+                         "need --scheme splitmix, and band keys wider than "
+                         "32 bits fold through the mix32 chain)")
     ap.add_argument("--scheme", default="splitmix",
                     choices=["splitmix", "java"],
                     help="signature hash bits; the serving default is "
@@ -288,7 +292,7 @@ def main(argv=None):
         n_refs=args.n_refs, n_homolog_queries=args.n_queries // 4,
         n_decoy_queries=args.n_queries - args.n_queries // 4,
         ref_len_mean=150, ref_len_std=30, sub_rates=(0.05, 0.15), seed=13))
-    cfg = LSHConfig(k=3, T=13, f=32, d=args.d, scheme=args.scheme,
+    cfg = LSHConfig(k=3, T=13, f=args.f, d=args.d, scheme=args.scheme,
                     max_pairs=1 << 15)
 
     # ---- build + persist (paid once per reference database)

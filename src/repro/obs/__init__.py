@@ -17,6 +17,10 @@ measures itself with:
   counts add exactly across replicas/shards — sample windows never
   could), declared-at-registration counters and gauges, one process-wide
   :data:`REGISTRY`, Prometheus text exposition + JSON snapshot.
+* ``aggregate`` — cross-process carrier for the registry: workers ship
+  :func:`registry_state` snapshots (pure JSON) and the parent folds them
+  in with :func:`merge_registry_state` — N worker histograms aggregate
+  into the exact fleet histogram (used by the allpairs CLI).
 * ``jit``      — the recompile sentinel: every instrumented jitted
   program body records a compile per (site, abstract signature); a key
   compiling twice is a silent-recompile bug (this repo shipped two), and
@@ -24,6 +28,7 @@ measures itself with:
   after warmup" into an asserted invariant in tests and the SLO
   benchmark.
 """
+from .aggregate import merge_registry_state, registry_state
 from .jit import SENTINEL, CompileSentinel, trace_sentinel
 from .registry import (REGISTRY, Counter, Gauge, Histogram, Registry,
                        default_bounds)
@@ -34,6 +39,6 @@ __all__ = [
     "TRACER", "Tracer", "span", "instant", "record", "new_trace_id",
     "trace_context", "current_trace", "enable", "disable",
     "REGISTRY", "Registry", "Histogram", "Counter", "Gauge",
-    "default_bounds",
+    "default_bounds", "registry_state", "merge_registry_state",
     "SENTINEL", "CompileSentinel", "trace_sentinel",
 ]

@@ -319,3 +319,70 @@ def test_fresh_mesh_does_not_recompile_ring(index, data):
     assert SENTINEL.total("ring") > before
     assert not {k: n for k, n in SENTINEL.recompiled().items()
                 if k[0] == "ring"}, "cap growth misread as a recompile"
+
+
+# ------------------------------------------- cross-process metric carrier
+def test_registry_state_json_roundtrip_merges_exactly():
+    """A worker snapshot survives json encode/decode and folds into a
+    fresh parent registry exactly: counters add, gauges take the incoming
+    value, histogram bucket counts add bucket-for-bucket."""
+    from repro.obs import merge_registry_state, registry_state
+
+    worker = Registry()
+    worker.counter("pairs_total", "emitted pairs",
+                   ("impl",)).labels(impl="spgemm").inc(7)
+    worker.gauge("resident_rows", "rows").labels().set(128.0)
+    h = worker.histogram("join_ms", "join latency", bounds=(1.0, 10.0))
+    for v in (0.5, 3.0, 30.0):
+        h.labels().observe(v)
+
+    snap = json.loads(json.dumps(registry_state(worker)))
+    parent = Registry()
+    # the parent already saw some of the same traffic
+    parent.counter("pairs_total", "emitted pairs",
+                   ("impl",)).labels(impl="spgemm").inc(3)
+    ph = parent.histogram("join_ms", "join latency", bounds=(1.0, 10.0))
+    ph.labels().observe(5.0)
+    merge_registry_state(snap, parent)
+    merge_registry_state(snap, parent)       # associative: fold twice
+
+    fams = parent.families()
+    assert fams["pairs_total"].labels(impl="spgemm").value == 3 + 2 * 7
+    assert fams["resident_rows"].labels().value == 128.0
+    merged = ph.labels().state()
+    # parent's one sample in (1,10] plus two copies of the worker's three
+    assert merged["counts"] == [2, 3, 2]
+    assert merged["count"] == 7
+
+
+def test_merge_declares_missing_families():
+    from repro.obs import merge_registry_state, registry_state
+
+    worker = Registry()
+    worker.histogram("only_in_worker_ms", "h", ("shard",),
+                     bounds=(2.0,)).labels(shard="3").observe(1.0)
+    parent = merge_registry_state(
+        registry_state(worker), Registry())
+    fam = parent.families()["only_in_worker_ms"]
+    assert fam.bounds == (2.0,)
+    assert fam.labels(shard="3").state()["count"] == 1
+
+
+def test_merge_identity_drift_raises():
+    """kind or labelname drift between worker and parent is a declaration
+    bug and must raise, not silently fork the metric."""
+    from repro.obs import merge_registry_state, registry_state
+
+    worker = Registry()
+    worker.counter("m", "as counter").labels().inc(1)
+    parent = Registry()
+    parent.gauge("m", "as gauge").labels().set(1.0)
+    with pytest.raises(ValueError, match="redeclaration"):
+        merge_registry_state(registry_state(worker), parent)
+
+    worker2 = Registry()
+    worker2.counter("n", "c", ("a",)).labels(a="x").inc(1)
+    parent2 = Registry()
+    parent2.counter("n", "c", ("b",)).labels(b="y").inc(1)
+    with pytest.raises(ValueError, match="redeclaration"):
+        merge_registry_state(registry_state(worker2), parent2)
